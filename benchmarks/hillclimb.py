@@ -1,0 +1,129 @@
+"""§Perf hillclimb driver: runs the baseline + named candidate changes for the
+three selected (arch x shape) pairs, printing before/after roofline terms.
+
+Each candidate encodes one hypothesis (see EXPERIMENTS.md §Perf iteration log).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair granite
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair kimi
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair mamba-decode
+"""
+import argparse
+import json
+import os
+
+# MUST precede any jax import (see dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+from repro.launch.dryrun import run_one  # noqa: E402
+
+PAIRS = {
+    "granite": ("granite-20b", "train_4k"),
+    "kimi": ("kimi-k2-1t-a32b", "train_4k"),
+    "mamba-decode": ("mamba2-780m", "long_500k"),
+}
+
+# (name, hypothesis, kwargs)
+CANDIDATES = {
+    "granite": [
+        ("baseline", "paper-faithful: FSDP + fp32 grads + K=8 microbatches", {}),
+        ("no-fsdp",
+         "20B params + adagrad fit un-sharded over data (3.5+7 GiB/chip): "
+         "dropping FSDP removes the per-layer fwd/bwd param all-gathers "
+         "(~2x layer params/step of AG traffic) at the cost of replicated "
+         "param memory. Predict: t_coll down 30-50%, t_mem down, temp up.",
+         {"fsdp": False}),
+        ("parallel-block",
+         "HLO inspection: 2 x f32[16,4096,6144] activation all-reduces per layer "
+         "(Megatron-TP) dominate t_coll; a PaLM-style parallel block sums the "
+         "attn and ffn partial results BEFORE the model-axis reduce => one AR "
+         "per layer. Predict: t_coll down ~40-50%. (Beyond-paper; PaLM showed "
+         "quality-neutral at scale.)",
+         {"parallel_block": True}),
+        ("parallel+no-fsdp",
+         "compose with no-fsdp if both help.",
+         {"parallel_block": True, "fsdp": False}),
+        ("microbatch-16",
+         "K=16 halves live activations (temp memory) at ~zero extra traffic; "
+         "helps the memory term's activation component.",
+         {"n_microbatches": 16}),
+        ("save-comm-remat",
+         "full remat REPLAYS the forward TP all-reduces inside backward "
+         "(HLO shows ~8 residual-stream ARs/layer). Saving the post-collective "
+         "activations (checkpoint_name + save_only_these_names) removes the "
+         "replayed ARs and the recomputed matmuls feeding them. Predict: "
+         "t_coll down ~25%, t_comp down ~20%, temp up.",
+         {"remat_policy": "save_comm"}),
+        ("parallel+save-comm",
+         "compose the two confirmed wins.",
+         {"parallel_block": True, "remat_policy": "save_comm"}),
+    ],
+    "kimi": [
+        ("baseline", "paper-faithful: FSDP (mandatory at 1T) + fp32 grads + cap 1.25", {}),
+        ("capacity-1.0",
+         "capacity factor 1.25 -> 1.0 cuts expert dispatch buffers and the "
+         "all-to-all payload by 20%. Predict: t_coll down ~5-10%, t_mem down.",
+         {"capacity_factor": 1.0}),
+        ("parallel-block",
+         "kimi is MoE-every-layer: the attn partial sum and the MoE combine "
+         "can share one model-axis reduce per layer (PaLM-style). Predict: "
+         "t_coll down 20-40% (the EP all-to-all part is untouched).",
+         {"parallel_block": True}),
+        ("parallel+cap1.0",
+         "compose.",
+         {"parallel_block": True, "capacity_factor": 1.0}),
+        ("save-comm-remat",
+         "same replayed-collective argument as granite, and for MoE the remat "
+         "replay repeats the expert all-to-all too. Predict: t_coll down "
+         ">=25%.",
+         {"remat_policy": "save_comm"}),
+        ("best-combo",
+         "parallel block + cap 1.0 + save-comm remat.",
+         {"parallel_block": True, "capacity_factor": 1.0,
+          "remat_policy": "save_comm"}),
+    ],
+    "mamba-decode": [
+        ("baseline", "B=1 decode, state sharded H/model, conv C/model", {}),
+        ("no-fsdp",
+         "at B=1 decode every param is read once per token; FSDP makes each "
+         "read an all-gather over data. Un-sharding params over data turns "
+         "param reads into local HBM streams. Predict: t_coll collapses "
+         "(params are only 1.5 GB), t_mem ~unchanged.",
+         {"fsdp": False}),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS), required=True)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    arch, shape = PAIRS[args.pair]
+    rows = []
+    for name, hypothesis, kw in CANDIDATES[args.pair]:
+        print(f"\n### {args.pair}/{name}")
+        print(f"    hypothesis: {hypothesis}")
+        row = run_one(arch, shape, tag_suffix=f" <{name}>", **kw)
+        row["candidate"] = name
+        row["hypothesis"] = hypothesis
+        rows.append(row)
+    base = next(r for r in rows if r["candidate"] == "baseline")
+    print(f"\n== {args.pair} summary (vs baseline) ==")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"  {r['candidate']:16s} FAILED: {r.get('error')}")
+            continue
+        dc = r["t_collective"] / max(base["t_collective"], 1e-12) - 1
+        dm = r["t_memory"] / max(base["t_memory"], 1e-12) - 1
+        print(f"  {r['candidate']:16s} t_comp={r['t_compute']*1e3:9.1f}ms "
+              f"t_mem={r['t_memory']*1e3:9.1f}ms ({dm:+.0%}) "
+              f"t_coll={r['t_collective']*1e3:9.1f}ms ({dc:+.0%}) "
+              f"temp={r['temp_bytes']/2**30:6.1f}GiB")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

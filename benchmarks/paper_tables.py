@@ -1,0 +1,155 @@
+"""One benchmark per paper table/figure. Each returns a list of CSV rows
+(name, us_per_call, derived) and prints a human-readable table.
+
+Quality numbers come from real (scaled-down) one-pass training via HogwildSim;
+throughput curves come from the calibrated fluid model (benchmarks/eps_model.py)
+— see EXPERIMENTS.md §Paper-validation for the mapping.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.eps_model import ClusterModel
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.core.elp import PAPER_TABLE1, elp
+from repro.core.runners import HogwildSim
+from repro.core.sync import SyncConfig
+
+Row = Tuple[str, float, str]
+
+CFG = dlrm_ctr.tiny()
+ITERS = 120
+TRAINERS, THREADS, BATCH = 4, 2, 64
+
+
+def _train(algo: str, mode: str, gap: int, *, trainers=TRAINERS, threads=THREADS,
+           seed=0, iters=ITERS, alpha=0.5):
+    sim = HogwildSim(CFG, SyncConfig(algo=algo, mode=mode, gap=gap, alpha=alpha),
+                     n_trainers=trainers, n_threads=threads, batch_size=BATCH,
+                     optimizer=optim.adagrad(0.02), seed=seed)
+    t0 = time.perf_counter()
+    out = sim.run(iters)
+    wall = time.perf_counter() - t0
+    ev = sim.evaluate(out["state"], n_batches=8, batch_size=2048)
+    return {
+        "train": float(np.mean(out["train_loss"][-10:])),
+        "eval": ev,
+        "gap": out["avg_sync_gap"],
+        "us_per_iter": wall / iters * 1e6,
+    }
+
+
+def bench_table1_elp() -> List[Row]:
+    """Table 1: ELP comparison."""
+    print("\n== Table 1: Example Level Parallelism ==")
+    rows = []
+    ours = elp(200, 24, 20)
+    for name, r in PAPER_TABLE1.items():
+        e = r["elp"] if r["elp"] is not None else f"{r['replicas']}xB"
+        print(f"  {name:14s} batch={str(r['batch']):6s} hog={r['hogwild']:3d} "
+              f"rep={r['replicas']:4d} ELP={e}")
+        rows.append((f"table1/{name}", 0.0, str(e)))
+    assert ours == 96000
+    return rows
+
+
+def bench_table2_quality() -> List[Row]:
+    """Table 2: S-EASGD vs FR-EASGD across sync gaps (scaled-down: 4 trainers)."""
+    print("\n== Table 2: S-EASGD vs FR-EASGD quality (one-pass CTR, 4 trainers) ==")
+    rows = []
+    s = _train("easgd", "shadow", gap=5)
+    print(f"  S-EASGD      (avg gap {s['gap']:5.2f}) train {s['train']:.5f} eval {s['eval']:.5f}")
+    rows.append(("table2/S-EASGD", s["us_per_iter"], f"eval={s['eval']:.5f}"))
+    for gap in (5, 10, 30, 100):
+        r = _train("easgd", "fixed_rate", gap=gap)
+        flag = " <- quality degrades with gap" if gap == 100 else ""
+        print(f"  FR-EASGD-{gap:<4d}(gap {gap:5d}) train {r['train']:.5f} eval {r['eval']:.5f}{flag}")
+        rows.append((f"table2/FR-EASGD-{gap}", r["us_per_iter"], f"eval={r['eval']:.5f}"))
+    return rows
+
+
+def bench_fig5_scaling() -> List[Row]:
+    """Fig 5: EPS scaling + sync-PS saturation (calibrated fluid model)."""
+    m = ClusterModel()
+    print(f"\n== Fig 5: EPS scaling (model: |w|={m.w_bytes/1e6:.2f}MB, "
+          f"EPS0={m.eps_0:.0f}, 25Gbit PSs) ==")
+    print("  trainers   S-EASGD   FR-5(2PS)  FR-30(2PS)  FR-5(4PS)   S-gap")
+    rows = []
+    for n in range(5, 21):
+        se = m.shadow_eps(n)
+        f5 = m.fr_eps(n, 5, 2)
+        f30 = m.fr_eps(n, 30, 2)
+        f5_4 = m.fr_eps(n, 5, 4)
+        gap = m.shadow_avg_sync_gap(n, 2)
+        print(f"  {n:8d} {se:9.0f} {f5:10.0f} {f30:11.0f} {f5_4:10.0f} {gap:7.2f}")
+        rows.append((f"fig5/n{n}", 0.0,
+                     f"S={se:.0f};FR5_2ps={f5:.0f};FR30={f30:.0f};FR5_4ps={f5_4:.0f};gap={gap:.2f}"))
+    # paper-claim checks
+    assert m.fr_eps(20, 5, 2) < 0.8 * m.shadow_eps(20), "FR-5/2PS must plateau"
+    assert m.fr_eps(20, 5, 4) > 0.95 * m.shadow_eps(20), "4 sync PSs must fix it"
+    assert m.fr_eps(20, 30, 2) > 0.95 * m.shadow_eps(20), "FR-30 stays linear"
+    gaps = [m.shadow_avg_sync_gap(n, 2) for n in range(15, 21)]
+    assert all(b > a for a, b in zip(gaps, gaps[1:])), "S gap grows with n"
+    print(f"  S-EASGD avg sync gaps 15..20 trainers: {[round(g,2) for g in gaps]} "
+          f"(paper: 8.60..12.48)")
+    return rows
+
+
+def bench_fig6_bmuf_ma() -> List[Row]:
+    """Fig 6: BMUF & MA, shadow vs fixed rate — quality + EPS."""
+    print("\n== Fig 6: BMUF/MA shadow vs fixed-rate (quality + modeled EPS) ==")
+    rows = []
+    for algo in ("bmuf", "ma"):
+        s = _train(algo, "shadow", gap=5)
+        f = _train(algo, "fixed_rate", gap=5)
+        print(f"  S-{algo.upper():4s} train {s['train']:.5f} eval {s['eval']:.5f}   "
+              f"FR-{algo.upper():4s} train {f['train']:.5f} eval {f['eval']:.5f}")
+        rows.append((f"fig6/S-{algo}", s["us_per_iter"], f"eval={s['eval']:.5f}"))
+        rows.append((f"fig6/FR-{algo}", f["us_per_iter"], f"eval={f['eval']:.5f}"))
+    m = ClusterModel()
+    for n in (5, 10, 15, 20):
+        print(f"  EPS n={n:2d}: shadow {m.allreduce_eps(n, 5, False):9.0f}  "
+              f"FR {m.allreduce_eps(n, 5, True):9.0f} (all linear-ish: no PS bottleneck)")
+    return rows
+
+
+def bench_fig7_shadow_algos() -> List[Row]:
+    """Fig 7: S-EASGD vs S-BMUF (2 alphas) vs S-MA."""
+    print("\n== Fig 7: ShadowSync algorithms compared ==")
+    rows = []
+    runs = [
+        ("S-EASGD", _train("easgd", "shadow", 5)),
+        ("S-BMUF(a=.5)", _train("bmuf", "shadow", 5, alpha=0.5)),
+        ("S-BMUF(a=.9)", _train("bmuf", "shadow", 5, alpha=0.9)),
+        ("S-MA", _train("ma", "shadow", 5)),
+    ]
+    for name, r in runs:
+        print(f"  {name:14s} train {r['train']:.5f} eval {r['eval']:.5f}")
+        rows.append((f"fig7/{name}", r["us_per_iter"], f"eval={r['eval']:.5f}"))
+    evals = [r["eval"] for _, r in runs]
+    spread = (max(evals) - min(evals)) / min(evals)
+    print(f"  spread {spread*100:.2f}% — decentralized variants are on par (paper §4.3)")
+    return rows
+
+
+def bench_fig8_hogwild() -> List[Row]:
+    """Fig 8: Hogwild worker-thread sweep — quality (real) + EPS (membw model)."""
+    print("\n== Fig 8: Hogwild threads sweep ==")
+    m = ClusterModel()
+    rows = []
+    for threads in (1, 2, 4, 8):
+        r = _train("easgd", "shadow", 5, threads=threads, iters=80)
+        eps = m.hogwild_eps(threads * 3)  # scale to paper-ish thread counts
+        print(f"  threads={threads:2d} train {r['train']:.5f} eval {r['eval']:.5f} "
+              f"(modeled EPS @ {threads*3} paper-threads: {eps:.0f})")
+        rows.append((f"fig8/threads{threads}", r["us_per_iter"], f"eval={r['eval']:.5f}"))
+    sat = [m.hogwild_eps(t) for t in (12, 24, 32, 64)]
+    print(f"  modeled EPS 12/24/32/64 threads: {[round(s) for s in sat]} "
+          f"(saturates ~24, paper Fig 8 right)")
+    assert sat[1] / sat[0] < 1.9  # sub-linear by 24 threads
+    assert sat[3] / sat[1] < 1.25  # nearly flat past 24
+    return rows

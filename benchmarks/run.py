@@ -1,0 +1,49 @@
+"""Benchmark driver: one function per paper table/figure + kernels + roofline.
+
+Prints human-readable tables followed by a ``name,us_per_call,derived`` CSV
+(one row per benchmark entry).
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig5 # one table/figure
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|roofline")
+    args = ap.parse_args()
+
+    from benchmarks.kernel_bench import bench_kernels
+    from benchmarks.paper_tables import (
+        bench_fig5_scaling, bench_fig6_bmuf_ma, bench_fig7_shadow_algos,
+        bench_fig8_hogwild, bench_table1_elp, bench_table2_quality,
+    )
+    from benchmarks.roofline_report import bench_roofline
+
+    benches = [
+        ("table1", bench_table1_elp),
+        ("table2", bench_table2_quality),
+        ("fig5", bench_fig5_scaling),
+        ("fig6", bench_fig6_bmuf_ma),
+        ("fig7", bench_fig7_shadow_algos),
+        ("fig8", bench_fig8_hogwild),
+        ("kernel", bench_kernels),
+        ("roofline", bench_roofline),
+    ]
+    rows = []
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        rows.extend(fn())
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

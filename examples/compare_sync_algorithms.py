@@ -1,0 +1,37 @@
+"""Compare S-EASGD / S-BMUF / S-MA and their fixed-rate counterparts
+(paper §4.2-4.3 scaled down).
+
+    PYTHONPATH=src python examples/compare_sync_algorithms.py
+"""
+import numpy as np
+
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.core.runners import HogwildSim
+from repro.core.sync import SyncConfig
+
+CFG = dlrm_ctr.tiny()
+
+
+def run(algo, mode, alpha=0.5):
+    sim = HogwildSim(CFG, SyncConfig(algo=algo, mode=mode, gap=5, alpha=alpha),
+                     n_trainers=4, n_threads=2, batch_size=128,
+                     optimizer=optim.adagrad(0.02))
+    out = sim.run(120)
+    ev = sim.evaluate(out["state"], n_batches=8, batch_size=2048)
+    return float(np.mean(out["train_loss"][-10:])), ev
+
+
+def main():
+    print(f"{'method':16s} {'train':>8s} {'eval':>8s}")
+    for algo in ("easgd", "bmuf", "ma"):
+        tr, ev = run(algo, "shadow")
+        print(f"S-{algo.upper():14s} {tr:8.5f} {ev:8.5f}")
+        tr, ev = run(algo, "fixed_rate")
+        print(f"FR-{algo.upper():13s} {tr:8.5f} {ev:8.5f}")
+    tr, ev = run("bmuf", "shadow", alpha=0.9)
+    print(f"S-BMUF(a=0.9)    {tr:8.5f} {ev:8.5f}  <- larger elastic step (paper Fig 7)")
+
+
+if __name__ == "__main__":
+    main()

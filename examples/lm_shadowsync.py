@@ -1,0 +1,63 @@
+"""ShadowSync beyond the paper: replica-parallel LM training with a background
+sync program — the multi-pod SPMD pattern, executed at laptop scale.
+
+    PYTHONPATH=src python examples/lm_shadowsync.py --arch mamba2-780m
+
+Two replicas of a reduced LM train on disjoint Markov streams with NO gradient
+exchange; a separate jitted sync_step (Shadow-MA) reconciles them periodically,
+exactly as the pod-level deployment would (see src/repro/core/spmd.py).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs.base import ARCH_IDS, get_config, reduced
+from repro.core import spmd
+from repro.core.sync import SyncConfig
+from repro.data import tokens as tok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="mamba2-780m")
+    ap.add_argument("--iters", type=int, default=80)
+    ap.add_argument("--gap", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    R = 2
+    opt = optim.adam(2e-3)
+    params = spmd.init_params(cfg, jax.random.PRNGKey(0))
+    stack = jax.tree.map(jnp.copy, spmd.stack_replicas(params, R))
+    opt_stack = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (R,) + x.shape).copy(), opt.init(params))
+
+    train_step = jax.jit(spmd.make_train_step(cfg, opt, "shadow"))
+    sync_step = jax.jit(spmd.make_sync_step(cfg, SyncConfig(algo="ma", alpha=0.5)))
+
+    trans = tok.make_transition(cfg.vocab_size, 0)
+    losses = []
+    for it in range(args.iters):
+        b = tok.gen_batch(trans, 0, it, 8 * R, 64)
+        if cfg.family == "audio":  # stubbed conv-frontend embeddings
+            b["frames"] = jax.random.normal(
+                jax.random.PRNGKey(it), (8 * R, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
+        if cfg.family == "vlm":  # stubbed vision-tower patch embeddings
+            b["prefix_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(it), (8 * R, cfg.frontend.n_tokens, cfg.d_model)) * 0.1
+        batch = jax.tree.map(lambda x: x.reshape(R, 8, *x.shape[1:]), b)
+        stack, opt_stack, loss = train_step(stack, opt_stack, batch)
+        losses.append(float(jnp.mean(loss)))
+        if (it + 1) % args.gap == 0:
+            stack = sync_step(stack)  # the background program
+        if (it + 1) % 20 == 0:
+            print(f"iter {it+1}: loss {np.mean(losses[-20:]):.4f}")
+    print(f"\n{args.arch}: {np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f} "
+          f"(2 replicas, Shadow-MA, zero cross-replica traffic in train_step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Batched serving example: prefill a batch of prompts, decode with the cache.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch jamba-1.5-large-398b
+
+Exercises the same prefill/decode_step pair the decode_32k and long_500k dry-run
+shapes lower (reduced config, CPU execution).
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

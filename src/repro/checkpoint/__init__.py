@@ -1,0 +1,71 @@
+"""Checkpointing: pytree save/restore on npz + a JSON manifest.
+
+Supports the full training state (dense replicas, embedding shards, optimizer
+state, sync-PS copy, step counter) so a ShadowSync run can resume mid-stream —
+the one-pass constraint makes resumability a hard requirement in production.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_key_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    # bf16 isn't npz-native: store raw bits + dtype tag.
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            arrays[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            arrays[k] = v
+            dtypes[k] = str(v.dtype)
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(
+            {"treedef": str(treedef), "dtypes": dtypes, "metadata": metadata or {}}, f
+        )
+
+
+def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pathk, leaf in flat_like:
+        key = _SEP.join(_key_str(p) for p in pathk)
+        arr = data[key]
+        if manifest["dtypes"].get(key) == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]

@@ -1,0 +1,41 @@
+"""EPS / ELP accounting (paper Definitions 1 and 2) + the Table 1 comparison."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+def elp(batch_size: int, n_hogwild: int, n_replicas: int) -> int:
+    """Example Level Parallelism: examples processed concurrently at any instant.
+    Two-level data parallelism: Hogwild within a trainer x replication across."""
+    return batch_size * n_hogwild * n_replicas
+
+
+@dataclass
+class EPSMeter:
+    """Examples Per Second over a sliding window."""
+
+    _t0: float = field(default_factory=time.perf_counter)
+    _examples: int = 0
+
+    def add(self, n: int) -> None:
+        self._examples += n
+
+    @property
+    def eps(self) -> float:
+        dt = time.perf_counter() - self._t0
+        return self._examples / dt if dt > 0 else 0.0
+
+
+# Paper Table 1 — ELP of prior art (batch, #hogwild, #replicas as reported).
+PAPER_TABLE1 = {
+    "ShadowSync": dict(batch=200, hogwild=24, replicas=20, elp=96000),
+    "EASGD": dict(batch=128, hogwild=1, replicas=16, elp=2048),
+    "DC-ASGD": dict(batch=128, hogwild=16, replicas=1, elp=2048),
+    "BMUF": dict(batch=None, hogwild=1, replicas=64, elp=None),  # 64 x B
+    "DownpourSGD": dict(batch=None, hogwild=1, replicas=200, elp=None),  # 200 x B
+    "ADPSGD": dict(batch=128, hogwild=1, replicas=128, elp=16384),
+    "LARS": dict(batch=32000, hogwild=1, replicas=1, elp=32000),
+    "SGP": dict(batch=256, hogwild=1, replicas=256, elp=65536),
+}

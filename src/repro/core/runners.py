@@ -1,0 +1,336 @@
+"""Training runners realizing the paper's system on laptop-scale hardware.
+
+Two runtimes:
+
+* ``HogwildSim`` — deterministic, jitted simulation of n trainers x m Hogwild
+  worker threads over the shared embedding tables + per-trainer dense replicas.
+  Hogwild staleness semantics: all m thread-grads of an iteration are computed
+  from the SAME replica snapshot, then applied sequentially through the optimizer
+  (lock-free interleave, quantized at iteration granularity). Background sync is
+  scheduled by shadow clocks with launch-snapshot/delayed-landing semantics.
+  This runtime produces the paper-quality experiments (Tables 2-3, Figs 6-7).
+
+* ``ThreadedShadowRunner`` — the faithful host-level realization: real Python
+  threads (jitted compute releases the GIL), a genuinely racing shared embedding
+  state, and a shadow thread that syncs continuously in the background at
+  whatever cadence it achieves — the paper's Algorithm 1 verbatim.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sync as S
+from repro.data import ctr
+from repro.embeddings import table as emb
+from repro.models import dlrm
+from repro.optim import Optimizer
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Deterministic simulator
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimState:
+    w_stack: Pytree  # (R, ...) dense replicas
+    opt_stack: Pytree
+    emb_state: Pytree  # shared {"table", "acc"}
+    w_ps: Optional[Pytree]  # EASGD central copy
+    bmuf: Optional[S.BMUFState]
+    step: int
+
+
+class HogwildSim:
+    def __init__(
+        self,
+        cfg,  # DLRMConfig
+        sync_cfg: S.SyncConfig,
+        *,
+        n_trainers: int,
+        n_threads: int,
+        batch_size: int,
+        optimizer: Optimizer,
+        emb_lr: float = 0.05,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.sync_cfg = sync_cfg
+        self.R, self.M, self.B = n_trainers, n_threads, batch_size
+        self.opt = optimizer
+        self.emb_lr = emb_lr
+        self.seed = seed
+        self.spec = emb.spec_from_config(cfg)
+        self.teacher = ctr.make_teacher(cfg, seed=seed + 777)
+        self._build()
+
+    # -- jitted pieces ------------------------------------------------------
+    def _build(self):
+        cfg, spec, opt, R, M = self.cfg, self.spec, self.opt, self.R, self.M
+
+        def one_trainer(w, opt_state, dense, pooled, labels):
+            # m thread-grads from the SAME snapshot, applied sequentially.
+            loss, g_w, g_pooled = jax.vmap(
+                dlrm.dense_loss_and_grads, in_axes=(None, 0, 0, 0)
+            )(w, dense, pooled, labels)
+
+            def apply_one(carry, g):
+                w, st = carry
+                w, st = opt.update(w, st, g)
+                return (w, st), None
+
+            (w, opt_state), _ = jax.lax.scan(apply_one, (w, opt_state), g_w)
+            return w, opt_state, jnp.mean(loss), g_pooled
+
+        def train_iter(state_w, state_opt, emb_state, batch):
+            # batch leaves: (R, M, B, ...)
+            idx = batch["sparse"]
+            pooled = emb.lookup(
+                emb_state, spec, idx.reshape(-1, cfg.n_sparse_features, cfg.multi_hot)
+            )
+            pooled = pooled.reshape(self.R, self.M, self.B, cfg.n_sparse_features, -1)
+            w2, opt2, loss, g_pooled = jax.vmap(one_trainer)(
+                state_w, state_opt, batch["dense"], pooled, batch["labels"]
+            )
+            # Hogwild on the single embedding copy: every trainer/thread applies
+            # immediately; one fused scatter implements the accumulate.
+            flat_idx = idx.reshape(-1, cfg.n_sparse_features, cfg.multi_hot)
+            flat_g = g_pooled.reshape(-1, cfg.n_sparse_features, cfg.embedding_dim)
+            emb2 = emb.sparse_adagrad_update(emb_state, spec, flat_idx, flat_g, self.emb_lr)
+            return w2, opt2, emb2, jnp.mean(loss)
+
+        self._train_iter = jax.jit(train_iter, donate_argnums=(0, 1, 2))
+        self._easgd = jax.jit(
+            lambda ws, ps, mask, snap: S.easgd_round(
+                ws, ps, self.sync_cfg.alpha, mask=mask, snapshot=snap
+            )
+        )
+        self._ma = jax.jit(
+            lambda ws, snap: S.ma_round(ws, self.sync_cfg.alpha, snapshot=snap)
+        )
+        sc = self.sync_cfg
+        self._bmuf = jax.jit(
+            lambda ws, st, snap: S.bmuf_round(
+                ws, st, sc.alpha, eta=sc.eta, block_momentum=sc.block_momentum,
+                nesterov=sc.nesterov, snapshot=snap,
+            )
+        )
+
+        def eval_batch(w, emb_state, batch):
+            pooled = emb.lookup(emb_state, spec, batch["sparse"])
+            logits = dlrm.forward(w, batch["dense"], pooled)
+            return dlrm.bce_loss(logits, batch["labels"])
+
+        self._eval = jax.jit(eval_batch)
+
+    # -- state --------------------------------------------------------------
+    def init_state(self) -> SimState:
+        key = jax.random.PRNGKey(self.seed)
+        kw, ke = jax.random.split(key)
+        w0 = dlrm.init_dense(self.cfg, kw)
+        w_stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (self.R,) + x.shape).copy(), w0)
+        opt0 = self.opt.init(w0)
+        opt_stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (self.R,) + x.shape).copy(), opt0)
+        emb_state = emb.init_tables(self.spec, ke)
+        w_ps = jax.tree.map(lambda x: x.copy(), w0) if self.sync_cfg.centralized() else None
+        bmuf = S.BMUFState.init(w0) if self.sync_cfg.algo == "bmuf" else None
+        return SimState(w_stack, opt_stack, emb_state, w_ps, bmuf, 0)
+
+    def make_batch(self, it: int) -> Dict[str, jnp.ndarray]:
+        """One-pass stream: (R*M) distinct shards per iteration."""
+        n = self.R * self.M
+        b = ctr.gen_batch(self.cfg, self.teacher, self.seed, it, self.B * n)
+        return jax.tree.map(
+            lambda x: x.reshape(self.R, self.M, self.B, *x.shape[1:]), b
+        )
+
+    # -- sync scheduling ----------------------------------------------------
+    def _shadow_schedule(self, t: int) -> np.ndarray:
+        """mask[i]: replica i's shadow clock fires at iteration t (staggered)."""
+        gap = self.sync_cfg.gap
+        offs = (np.arange(self.R) * gap) // max(self.R, 1)
+        return ((t + offs) % gap) == 0
+
+    def run(self, n_iters: int, *, log_every: int = 0,
+            on_iter: Optional[Callable[[int, float], None]] = None) -> Dict[str, Any]:
+        st = self.init_state()
+        sc = self.sync_cfg
+        losses: List[float] = []
+        sync_count = 0
+        pending: Optional[Tuple[int, Pytree, np.ndarray]] = None  # (land_t, snapshot, mask)
+        for t in range(n_iters):
+            batch = self.make_batch(t)
+            st.w_stack, st.opt_stack, st.emb_state, loss = self._train_iter(
+                st.w_stack, st.opt_stack, st.emb_state, batch
+            )
+            losses.append(float(loss))
+            if sc.mode == "fixed_rate":
+                if (t + 1) % sc.gap == 0:
+                    st = self._apply_sync(st, None, None)
+                    sync_count += self.R  # every replica synced this round
+            else:  # shadow
+                if pending is not None and t + 1 >= pending[0]:
+                    _, snap, mask = pending
+                    st = self._apply_sync(st, snap, mask)
+                    sync_count += int(mask.sum()) if mask is not None else self.R
+                    pending = None
+                if pending is None:
+                    mask = self._shadow_schedule(t + 1)
+                    if mask.any():
+                        snap = jax.tree.map(jnp.copy, st.w_stack)  # launch snapshot (real copy: train donates buffers)
+                        pending = (t + 1 + sc.delay, snap, mask)
+            st.step = t + 1
+            if on_iter:
+                on_iter(t, losses[-1])
+            if log_every and (t + 1) % log_every == 0:
+                print(f"iter {t+1}: loss {np.mean(losses[-log_every:]):.5f}")
+        return {
+            "state": st,
+            "train_loss": losses,
+            "sync_count": sync_count,
+            "avg_sync_gap": (n_iters * self.R / max(sync_count, 1)),
+        }
+
+    def _apply_sync(self, st: SimState, snap, mask) -> SimState:
+        sc = self.sync_cfg
+        mask_arr = jnp.asarray(mask) if mask is not None else jnp.ones((self.R,), bool)
+        if sc.algo == "easgd":
+            st.w_stack, st.w_ps = self._easgd(st.w_stack, st.w_ps, mask_arr, snap if snap is not None else st.w_stack)
+        elif sc.algo == "ma":
+            st.w_stack = self._ma(st.w_stack, snap)
+        elif sc.algo == "bmuf":
+            st.w_stack, st.bmuf = self._bmuf(st.w_stack, st.bmuf, snap)
+        else:
+            raise ValueError(sc.algo)
+        return st
+
+    def evaluate(self, st: SimState, n_batches: int = 20, batch_size: int = 4096,
+                 replica: int = 0) -> float:
+        """Paper protocol: evaluate the FIRST trainer's replica."""
+        w = S.tree_slice(st.w_stack, replica)
+        tot = 0.0
+        for i in range(n_batches):
+            b = ctr.gen_batch(self.cfg, self.teacher, self.seed + 10_000_000, i, batch_size)
+            tot += float(self._eval(w, st.emb_state, b))
+        return tot / n_batches
+
+
+# ---------------------------------------------------------------------------
+# Real-thread runner (faithful Algorithm 1)
+# ---------------------------------------------------------------------------
+
+class ThreadedShadowRunner:
+    """Trainer threads + a background shadow thread over genuinely shared state.
+
+    The embedding state is read-modify-written WITHOUT a lock (Hogwild: concurrent
+    trainers can lose updates — that is the point). Dense replicas are owned by
+    their trainer; the shadow thread interpolates them in the background."""
+
+    def __init__(self, cfg, sync_cfg: S.SyncConfig, *, n_trainers: int,
+                 batch_size: int, optimizer: Optimizer, emb_lr: float = 0.05,
+                 seed: int = 0, sync_sleep_s: float = 0.0):
+        self.cfg, self.sync_cfg = cfg, sync_cfg
+        self.R, self.B = n_trainers, batch_size
+        self.opt = optimizer
+        self.emb_lr = emb_lr
+        self.seed = seed
+        self.sync_sleep_s = sync_sleep_s
+        self.spec = emb.spec_from_config(cfg)
+        self.teacher = ctr.make_teacher(cfg, seed=seed + 777)
+        spec = self.spec
+
+        def train_one(w, opt_state, emb_table, batch):
+            pooled = emb.lookup({"table": emb_table}, spec, batch["sparse"])
+            loss, g_w, g_pooled = dlrm.dense_loss_and_grads(
+                w, batch["dense"], pooled, batch["labels"]
+            )
+            w, opt_state = optimizer.update(w, opt_state, g_w)
+            return w, opt_state, loss, g_pooled
+
+        self._train_one = jax.jit(train_one)
+        self._emb_update = jax.jit(
+            lambda st, idx, g: emb.sparse_adagrad_update(st, spec, idx, g, emb_lr)
+        )
+        self._easgd_pair = jax.jit(
+            lambda ps, w: S.easgd_pair_update(ps, w, sync_cfg.alpha)
+        )
+        self._ma = jax.jit(lambda stack: S.ma_round(stack, sync_cfg.alpha))
+
+    def run(self, iters_per_trainer: int) -> Dict[str, Any]:
+        key = jax.random.PRNGKey(self.seed)
+        kw, ke = jax.random.split(key)
+        w0 = dlrm.init_dense(self.cfg, kw)
+        self.w: List[Pytree] = [jax.tree.map(lambda x: x.copy(), w0) for _ in range(self.R)]
+        self.opt_states = [self.opt.init(w0) for _ in range(self.R)]
+        self.emb_state = emb.init_tables(self.spec, ke)
+        self.w_ps = jax.tree.map(lambda x: x.copy(), w0)
+        self.done = False
+        self.examples = 0
+        self.sync_count = 0
+        self.iter_count = [0] * self.R
+        losses: List[List[float]] = [[] for _ in range(self.R)]
+        ex_lock = threading.Lock()
+
+        def trainer(i: int):
+            for it in range(iters_per_trainer):
+                batch = ctr.gen_batch(
+                    self.cfg, self.teacher, self.seed + i, it, self.B
+                )
+                # Lock-free read of the shared embedding table (Hogwild).
+                w, opt_state, loss, g_pooled = self._train_one(
+                    self.w[i], self.opt_states[i], self.emb_state["table"], batch
+                )
+                self.w[i], self.opt_states[i] = w, opt_state
+                # Lock-free read-modify-write: concurrent writers can interleave.
+                self.emb_state = self._emb_update(self.emb_state, batch["sparse"], g_pooled)
+                losses[i].append(float(loss))
+                self.iter_count[i] = it + 1
+                with ex_lock:
+                    self.examples += self.B
+
+        def shadow():
+            algo = self.sync_cfg.algo
+            while not self.done:
+                if algo == "easgd":
+                    for i in range(self.R):
+                        ps, wi = self._easgd_pair(self.w_ps, self.w[i])
+                        self.w_ps, self.w[i] = ps, wi
+                        self.sync_count += 1
+                else:  # decentralized: ma (bmuf analogous, ma used here)
+                    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *self.w)
+                    new = self._ma(stack)
+                    for i in range(self.R):
+                        self.w[i] = S.tree_slice(new, i)
+                    self.sync_count += 1
+                if self.sync_sleep_s:
+                    time.sleep(self.sync_sleep_s)
+
+        threads = [threading.Thread(target=trainer, args=(i,)) for i in range(self.R)]
+        shadow_t = threading.Thread(target=shadow, daemon=True)
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        shadow_t.start()
+        for t in threads:
+            t.join()
+        self.done = True
+        shadow_t.join(timeout=5.0)
+        wall = time.perf_counter() - t0
+        total_iters = sum(self.iter_count)
+        return {
+            "eps": self.examples / wall,
+            "wall_s": wall,
+            "train_loss": [float(np.mean(l[-50:])) for l in losses],
+            "sync_count": self.sync_count,
+            "avg_sync_gap": total_iters / max(self.sync_count, 1),
+            "w": self.w,
+            "emb_state": self.emb_state,
+        }

@@ -1,0 +1,182 @@
+"""ShadowSync synchronization algorithms (paper Algorithms 1-4), as pure pytree math.
+
+Shadow and fixed-rate (FR) variants share these updates; what differs is *when* and
+*from which snapshot* they are applied (see core/runners.py and core/spmd.py):
+
+- Shadow: applied by a background shadow thread at its own cadence; the elastic
+  pull-back interpolates the sync result into the *current* (still-moving) replica
+  instead of overwriting it — the paper's key modification (§3.3).
+- FR: applied in the foreground every k iterations, blocking the worker.
+
+All functions are jit-friendly and operate on arbitrary pytrees. Replica stacks are
+pytrees whose leaves carry a leading replica dimension R.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def lerp(a: Pytree, b: Pytree, alpha: float) -> Pytree:
+    """(1-alpha) * a + alpha * b, elementwise over the pytree, in fp32."""
+    return jax.tree.map(
+        lambda x, y: ((1.0 - alpha) * x.astype(jnp.float32)
+                      + alpha * y.astype(jnp.float32)).astype(x.dtype),
+        a, b,
+    )
+
+
+def replica_mean(stack: Pytree) -> Pytree:
+    return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0), stack)
+
+
+def tree_slice(stack: Pytree, i) -> Pytree:
+    return jax.tree.map(lambda x: x[i], stack)
+
+
+def tree_set(stack: Pytree, i, val: Pytree) -> Pytree:
+    return jax.tree.map(lambda x, v: x.at[i].set(v.astype(x.dtype)), stack, val)
+
+
+# ---------------------------------------------------------------------------
+# EASGD (centralized; Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def easgd_pair_update(w_ps: Pytree, w_i: Pytree, alpha: float) -> Tuple[Pytree, Pytree]:
+    """One shadow-EASGD exchange between the sync-PS copy and replica i.
+
+    Asymmetric elastic interpolation: the PS moves toward the (snapshot of the)
+    replica, then the replica moves toward the *updated* PS. They are NOT equal
+    afterwards — both sides keep trusting their own copy (paper §3.3)."""
+    new_ps = lerp(w_ps, w_i, alpha)
+    new_wi = lerp(w_i, new_ps, alpha)
+    return new_ps, new_wi
+
+
+def easgd_round(w_stack: Pytree, w_ps: Pytree, alpha: float,
+                mask: Optional[jnp.ndarray] = None,
+                snapshot: Optional[Pytree] = None) -> Tuple[Pytree, Pytree]:
+    """Sequential EASGD over all replicas (shadow threads reach the PS one at a
+    time). ``mask[i]`` selects which replicas' shadow clocks fired this round.
+    ``snapshot`` (if given) is the replica stack at sync-launch time: the PS moves
+    toward the snapshot while the pull-back lands on the current replica —
+    training continued while the background exchange was in flight."""
+    R = jax.tree.leaves(w_stack)[0].shape[0]
+    mask = jnp.ones((R,), bool) if mask is None else mask
+    snap = snapshot if snapshot is not None else w_stack
+
+    def body(w_ps, args):
+        w_i, w_i_snap, m = args
+        new_ps = lerp(w_ps, w_i_snap, alpha)
+        new_wi = lerp(w_i, new_ps, alpha)
+        keep = lambda new, old: jnp.where(m, new, old)
+        return (jax.tree.map(keep, new_ps, w_ps),
+                jax.tree.map(keep, new_wi, w_i))
+
+    w_ps, new_stack = jax.lax.scan(body, w_ps, (w_stack, snap, mask))
+    return new_stack, w_ps
+
+
+# ---------------------------------------------------------------------------
+# Model Averaging (decentralized; Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def ma_round(w_stack: Pytree, alpha: float,
+             snapshot: Optional[Pytree] = None) -> Pytree:
+    """AllReduce-average the replicas, then elastically pull each replica toward
+    the average. ``snapshot`` (if given) is the replica stack at sync-launch time —
+    the average is computed from it while the pull-back lands on the current stack,
+    modeling training that continued during the background AllReduce."""
+    w_global = replica_mean(snapshot if snapshot is not None else w_stack)
+    bcast = jax.tree.map(
+        lambda g, x: jnp.broadcast_to(g.astype(x.dtype), x.shape), w_global, w_stack
+    )
+    return lerp(w_stack, bcast, alpha)
+
+
+# ---------------------------------------------------------------------------
+# BMUF (decentralized; Algorithm 4)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BMUFState:
+    w_global: Pytree
+    velocity: Pytree  # block momentum buffer
+
+    @staticmethod
+    def init(w0: Pytree) -> "BMUFState":
+        return BMUFState(
+            w_global=jax.tree.map(lambda x: x.astype(jnp.float32), w0),
+            velocity=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), w0),
+        )
+
+
+jax.tree_util.register_dataclass(
+    BMUFState, data_fields=["w_global", "velocity"], meta_fields=[]
+)
+
+
+def bmuf_round(
+    w_stack: Pytree,
+    state: BMUFState,
+    alpha: float,
+    *,
+    eta: float = 1.0,
+    block_momentum: float = 0.0,
+    nesterov: bool = False,
+    step_scale_n: bool = False,
+    snapshot: Optional[Pytree] = None,
+) -> Tuple[Pytree, BMUFState]:
+    """Algorithm 4. AllReduce-average -> descent direction vs w_global -> (optional
+    block-momentum / Nesterov) global step -> elastic pull-back into each replica.
+
+    ``step_scale_n=True`` reproduces the paper's line 9 literally
+    (w_global += n * w_desc). With the elastic pull-back (alpha < 1) the replicas
+    only partially adopt w_global, so the n-scaled step compounds and diverges at
+    small sync gaps — we default to the classic BMUF block step (scale 1) and
+    expose the paper's variant; see EXPERIMENTS.md §Paper-validation notes."""
+    R = jax.tree.leaves(w_stack)[0].shape[0]
+    w_copy = replica_mean(snapshot if snapshot is not None else w_stack)
+    desc = jax.tree.map(lambda c, g: c - g, w_copy, state.w_global)
+    scale = float(R) if step_scale_n else 1.0
+    vel = jax.tree.map(
+        lambda v, d: block_momentum * v + eta * scale * d, state.velocity, desc
+    )
+    w_global = jax.tree.map(lambda g, v: g + v, state.w_global, vel)
+    if nesterov:
+        look = jax.tree.map(lambda g, v: g + block_momentum * v, w_global, vel)
+    else:
+        look = w_global
+    bcast = jax.tree.map(
+        lambda g, x: jnp.broadcast_to(g.astype(x.dtype), x.shape), look, w_stack
+    )
+    return lerp(w_stack, bcast, alpha), BMUFState(w_global=w_global, velocity=vel)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm registry used by runners
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SyncConfig:
+    algo: str = "easgd"  # easgd | ma | bmuf
+    alpha: float = 0.5
+    # shadow mode: sync fires per replica every `gap` iterations with staggered
+    # offsets; FR mode: foreground, all replicas at t % gap == 0.
+    mode: str = "shadow"  # shadow | fixed_rate
+    gap: int = 5
+    # iterations of training that elapse while a background sync is in flight;
+    # the sync reads the snapshot taken at launch, lands `delay` iterations later.
+    delay: int = 1
+    eta: float = 1.0
+    block_momentum: float = 0.0
+    nesterov: bool = False
+
+    def centralized(self) -> bool:
+        return self.algo == "easgd"

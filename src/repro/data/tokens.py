@@ -1,0 +1,38 @@
+"""Synthetic LM token stream (order-1 Markov chain) for smoke tests and examples.
+
+A Markov teacher gives the LM something learnable (loss can drop below the uniform
+entropy), unlike i.i.d.-uniform tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+
+
+def make_transition(vocab: int, seed: int = 0, concentration: float = 0.3) -> jnp.ndarray:
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (vocab, vocab)) / concentration
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def gen_batch(trans: jnp.ndarray, seed: int, batch_idx: int, batch: int, seq: int) -> Dict[str, jnp.ndarray]:
+    vocab = trans.shape[0]
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), batch_idx)
+    k0, kc = jax.random.split(key)
+    t0 = jax.random.randint(k0, (batch,), 0, vocab)
+
+    def step(tok, k):
+        nxt = jax.random.categorical(k, jnp.log(trans[tok] + 1e-9))
+        return nxt, nxt
+
+    keys = jax.random.split(kc, seq - 1)
+    _, rest = jax.lax.scan(step, t0, keys)
+    tokens = jnp.concatenate([t0[None], rest], axis=0).T  # (B, S)
+    return {"tokens": tokens}
+
+
+def stream(trans: jnp.ndarray, seed: int, batch: int, seq: int, n_batches: int) -> Iterator[Dict[str, jnp.ndarray]]:
+    for i in range(n_batches):
+        yield gen_batch(trans, seed, i, batch, seq)

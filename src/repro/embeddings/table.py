@@ -1,0 +1,104 @@
+"""Sharded embedding tables with Hogwild-style sparse Adagrad updates.
+
+All categorical tables are packed into ONE (total_rows, dim) array so the whole
+collection shards over the ``model`` mesh axis with a single PartitionSpec — the
+TPU-native analogue of the paper's embedding parameter servers. Adagrad
+accumulators are co-located with the rows (paper §3.2). Updates are immediate
+scatter-adds per trainer with no cross-replica gradient averaging: the preserved
+Hogwild property (see DESIGN.md §2).
+
+The greedy LPT bin-packing planner mirrors the paper's load-balancing of tables
+across embedding PSs; the SPMD path uses uniform row sharding, while the
+host-thread runner uses the plan directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Params
+
+
+@dataclass(frozen=True)
+class TableSpec:
+    sizes: Tuple[int, ...]
+    dim: int
+    multi_hot: int
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.sizes)[:-1]]).astype(np.int32)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.sizes))
+
+
+def spec_from_config(cfg) -> TableSpec:
+    return TableSpec(tuple(cfg.table_sizes), cfg.embedding_dim, cfg.multi_hot)
+
+
+def init_tables(spec: TableSpec, key: jax.Array, dtype=jnp.float32) -> Params:
+    table = (
+        jax.random.normal(key, (spec.total_rows, spec.dim), jnp.float32)
+        * spec.dim ** -0.5
+    ).astype(dtype)
+    return {"table": table, "acc": jnp.zeros((spec.total_rows, spec.dim), jnp.float32)}
+
+
+def global_row_ids(spec: TableSpec, idx: jnp.ndarray) -> jnp.ndarray:
+    """idx: (B, F, m) per-feature local row ids -> global packed row ids."""
+    offsets = jnp.asarray(spec.offsets)
+    return idx + offsets[None, :, None]
+
+
+def lookup(state: Params, spec: TableSpec, idx: jnp.ndarray) -> jnp.ndarray:
+    """Sum-pooled lookup. idx: (B, F, m) -> (B, F, dim)."""
+    rows = global_row_ids(spec, idx)
+    vecs = jnp.take(state["table"], rows, axis=0)  # (B, F, m, d)
+    return jnp.sum(vecs, axis=2)
+
+
+def sparse_adagrad_update(
+    state: Params,
+    spec: TableSpec,
+    idx: jnp.ndarray,
+    g_pooled: jnp.ndarray,
+    lr: float,
+    eps: float = 1e-8,
+) -> Params:
+    """Row-sparse Adagrad. g_pooled: (B, F, d) — with sum pooling each of the
+    multi-hot rows receives the pooled gradient unchanged. Duplicate rows in a
+    batch scatter-add, which matches Hogwild's unsynchronized-accumulate."""
+    B, F, m = idx.shape
+    rows = global_row_ids(spec, idx).reshape(-1)  # (B*F*m,)
+    g = jnp.broadcast_to(g_pooled[:, :, None, :], (B, F, m, g_pooled.shape[-1]))
+    g = g.reshape(-1, g_pooled.shape[-1]).astype(jnp.float32)
+    acc = state["acc"].at[rows].add(g * g)
+    scale = lr * jax.lax.rsqrt(acc.at[rows].get() + eps)
+    table = state["table"].at[rows].add((-scale * g).astype(state["table"].dtype))
+    return {"table": table, "acc": acc}
+
+
+def bin_pack(costs: Sequence[float], n_bins: int) -> List[List[int]]:
+    """Greedy LPT (longest-processing-time) bin packing: the paper's strategy for
+    distributing embedding lookup cost across embedding PSs (§3.1)."""
+    order = np.argsort(costs)[::-1]
+    loads = np.zeros(n_bins)
+    bins: List[List[int]] = [[] for _ in range(n_bins)]
+    for i in order:
+        b = int(np.argmin(loads))
+        bins[b].append(int(i))
+        loads[b] += costs[i]
+    return bins
+
+
+def lookup_costs(spec: TableSpec, batch_size: int) -> np.ndarray:
+    """Profiled-cost model: lookups dominate; cost ~ batch * multi_hot * dim,
+    identical per feature here, plus a memory-residency term ~ rows."""
+    per_lookup = batch_size * spec.multi_hot * spec.dim
+    return np.array([per_lookup + 1e-3 * s * spec.dim for s in spec.sizes])

@@ -1,0 +1,51 @@
+"""Jitted wrapper: applies the fused EASGD kernel across a whole parameter pytree
+by flattening + concatenating leaves into one (n, 128) stream (padding the tail),
+so the shadow thread's exchange is a single kernel launch per sync."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.easgd_update.easgd_update import easgd_update
+from repro.kernels.easgd_update.ref import easgd_update_ref
+
+LANE = 128
+BLOCK = 1024
+
+
+def _flatten(tree: Any) -> Tuple[jnp.ndarray, Any, list, int]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    total = flat.size
+    padded = -(-total // (LANE * BLOCK)) * (LANE * BLOCK)
+    flat = jnp.pad(flat, (0, padded - total)).reshape(-1, LANE)
+    return flat, treedef, sizes, total
+
+
+def _unflatten(flat: jnp.ndarray, treedef, sizes, total, like: Any) -> Any:
+    vec = flat.reshape(-1)[:total]
+    leaves, out, off = jax.tree_util.tree_leaves(like), [], 0
+    for leaf, size in zip(leaves, sizes):
+        out.append(vec[off : off + size].reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "use_pallas", "interpret"))
+def easgd_pair_op(w_ps: Any, w_i: Any, alpha: float, *, use_pallas: bool = True,
+                  interpret: bool = True) -> Tuple[Any, Any]:
+    """Fused Algorithm-2 exchange over arbitrary pytrees."""
+    ps_flat, treedef, sizes, total = _flatten(w_ps)
+    wi_flat, _, _, _ = _flatten(w_i)
+    if use_pallas:
+        new_ps, new_wi = easgd_update(ps_flat, wi_flat, alpha, block=BLOCK, interpret=interpret)
+    else:
+        new_ps, new_wi = easgd_update_ref(ps_flat, wi_flat, alpha)
+    return (
+        _unflatten(new_ps, treedef, sizes, total, w_ps),
+        _unflatten(new_wi, treedef, sizes, total, w_i),
+    )

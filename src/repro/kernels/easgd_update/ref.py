@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused EASGD exchange (== core.sync.easgd_pair_update
+on a flat array)."""
+import jax.numpy as jnp
+
+
+def easgd_update_ref(w_ps: jnp.ndarray, w_i: jnp.ndarray, alpha: float):
+    ps = w_ps.astype(jnp.float32)
+    wi = w_i.astype(jnp.float32)
+    new_ps = (1 - alpha) * ps + alpha * wi
+    new_wi = (1 - alpha) * wi + alpha * new_ps
+    return new_ps.astype(w_ps.dtype), new_wi.astype(w_i.dtype)

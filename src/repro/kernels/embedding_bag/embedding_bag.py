@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused embedding-bag (gather + sum-pool).
+
+The paper's embedding PSs spend their cycles on exactly this op (lookup + partial
+pooling, §3.1). TPU adaptation: instead of CPU random-access RAM reads, we
+scalar-prefetch the row ids and let the BlockSpec index_map stream one table row
+per grid step HBM->VMEM, accumulating the pool in the revisited output block.
+Grid = (n_bags, multi_hot); the output block for bag ``n`` is revisited across the
+``m`` axis (sequential TPU grid), so accumulation needs no scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, table_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_ref[...].astype(out_ref.dtype)
+
+
+def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """table: (rows, d); idx: (n_bags, m) int32 global row ids -> (n_bags, d) sums.
+
+    d should be a multiple of 128 on real TPU; the ops.py wrapper pads."""
+    n_bags, m = idx.shape
+    _, d = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_bags, m),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda n, j, idx_ref: (idx_ref[n, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda n, j, idx_ref: (n, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), jnp.float32),
+        interpret=interpret,
+    )(idx, table)

@@ -1,0 +1,36 @@
+"""Jitted public wrapper for the embedding-bag kernel (pads d to the TPU lane
+width, flattens arbitrary bag batch dims, falls back to the oracle off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+LANE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def embedding_bag_op(
+    table: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """table: (rows, d); idx: (..., m) -> (..., d) sum-pooled lookups."""
+    if not use_pallas:
+        out = embedding_bag_ref(table, idx.reshape(-1, idx.shape[-1]))
+        return out.reshape(*idx.shape[:-1], table.shape[-1])
+    d = table.shape[-1]
+    pad = (-d) % LANE
+    if pad:
+        table = jnp.pad(table, ((0, 0), (0, pad)))
+    flat_idx = idx.reshape(-1, idx.shape[-1]).astype(jnp.int32)
+    out = embedding_bag(table, flat_idx, interpret=interpret)
+    if pad:
+        out = out[:, :d]
+    return out.reshape(*idx.shape[:-1], d)

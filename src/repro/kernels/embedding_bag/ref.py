@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """table: (rows, d); idx: (n_bags, m) -> (n_bags, d) sum-pooled, fp32."""
+    return jnp.sum(jnp.take(table, idx, axis=0).astype(jnp.float32), axis=1)

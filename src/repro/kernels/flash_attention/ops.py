@@ -1,0 +1,48 @@
+"""Jitted wrapper: (B, S, H, d) GQA attention on top of the flash kernel.
+
+Repeats KV heads for GQA, folds (B, H) into the kernel grid axis, pads S up to the
+block size, and falls back to the oracle when use_pallas=False (the pure-JAX path
+used by the dry-run, since Pallas-TPU can't lower on the CPU backend)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas", "interpret", "block"))
+def gqa_attention_op(
+    q: jnp.ndarray,  # (B, S, H, d)
+    k: jnp.ndarray,  # (B, S, Hkv, d)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    use_pallas: bool = True,
+    interpret: bool = True,
+    block: int = 128,
+) -> jnp.ndarray:
+    B, S, H, d = q.shape
+    hkv = k.shape[2]
+    n_rep = H // hkv
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    if not use_pallas:
+        out = attention_ref(qf, kf, vf, causal=causal)
+    else:
+        pad = (-S) % block
+        if pad:
+            qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+        out = flash_attention(
+            qf, kf, vf, causal=causal, block_q=block, block_k=block, interpret=interpret
+        )[:, :S]
+    return out.reshape(B, H, S, d).transpose(0, 2, 1, 3)

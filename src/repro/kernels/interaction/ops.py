@@ -1,0 +1,23 @@
+"""Jitted wrapper: pads the batch to the tile size; oracle fallback off-TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.interaction.interaction import interaction
+from repro.kernels.interaction.ref import interaction_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "batch_tile"))
+def interaction_op(z: jnp.ndarray, *, use_pallas: bool = True,
+                   interpret: bool = True, batch_tile: int = 128) -> jnp.ndarray:
+    if not use_pallas:
+        return interaction_ref(z)
+    B = z.shape[0]
+    pad = (-B) % batch_tile if B >= batch_tile else 0
+    if pad:
+        z = jnp.pad(z, ((0, pad), (0, 0), (0, 0)))
+    out = interaction(z, batch_tile=batch_tile, interpret=interpret)
+    return out[:B]

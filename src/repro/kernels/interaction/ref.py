@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused interaction kernel (== models.dlrm.interact's
+dot part)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def interaction_ref(z: jnp.ndarray) -> jnp.ndarray:
+    """z: (B, F, d) -> (B, F*(F-1)/2) upper-triangle pairwise dots."""
+    gram = jnp.einsum("bfd,bgd->bfg", z.astype(jnp.float32), z.astype(jnp.float32))
+    iu, ju = np.triu_indices(z.shape[1], k=1)
+    return gram[:, iu, ju]

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x input-shape) combination on
+the production meshes, print memory/cost analysis, and emit roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-20b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun.json
+    python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape train_4k --multi-pod --mode shadow
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.sharding import ctx as shctx
+from repro.core import spmd
+from repro.core.sync import SyncConfig
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro import optim
+from repro.roofline import analysis as RA
+
+# Archs whose serve_step at 500k context is sub-quadratic (DESIGN.md §4).
+LONG_CONTEXT_OK = {"mamba2-780m", "jamba-1.5-large-398b", "phi3-medium-14b"}
+
+
+def resolve_config(arch: str, shape_name: str):
+    if arch == "phi3-medium-14b" and shape_name == "long_500k":
+        from repro.configs.phi3_medium_14b import CONFIG_SWA
+
+        return CONFIG_SWA  # sliding-window variant (DESIGN.md §4)
+    return get_config(arch)
+
+
+def should_skip(arch: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return "full-attention arch: 500k dense KV decode is quadratic-cost (skip per DESIGN.md)"
+    return None
+
+
+def build(cfg, shape_name: str, mesh, *, mode: str = "syncdp",
+          optimizer: str = "adagrad", n_replicas: int = 2,
+          n_microbatches: int = 8, shape_override=None,
+          fsdp: bool = True, grad_dtype: str = "float32",
+          remat_policy: str = "full"):
+    """Returns (step_fn, args_sds tuple, donate).
+
+    ``fsdp`` / ``grad_dtype`` / ``n_microbatches`` are the §Perf hillclimb knobs
+    (see EXPERIMENTS.md §Perf iteration log)."""
+    shape = shape_override or INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        opt = optim.make(optimizer, 1e-3)
+        params = SP.param_structs(cfg, mesh, mode=mode, n_replicas=n_replicas, fsdp=fsdp)
+        opt_state = SP.opt_structs(
+            opt, params, mesh, fsdp=fsdp,
+            replica_axis="pod" if mode == "shadow" else None)
+        batch = SP.train_batch_structs(cfg, shape, mesh, mode=mode, n_replicas=n_replicas)
+        step = spmd.make_train_step(cfg, opt, mode, n_microbatches=n_microbatches,
+                                    grad_dtype=grad_dtype, remat_policy=remat_policy)
+        return step, (params, opt_state, batch), (0, 1)
+    if shape.kind == "prefill":
+        params = SP.param_structs(cfg, mesh, mode="syncdp", fsdp=fsdp)
+        batch = SP.train_batch_structs(cfg, shape, mesh, mode="syncdp")
+        step = spmd.make_prefill_step(cfg, shape.seq_len)
+        return step, (params, batch), ()
+    # decode
+    params = SP.param_structs(cfg, mesh, mode="syncdp", fsdp=fsdp)
+    cache = SP.cache_structs(cfg, shape.global_batch, shape.seq_len, mesh)
+    db = SP.decode_batch_structs(cfg, shape, mesh)
+    step = spmd.make_decode_step(cfg)
+    return step, (params, cache, db["token"], db["pos"]), (1,)
+
+
+def build_sync_step(arch: str, mesh, *, algo: str = "easgd", n_replicas: int = 2):
+    """The background program (ShadowSync's own artifact)."""
+    cfg = get_config(arch)
+    params = SP.param_structs(cfg, mesh, mode="shadow", n_replicas=n_replicas)
+    sync = spmd.make_sync_step(cfg, SyncConfig(algo=algo))
+    if algo == "easgd":
+        ps = SP.param_structs(cfg, mesh, mode="syncdp")
+        return sync, (params, ps), (0, 1)
+    return sync, (params,), (0,)
+
+
+def _depth_variant(cfg, n_units: int):
+    """Same arch with n_units unit-repeats of depth (for cost extrapolation)."""
+    import dataclasses
+
+    unit = len(cfg.layer_pattern)
+    upd = {"n_layers": unit * n_units}
+    if cfg.encoder is not None:
+        upd["encoder"] = dataclasses.replace(cfg.encoder, n_layers=n_units)
+    return dataclasses.replace(cfg, **upd)
+
+
+def _batch_axes(mesh, mode):
+    if mode != "shadow" and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def _compile_cost(cfg, shape_name, mesh, *, mode, optimizer, shape_override=None,
+                  fsdp=True, grad_dtype="float32", remat_policy="full"):
+    from repro.models.layers import set_unroll_scans
+
+    step, args, donate = build(cfg, shape_name, mesh, mode=mode, optimizer=optimizer,
+                               n_microbatches=1, shape_override=shape_override,
+                               fsdp=fsdp, grad_dtype=grad_dtype,
+                               remat_policy=remat_policy)
+    set_unroll_scans(True)
+    try:
+        with shctx.activation_mesh(mesh, batch_axes=_batch_axes(mesh, mode)):
+            compiled = jax.jit(step, donate_argnums=donate).lower(*args).compile()
+    finally:
+        set_unroll_scans(False)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    colls = RA.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0)),
+            float(sum(colls.values())))
+
+
+def extrapolate_cost(cfg, shape_name, mesh, *, mode, optimizer, fsdp=True,
+                     grad_dtype="float32", remat_policy="full"):
+    """XLA's HloCostAnalysis counts a while-loop (lax.scan) body ONCE, ignoring
+    trip count; roofline costs therefore come from small fully-UNROLLED probe
+    compiles, fit and extrapolated (EXPERIMENTS.md §Dry-run methodology):
+
+    - depth: cost = a + b * n_units (probes at 1- and 2-unit depth);
+    - prefill_32k additionally extrapolates over sequence with a bilinear model
+      per depth coefficient, cost_S = u*S + v*S^2, fit from S=4k and S=8k probes
+      (unrolling 128 SSD chunks / 32 attention chunks at 32k directly is
+      prohibitively slow to compile). Attention is the only quadratic-in-S term;
+      everything else is linear, so the 2-point quadratic fit is exact for the
+      model family."""
+    import dataclasses as _dc
+
+    unit = len(cfg.layer_pattern)
+    repeats = cfg.n_layers // unit
+    shape = INPUT_SHAPES[shape_name]
+
+    def cost(n_units, seq=None):
+        c = _depth_variant(cfg, n_units)
+        ov = _dc.replace(shape, seq_len=seq) if seq else None
+        return _compile_cost(c, shape_name, mesh, mode=mode, optimizer=optimizer,
+                             shape_override=ov, fsdp=fsdp, grad_dtype=grad_dtype,
+                             remat_policy=remat_policy)
+
+    if shape.kind == "prefill" and shape.seq_len > 8192:
+        s1, s2, s_full = 4096, 8192, shape.seq_len
+        c11, c12 = cost(1, s1), cost(1, s2)
+        if repeats == 1:
+            c21, c22 = c11, c12
+        else:
+            c21, c22 = cost(2, s1), cost(2, s2)
+
+        def fit(f1, f2, s1, s2, s):
+            v = (f2 / s2 - f1 / s1) / (s2 - s1)
+            u = f1 / s1 - v * s1
+            return u * s + v * s * s
+
+        out = []
+        for i in range(3):  # flops, bytes, collective bytes
+            layer1, layer2 = c21[i] - c11[i], c22[i] - c12[i]
+            base1, base2 = c11[i] - layer1, c12[i] - layer2
+            layer_full = fit(layer1, layer2, s1, s2, s_full) if repeats > 1 else 0.0
+            base_full = fit(base1, base2, s1, s2, s_full)
+            total = base_full + repeats * (layer_full if repeats > 1
+                                           else fit(c11[i], c12[i], s1, s2, s_full) - base_full)
+            out.append(max(total, 0.0))
+        return tuple(out)
+
+    if repeats == 1:
+        return cost(1)
+    c1, c2 = cost(1), cost(2)
+    # clamp: a slightly negative fitted slope (constant-dominated programs,
+    # e.g. tiny-model decode) must not extrapolate below zero
+    return tuple(max(f1 + (f2 - f1) * (repeats - 1), 0.0) for f1, f2 in zip(c1, c2))
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            mode: str = "syncdp", optimizer: str = "adagrad",
+            verbose: bool = True, sync_algo: Optional[str] = None,
+            extrapolate: bool = True, fsdp: bool = True,
+            grad_dtype: str = "float32", n_microbatches: int = 8,
+            capacity_factor: Optional[float] = None,
+            parallel_block: bool = False, remat_policy: str = "full",
+            tag_suffix: str = "") -> Dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    skip = should_skip(arch, shape_name)
+    tag = f"{arch} x {shape_name} x {mesh_name} [{sync_algo or mode}]{tag_suffix}"
+    if skip:
+        if verbose:
+            print(f"SKIP  {tag}: {skip}")
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "mode": mode, "status": "skipped", "reason": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        cfg = resolve_config(arch, shape_name)
+        import dataclasses as _dc
+
+        if capacity_factor is not None and cfg.moe is not None:
+            cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, capacity_factor=capacity_factor))
+        if parallel_block:
+            cfg = _dc.replace(cfg, parallel_block=True)
+        if sync_algo:
+            step, args, donate = build_sync_step(arch, mesh, algo=sync_algo)
+        else:
+            step, args, donate = build(cfg, shape_name, mesh, mode=mode,
+                                       optimizer=optimizer, fsdp=fsdp,
+                                       grad_dtype=grad_dtype,
+                                       n_microbatches=n_microbatches,
+                                       remat_policy=remat_policy)
+        with shctx.activation_mesh(mesh, batch_axes=_batch_axes(mesh, mode)):
+            lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+        mf = RA.model_flops_estimate(cfg, INPUT_SHAPES[shape_name]) if not sync_algo else 0.0
+        r = RA.analyze(compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+                       mode=(f"sync:{sync_algo}" if sync_algo else mode),
+                       chips=chips, model_flops=mf)
+        raw = (r.flops_per_chip, r.bytes_per_chip, r.collective_bytes_per_chip)
+        # Roofline terms are reported for the single-pod mesh only (§Roofline);
+        # the multi-pod pass proves lowering + records memory.
+        if multi_pod:
+            extrapolate = False
+        if extrapolate and not sync_algo:
+            fl, by, co = extrapolate_cost(cfg, shape_name, mesh, mode=mode,
+                                          optimizer=optimizer, fsdp=fsdp,
+                                          grad_dtype=grad_dtype,
+                                          remat_policy=remat_policy)
+            r.flops_per_chip, r.bytes_per_chip, r.collective_bytes_per_chip = fl, by, co
+            r.notes = (r.notes + " cost depth-extrapolated (scan trip-count fix); "
+                       f"raw flops/chip={raw[0]:.3e}").strip()
+        row = r.row()
+        row.update(status="ok", compile_s=round(time.time() - t0, 1))
+        if verbose:
+            mem = compiled.memory_analysis()
+            print(f"OK    {tag}  compile={row['compile_s']}s")
+            print(f"      mem/device: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+                  f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+                  f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+                  f"alias={mem.alias_size_in_bytes/2**30:.2f}GiB")
+            print(f"      roofline: t_comp={r.t_compute*1e3:.2f}ms "
+                  f"t_mem={r.t_memory*1e3:.2f}ms t_coll={r.t_collective*1e3:.2f}ms "
+                  f"-> {r.bottleneck}-bound; useful_flops={r.useful_flops_ratio:.2f}")
+            print(f"      collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in r.collectives.items() if v} }")
+        return row
+    except Exception as e:
+        if verbose:
+            print(f"FAIL  {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
+                "status": "fail", "error": f"{type(e).__name__}: {e}"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mode", choices=["syncdp", "shadow"], default="syncdp")
+    ap.add_argument("--sync-algo", choices=["easgd", "ma", "bmuf"], default=None,
+                    help="lower the background sync_step instead of train/serve")
+    ap.add_argument("--optimizer", default="adagrad")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    # §Perf hillclimb knobs (see benchmarks/hillclimb.py, EXPERIMENTS.md §Perf)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--grad-dtype", choices=["float32", "bfloat16"], default="float32")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--parallel-block", action="store_true")
+    ap.add_argument("--remat-policy", choices=["full", "save_comm"], default="full")
+    args = ap.parse_args()
+
+    rows = []
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rows.append(run_one(
+                    arch, shape, multi_pod=mp, mode=args.mode,
+                    optimizer=args.optimizer, sync_algo=args.sync_algo,
+                    fsdp=not args.no_fsdp, grad_dtype=args.grad_dtype,
+                    n_microbatches=args.microbatches,
+                    capacity_factor=args.capacity_factor,
+                    parallel_block=args.parallel_block,
+                    remat_policy=args.remat_policy))
+                if args.out:  # incremental: survive interruption
+                    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                    with open(args.out, "w") as f:
+                        json.dump(rows, f, indent=1, default=str)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"wrote {len(rows)} rows to {args.out}")
+    n_ok = sum(r.get("status") == "ok" for r in rows)
+    n_skip = sum(r.get("status") == "skipped" for r in rows)
+    n_fail = sum(r.get("status") == "fail" for r in rows)
+    print(f"\nSummary: {n_ok} ok, {n_skip} skipped, {n_fail} failed / {len(rows)}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

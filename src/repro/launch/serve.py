@@ -1,0 +1,75 @@
+"""Batched serving launcher: prefill a batch of prompts, then decode greedily.
+
+Runs a reduced config end-to-end on CPU (the full configs are exercised via the
+dry-run only). Demonstrates the prefill -> decode_step cache handoff that the
+decode_32k / long_500k dry-run shapes lower.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --batch 4 \
+      --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config, reduced
+from repro.core import spmd
+from repro.models import transformer, whisper
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="mamba2-780m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    key = jax.random.PRNGKey(args.seed)
+    params = spmd.init_params(cfg, key)
+    n_prefix = cfg.frontend.n_tokens if cfg.family == "vlm" else 0
+    s_max = n_prefix + args.prompt_len + args.gen
+    B = args.batch
+
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (B, cfg.frontend.n_tokens, cfg.d_model)) * 0.1
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
+
+    prefill = jax.jit(spmd.make_prefill_step(cfg, s_max))
+    decode = jax.jit(spmd.make_decode_step(cfg))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits, axis=-1)
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        pos = jnp.asarray(n_prefix + args.prompt_len + i, jnp.int32)
+        logits, cache = decode(params, cache, tok, pos)
+        tok = jnp.argmax(logits, axis=-1)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"{args.arch}: prefill {B}x{args.prompt_len} in {t_prefill*1e3:.1f}ms; "
+          f"decoded {args.gen-1} steps in {t_decode*1e3:.1f}ms "
+          f"({(args.gen-1)*B/t_decode:.1f} tok/s batched)")
+    print("first sequence:", gen[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""ShapeDtypeStruct input builders for every (arch x input-shape x mesh x mode).
+
+Nothing here allocates: params/optimizer/cache structures come from
+``jax.eval_shape`` and are annotated with NamedShardings from sharding/rules.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import spmd
+from repro.sharding import rules
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, P(*spec)))
+
+
+def _annotate(tree_sds, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, shardings,
+    )
+
+
+def batch_axes(mesh, mode: str) -> Tuple[str, ...]:
+    has_pod = "pod" in mesh.axis_names
+    if mode == "shadow":
+        return ("data",)  # replica dim carries the pod axis
+    return ("pod", "data") if has_pod else ("data",)
+
+
+def param_structs(cfg: ArchConfig, mesh, *, mode: str = "syncdp",
+                  fsdp: bool = True, n_replicas: int = 2) -> Any:
+    sds = jax.eval_shape(lambda: spmd.init_params(cfg, jax.random.PRNGKey(0)))
+    replica_axis = None
+    if mode == "shadow":
+        sds = jax.tree.map(lambda s: jax.ShapeDtypeStruct((n_replicas,) + s.shape, s.dtype), sds)
+        replica_axis = "pod"
+    shardings = rules.build_param_specs(
+        sds, mesh, fsdp_axis="data" if fsdp else None, replica_axis=replica_axis
+    )
+    return _annotate(sds, shardings)
+
+
+def opt_structs(opt, params_sds, mesh, *, replica_axis=None, fsdp: bool = True) -> Any:
+    sds = jax.eval_shape(opt.init, params_sds)
+    shardings = rules.build_param_specs(
+        sds, mesh, fsdp_axis="data" if fsdp else None, replica_axis=replica_axis
+    )
+    return _annotate(sds, shardings)
+
+
+def train_batch_structs(cfg: ArchConfig, shape: InputShape, mesh, *,
+                        mode: str = "syncdp", n_replicas: int = 2) -> Dict[str, Any]:
+    bx = batch_axes(mesh, mode)
+    ax = bx if len(bx) > 1 else bx[0]
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def tok_spec(b, s_text):
+        if mode == "shadow":
+            return _sds((n_replicas, b // n_replicas, s_text), jnp.int32, mesh,
+                        ("pod", ax, None))
+        return _sds((b, s_text), jnp.int32, mesh, (ax, None))
+
+    if cfg.family == "vlm":
+        n_img = cfg.frontend.n_tokens
+        s_text = S - n_img
+        batch = {"tokens": tok_spec(B, s_text)}
+        if mode == "shadow":
+            batch["prefix_embeds"] = _sds(
+                (n_replicas, B // n_replicas, n_img, cfg.d_model), dtype, mesh,
+                ("pod", ax, None, None))
+        else:
+            batch["prefix_embeds"] = _sds((B, n_img, cfg.d_model), dtype, mesh,
+                                          (ax, None, None))
+        return batch
+    if cfg.family == "audio":
+        n_ctx = cfg.encoder.n_ctx
+        batch = {"tokens": tok_spec(B, S)}
+        if mode == "shadow":
+            batch["frames"] = _sds((n_replicas, B // n_replicas, n_ctx, cfg.d_model),
+                                   dtype, mesh, ("pod", ax, None, None))
+        else:
+            batch["frames"] = _sds((B, n_ctx, cfg.d_model), dtype, mesh, (ax, None, None))
+        return batch
+    return {"tokens": tok_spec(B, S)}
+
+
+def _cache_sharding(path, leaf, mesh_shape) -> P:
+    names = rules._path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    data_n, model_n = mesh_shape.get("data", 1), mesh_shape.get("model", 1)
+    spec = [None] * nd
+    if nd >= 2 and shape[1] % data_n == 0 and shape[1] >= data_n:
+        spec[1] = "data"
+        data_used = True
+    else:
+        data_used = False
+    if name in ("k", "v") and nd == 5:  # (L, B, S, kv, hd)
+        if not data_used and shape[2] % data_n == 0:
+            spec[2] = "data"
+        if shape[3] % model_n == 0:
+            spec[3] = "model"
+        elif shape[4] % model_n == 0:
+            spec[4] = "model"
+    elif name == "ssm" and nd == 5:  # (L, B, H, p, n)
+        if shape[2] % model_n == 0:
+            spec[2] = "model"
+    elif name == "conv" and nd == 4:  # (L, B, K, C)
+        if shape[3] % model_n == 0:
+            spec[3] = "model"
+    return P(*spec)
+
+
+def cache_structs(cfg: ArchConfig, batch: int, s_max: int, mesh) -> Any:
+    sds = jax.eval_shape(lambda: spmd.init_cache(cfg, batch, s_max))
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shardings = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, _cache_sharding(path, leaf, mesh_shape)),
+        sds,
+    )
+    return _annotate(sds, shardings)
+
+
+def decode_batch_structs(cfg: ArchConfig, shape: InputShape, mesh) -> Dict[str, Any]:
+    B = shape.global_batch
+    data_n = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+    tok_spec = ("data",) if B % data_n == 0 and B >= data_n else (None,)
+    return {
+        "token": _sds((B,), jnp.int32, mesh, tok_spec),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

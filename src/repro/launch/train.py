@@ -1,0 +1,160 @@
+"""End-to-end training launcher (laptop-scale execution).
+
+Two entry modes:
+  dlrm  — the paper's system: n trainers x m Hogwild threads on synthetic CTR,
+          ShadowSync or fixed-rate sync, EASGD/MA/BMUF. Deterministic HogwildSim
+          by default; --threaded runs the real-thread Algorithm-1 runner.
+  lm    — ShadowSync applied to a small LM (any --arch, reduced config) on a
+          Markov token stream: replicas train independently, a host shadow loop
+          dispatches the separate sync_step program in the background.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train dlrm --algo easgd --mode shadow \
+      --trainers 4 --threads 4 --iters 300
+  PYTHONPATH=src python -m repro.launch.train lm --arch minicpm-2b --replicas 2 \
+      --iters 100 --sync-gap 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.configs.base import ARCH_IDS, get_config, reduced
+from repro.core import spmd
+from repro.core.elp import elp
+from repro.core.runners import HogwildSim, ThreadedShadowRunner
+from repro.core.sync import BMUFState, SyncConfig
+from repro import checkpoint as ckpt
+
+
+def run_dlrm(args) -> dict:
+    cfg = dlrm_ctr.tiny(embedding_dim=args.embedding_dim) if args.tiny else dlrm_ctr.CONFIG
+    sync_cfg = SyncConfig(algo=args.algo, mode=args.mode, gap=args.sync_gap,
+                          alpha=args.alpha, delay=args.sync_delay)
+    opt = optim.make(args.optimizer, args.lr)
+    print(f"DLRM {'tiny' if args.tiny else 'full'}: {cfg.n_sparse_features} sparse features, "
+          f"{cfg.n_embedding_rows:,} embedding rows; "
+          f"ELP = {elp(args.batch_size, args.threads, args.trainers):,}")
+    if args.threaded:
+        runner = ThreadedShadowRunner(
+            cfg, sync_cfg, n_trainers=args.trainers, batch_size=args.batch_size,
+            optimizer=opt, seed=args.seed, sync_sleep_s=args.sync_sleep)
+        out = runner.run(args.iters)
+        print(f"EPS={out['eps']:.0f}  avg_sync_gap={out['avg_sync_gap']:.2f} "
+              f"final train loss per trainer={[round(l,4) for l in out['train_loss']]}")
+        return {k: v for k, v in out.items() if k not in ("w", "emb_state")}
+    sim = HogwildSim(cfg, sync_cfg, n_trainers=args.trainers, n_threads=args.threads,
+                     batch_size=args.batch_size, optimizer=opt, seed=args.seed)
+    t0 = time.perf_counter()
+    out = sim.run(args.iters, log_every=args.log_every)
+    wall = time.perf_counter() - t0
+    ev = sim.evaluate(out["state"], n_batches=args.eval_batches)
+    examples = args.iters * args.trainers * args.threads * args.batch_size
+    print(f"train loss {np.mean(out['train_loss'][:10]):.5f} -> "
+          f"{np.mean(out['train_loss'][-10:]):.5f}; eval {ev:.5f}; "
+          f"avg_sync_gap {out['avg_sync_gap']:.2f}; EPS(sim wall) {examples/wall:.0f}")
+    if args.save:
+        st = out["state"]
+        ckpt.save(args.save, {"w": st.w_stack, "opt": st.opt_stack,
+                              "emb": st.emb_state},
+                  metadata={"step": st.step, "algo": args.algo})
+        print(f"checkpoint -> {args.save}")
+    return {"final_train": float(np.mean(out["train_loss"][-10:])), "eval": ev,
+            "avg_sync_gap": out["avg_sync_gap"]}
+
+
+def run_lm(args) -> dict:
+    from repro.data import tokens as tok
+
+    cfg = reduced(get_config(args.arch))
+    opt = optim.make(args.optimizer, args.lr)
+    R = args.replicas
+    sync_cfg = SyncConfig(algo=args.algo, alpha=args.alpha)
+    key = jax.random.PRNGKey(args.seed)
+    params = spmd.init_params(cfg, key)
+    stack = spmd.stack_replicas(params, R)
+    stack = jax.tree.map(jnp.copy, stack)
+    opt_stack = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (R,) + x.shape).copy(), opt.init(params))
+    train_step = jax.jit(spmd.make_train_step(cfg, opt, "shadow"))
+    sync_step = jax.jit(spmd.make_sync_step(cfg, sync_cfg))
+    w_ps = jax.tree.map(jnp.copy, params) if args.algo == "easgd" else None
+    bmuf = BMUFState.init(params) if args.algo == "bmuf" else None
+
+    trans = tok.make_transition(cfg.vocab_size, seed=args.seed)
+    losses = []
+    t0 = time.perf_counter()
+    for it in range(args.iters):
+        b = tok.gen_batch(trans, args.seed, it, args.batch_size * R, args.seq_len)
+        batch = jax.tree.map(lambda x: x.reshape(R, args.batch_size, *x.shape[1:]), b)
+        stack, opt_stack, loss = train_step(stack, opt_stack, batch)
+        losses.append(float(jnp.mean(loss)))
+        # Background cadence (host loop quantization of the shadow thread).
+        if (it + 1) % args.sync_gap == 0:
+            if args.algo == "easgd":
+                stack, w_ps = sync_step(stack, w_ps)
+            elif args.algo == "ma":
+                stack = sync_step(stack)
+            else:
+                stack, bmuf = sync_step(stack, bmuf)
+    wall = time.perf_counter() - t0
+    print(f"{args.arch} x{R} replicas [{args.algo}]: loss "
+          f"{np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f} "
+          f"({args.iters} iters, {wall:.1f}s, "
+          f"EPS {args.iters*args.batch_size*R/wall:.1f})")
+    return {"loss_start": float(np.mean(losses[:5])), "loss_end": float(np.mean(losses[-5:]))}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    d = sub.add_parser("dlrm")
+    d.add_argument("--algo", choices=["easgd", "ma", "bmuf"], default="easgd")
+    d.add_argument("--mode", choices=["shadow", "fixed_rate"], default="shadow")
+    d.add_argument("--trainers", type=int, default=4)
+    d.add_argument("--threads", type=int, default=4)
+    d.add_argument("--batch-size", type=int, default=128)
+    d.add_argument("--iters", type=int, default=200)
+    d.add_argument("--sync-gap", type=int, default=5)
+    d.add_argument("--sync-delay", type=int, default=1)
+    d.add_argument("--sync-sleep", type=float, default=0.0)
+    d.add_argument("--alpha", type=float, default=0.5)
+    d.add_argument("--lr", type=float, default=0.02)
+    d.add_argument("--optimizer", default="adagrad")
+    d.add_argument("--embedding-dim", type=int, default=16)
+    d.add_argument("--tiny", action="store_true", default=True)
+    d.add_argument("--full", dest="tiny", action="store_false")
+    d.add_argument("--threaded", action="store_true")
+    d.add_argument("--eval-batches", type=int, default=10)
+    d.add_argument("--log-every", type=int, default=50)
+    d.add_argument("--seed", type=int, default=0)
+    d.add_argument("--save", default=None)
+
+    l = sub.add_parser("lm")
+    l.add_argument("--arch", choices=list(ARCH_IDS), default="minicpm-2b")
+    l.add_argument("--algo", choices=["easgd", "ma", "bmuf"], default="easgd")
+    l.add_argument("--replicas", type=int, default=2)
+    l.add_argument("--batch-size", type=int, default=8)
+    l.add_argument("--seq-len", type=int, default=128)
+    l.add_argument("--iters", type=int, default=60)
+    l.add_argument("--sync-gap", type=int, default=5)
+    l.add_argument("--alpha", type=float, default=0.5)
+    l.add_argument("--lr", type=float, default=1e-3)
+    l.add_argument("--optimizer", default="adam")
+    l.add_argument("--seed", type=int, default=0)
+
+    args = ap.parse_args()
+    out = run_dlrm(args) if args.cmd == "dlrm" else run_lm(args)
+    print(json.dumps(out, default=float))
+
+
+if __name__ == "__main__":
+    main()

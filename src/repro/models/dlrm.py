@@ -1,0 +1,84 @@
+"""DLRM (the paper's model): bottom MLP -> dot interaction -> top MLP [arXiv:1906.00091].
+
+Dense weights ``w`` (MLPs) and embedding tables ``h`` are deliberately SEPARATE
+pytrees: ``w`` is replicated per trainer (data parallelism, ShadowSync'd), ``h``
+lives on the embedding shards (model parallelism, Hogwild-updated). The training
+step computes grads w.r.t. the POOLED embeddings so the table update is a sparse
+row scatter — exactly the trainer -> embedding-PS gradient flow of the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+
+def init_dense(cfg, key, dtype=jnp.float32) -> Params:
+    """MLP + interaction weights (the ShadowSync-replicated part)."""
+    d = cfg.embedding_dim
+    n_vec = cfg.n_sparse_features + 1
+    top_in = d + n_vec * (n_vec - 1) // 2
+    keys = jax.random.split(key, len(cfg.bottom_mlp) + len(cfg.top_mlp))
+    bot, dims = [], (cfg.n_dense_features,) + tuple(cfg.bottom_mlp)
+    for i in range(len(cfg.bottom_mlp)):
+        bot.append({
+            "w": dense_init(keys[i], dims[i], dims[i + 1], dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    top, dims = [], (top_in,) + tuple(cfg.top_mlp)
+    for i in range(len(cfg.top_mlp)):
+        top.append({
+            "w": dense_init(keys[len(bot) + i], dims[i], dims[i + 1], dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    return {"bottom": tuple(bot), "top": tuple(top)}
+
+
+def _mlp(layers, x, final_linear: bool) -> jnp.ndarray:
+    n = len(layers)
+    for i, lp in enumerate(layers):
+        x = x @ lp["w"] + lp["b"]
+        if not (final_linear and i == n - 1):
+            x = jax.nn.relu(x)
+    return x
+
+
+def interact(bottom_out: jnp.ndarray, pooled: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise dot interaction. bottom_out: (B, d); pooled: (B, F, d)."""
+    z = jnp.concatenate([bottom_out[:, None, :], pooled], axis=1)  # (B, F+1, d)
+    dots = jnp.einsum("bfd,bgd->bfg", z, z)
+    n = z.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    return jnp.concatenate([bottom_out, dots[:, iu, ju]], axis=-1)
+
+
+def forward(w: Params, dense_x: jnp.ndarray, pooled: jnp.ndarray) -> jnp.ndarray:
+    """Returns logits (B,)."""
+    bot = _mlp(w["bottom"], dense_x, final_linear=False)
+    feat = interact(bot, pooled.astype(bot.dtype))
+    return _mlp(w["top"], feat, final_linear=True)[:, 0]
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Binary cross-entropy with logits — the paper's normalized-entropy-style metric
+    is this loss normalized by the entropy of the base CTR (see core/elp.py)."""
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def dense_loss_and_grads(
+    w: Params, dense_x: jnp.ndarray, pooled: jnp.ndarray, labels: jnp.ndarray
+) -> Tuple[jnp.ndarray, Params, jnp.ndarray]:
+    """Returns (loss, grad_w, grad_pooled) — the latter is shipped to the embedding
+    shards for the sparse Hogwild row update."""
+
+    def f(w_, pooled_):
+        return bce_loss(forward(w_, dense_x, pooled_), labels)
+
+    loss, (g_w, g_pooled) = jax.value_and_grad(f, argnums=(0, 1))(w, pooled)
+    return loss, g_w, g_pooled

@@ -1,0 +1,320 @@
+"""Shared transformer building blocks (pure-functional, pytree params).
+
+All modules are (init_fn, apply_fn) pairs over plain dicts so that layer stacks can
+be jnp-stacked and driven with ``lax.scan``, which keeps the lowered HLO small
+enough to compile 88-layer models for a 512-device mesh on one CPU core.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.ctx import constrain
+
+Params = dict
+
+# When True, every lax.scan in the model lowers fully unrolled. Used ONLY by the
+# dry-run cost probes: XLA's HloCostAnalysis counts a while-loop body once
+# (trip count ignored), so roofline FLOPs/bytes are extracted from unrolled
+# straight-line probes (launch/dryrun.py extrapolate_cost) while the deliverable
+# program keeps compact scan loops.
+_UNROLL_SCANS = False
+
+
+def set_unroll_scans(v: bool) -> None:
+    global _UNROLL_SCANS
+    _UNROLL_SCANS = v
+
+
+def uscan(f, init, xs, **kw):
+    if _UNROLL_SCANS:
+        kw = dict(kw, unroll=True)
+    return lax.scan(f, init, xs, **kw)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    if theta <= 0:
+        return x
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, optional sliding window, blockwise for long prefill)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype) -> Params:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def _sdpa_block(q, k, v, mask, scale):
+    """q: (B,Sq,H,D), k/v: (B,Sk,H,D), mask: (Sq,Sk) or (B,1,Sq,Sk)."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg,
+    *,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). Blockwise over query chunks so the
+    (Sq, Sk) score tile never exceeds q_chunk * S."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    if cross_kv is None:
+        k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+        v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kv_positions = positions
+    else:
+        enc = cross_kv[0]
+        Sk = enc.shape[1]
+        k = (enc @ p["wk"]).reshape(B, Sk, cfg.n_kv_heads, hd)
+        v = (enc @ p["wv"]).reshape(B, Sk, cfg.n_kv_heads, hd)
+        kv_positions = jnp.arange(Sk)
+        causal = False
+    q = constrain(q, ("batch", None, "model", None))
+    k = constrain(_repeat_kv(k, n_rep), ("batch", None, "model", None))
+    v = constrain(_repeat_kv(v, n_rep), ("batch", None, "model", None))
+    scale = hd ** -0.5
+    Sk = k.shape[1]
+
+    def block_mask(q_pos):
+        # q_pos: (C,) absolute positions of this query chunk.
+        m = jnp.ones((q_pos.shape[0], Sk), bool)
+        if causal:
+            m = q_pos[:, None] >= kv_positions[None, :]
+            if cfg.sliding_window is not None:
+                m &= q_pos[:, None] - kv_positions[None, :] < cfg.sliding_window
+        return m
+
+    if S % q_chunk:
+        # largest chunk that divides S (e.g. whisper's 1500-frame encoder ctx)
+        q_chunk = next((c for c in range(min(q_chunk, S), 0, -1) if S % c == 0), S)
+    if S <= q_chunk:
+        out = _sdpa_block(q, k, v, block_mask(positions), scale)
+    else:
+        n_chunks = S // q_chunk
+        qc = q.reshape(B, n_chunks, q_chunk, cfg.n_heads, hd).transpose(1, 0, 2, 3, 4)
+        pc = positions.reshape(n_chunks, q_chunk)
+
+        @jax.checkpoint
+        def body(_, args):
+            # rematted: per-chunk score/prob tiles are recomputed in backward
+            # instead of being saved across the whole chunk scan.
+            qi, pi = args
+            return None, _sdpa_block(qi, k, v, block_mask(pi), scale)
+
+        _, oc = uscan(body, None, (qc, pc))
+        out = oc.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.n_heads, hd)
+    return out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+
+
+def attention_decode(
+    p: Params,
+    x: jnp.ndarray,
+    cfg,
+    cache: Params,
+    pos: jnp.ndarray,
+    *,
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. x: (B, 1, d); cache: {"k","v"}: (B, S_max, n_kv, hd); pos scalar."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    if cross_kv is not None:
+        k, v = cross_kv  # precomputed encoder K/V: (B, Sk, n_kv, hd)
+        mask = jnp.ones((1, k.shape[1]), bool)
+        out = _sdpa_block(q, _repeat_kv(k, n_rep), _repeat_kv(v, n_rep), mask, hd ** -0.5)
+        return out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"], cache
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k_new = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    k_new = apply_rope(k_new, pos[None], cfg.rope_theta)
+    v_new = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    S_max = cache["k"].shape[1]
+    k_all = lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_all = lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    kv_pos = jnp.arange(S_max)
+    mask = kv_pos[None, :] <= pos
+    if cfg.sliding_window is not None:
+        mask &= pos - kv_pos[None, :] < cfg.sliding_window
+    out = _sdpa_block(q, _repeat_kv(k_all, n_rep), _repeat_kv(v_all, n_rep), mask, hd ** -0.5)
+    out = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return out, {"k": k_all, "v": v_all}
+
+
+def init_attention_cache(cfg, batch: int, s_max: int, dtype) -> Params:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s_max, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, s_max, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"w_up": dense_init(k1, d_model, d_ff, dtype), "w_down": dense_init(k2, d_ff, d_model, dtype)}
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> Params:
+    return {"table": dense_init(key, vocab, d_model, dtype, scale=0.02)}
+
+
+def embed_lookup(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token-level CE. logits: (..., V) any float dtype; labels int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_softmax_ce(
+    x: jnp.ndarray,
+    w_head: jnp.ndarray,
+    labels: jnp.ndarray,
+    weights: jnp.ndarray,
+    vocab_limit: int,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Fused chunked softmax-CE: never materializes the full (B, S, V) logits.
+
+    At 1M tokens x 160k vocab the dense logit tensor is ~100 TB — the single
+    biggest activation in LLM training. We scan over sequence chunks, computing
+    (B, chunk, V) logits per step, with the chunk body rematerialized in the
+    backward pass. x: (B, S, d); w_head: (d, V_padded); labels/weights: (B, S).
+    Columns >= vocab_limit (padding) are masked out."""
+    B, S, _ = x.shape
+    V = w_head.shape[-1]
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+    xs = x.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    ws = weights.reshape(B, n, chunk).transpose(1, 0, 2)
+    col_mask = (jnp.arange(V) < vocab_limit)
+
+    @jax.checkpoint
+    def body(acc, args):
+        xc, lc, wc = args
+        logits = (xc @ w_head).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "model"))
+        logits = jnp.where(col_mask, logits, -1e30)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - gold) * wc), None
+
+    total, _ = uscan(body, jnp.zeros((), jnp.float32), (xs, ls, ws))
+    return total / jnp.maximum(jnp.sum(weights), 1.0)

@@ -1,0 +1,181 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm [arXiv:2405.21060].
+
+Train/prefill uses the chunk-parallel matmul formulation (intra-chunk dense masked
+attention-like einsums + sequential inter-chunk state recurrence via ``lax.scan``),
+which is the TPU-native adaptation of the paper's kernel: the quadratic intra-chunk
+part maps to the MXU, the recurrence is O(L/chunk) sequential steps.
+
+Decode keeps a constant-size (ssm_state, conv_state) cache: O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import Params, dense_init, rmsnorm, uscan
+from repro.sharding.ctx import constrain
+
+
+def effective_chunk(L: int, chunk: int) -> int:
+    """Largest chunk <= cfg chunk that divides L (prefill lengths vary)."""
+    if L % chunk == 0:
+        return chunk
+    return next((c for c in range(min(chunk, L), 0, -1) if L % c == 0), L)
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba2_init(key, cfg, dtype) -> Params:
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.exp(
+        jax.random.uniform(k3, (H,), jnp.float32)
+        * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+        + jnp.log(s.dt_min)
+    )
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, conv_dim), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(k4, d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. u: (B, L, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    L = u.shape[1]
+    out = sum(pad[:, i : i + L, :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(cfg, xbc):
+    s = cfg.ssm
+    d_inner, _, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    return x, B, C
+
+
+def _ssd_scan(xdt, a, Bm, Cm, h0):
+    """Chunked SSD. xdt: (b, nc, q, h, p); a: (b, nc, q, h); Bm/Cm: (b, nc, q, h, n);
+    h0: (b, h, p, n). Returns y: (b, nc, q, h, p), h_final."""
+
+    def chunk(h, args):
+        xdt_c, a_c, B_c, C_c = args  # (b, q, h, p), (b, q, h), (b, q, h, n) x2
+        a_cum = jnp.cumsum(a_c, axis=1)  # (b, q, h)
+        # Intra-chunk (masked quadratic part -> MXU-friendly einsums).
+        Lmat = jnp.exp(a_cum[:, :, None, :] - a_cum[:, None, :, :])  # (b, q, s, h)
+        q_idx = jnp.arange(a_c.shape[1])
+        Lmat = jnp.where((q_idx[:, None] >= q_idx[None, :])[None, :, :, None], Lmat, 0.0)
+        y_diag = jnp.einsum("bqhn,bshn,bqsh,bshp->bqhp", C_c, B_c, Lmat, xdt_c)
+        # Contribution of the carried state.
+        y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", C_c, h, jnp.exp(a_cum))
+        # New carried state.
+        decay_states = jnp.exp(a_cum[:, -1:, :] - a_cum)  # (b, q, h)
+        s_c = jnp.einsum("bqhn,bqh,bqhp->bhpn", B_c, decay_states, xdt_c)
+        h_new = jnp.exp(a_cum[:, -1, :])[..., None, None] * h + s_c
+        return h_new, y_diag + y_off
+
+    # scan over the chunk axis (xs leading dim), so move nc first.
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xdt, a, Bm, Cm))
+    h_final, ys = uscan(chunk, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def mamba2_apply(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Full-sequence (train/prefill). x: (B, L, d_model)."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    Bsz, L, _ = x.shape
+    chunk = effective_chunk(L, s.chunk)
+    nc = L // chunk
+
+    z, xbc, dt_raw = _split_proj(cfg, constrain(x @ p["in_proj"], ("batch", None, "model")))
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = _split_xbc(cfg, xbc)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, L, H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    a = (dt * A).reshape(Bsz, nc, chunk, H)
+
+    xh = xs.reshape(Bsz, L, H, s.headdim).astype(jnp.float32)
+    xdt = (xh * dt[..., None]).reshape(Bsz, nc, chunk, H, s.headdim)
+    rep = H // s.n_groups
+    Bg = Bm.reshape(Bsz, L, s.n_groups, s.d_state).astype(jnp.float32)
+    Cg = Cm.reshape(Bsz, L, s.n_groups, s.d_state).astype(jnp.float32)
+    Bh = jnp.repeat(Bg, rep, axis=2).reshape(Bsz, nc, chunk, H, s.d_state)
+    Ch = jnp.repeat(Cg, rep, axis=2).reshape(Bsz, nc, chunk, H, s.d_state)
+
+    h0 = jnp.zeros((Bsz, H, s.headdim, s.d_state), jnp.float32)
+    y, _ = _ssd_scan(xdt, a, Bh, Ch, h0)
+    y = y.reshape(Bsz, L, H, s.headdim) + p["D"][:, None] * xh
+    y = y.reshape(Bsz, L, d_inner).astype(x.dtype)
+
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> Params:
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, s.headdim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, cfg, cache: Params) -> Tuple[jnp.ndarray, Params]:
+    """One-token step. x: (B, 1, d_model)."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    Bsz = x.shape[0]
+
+    z, xbc, dt_raw = _split_proj(cfg, x @ p["in_proj"])  # (B, 1, *)
+    window = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    xs, Bm, Cm = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # (B, H)
+
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bm[:, 0].reshape(Bsz, s.n_groups, s.d_state), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm[:, 0].reshape(Bsz, s.n_groups, s.d_state), rep, axis=1).astype(jnp.float32)
+    xh = xs[:, 0].reshape(Bsz, H, s.headdim).astype(jnp.float32)
+
+    h = cache["ssm"] * a[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bh, xh
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + p["D"][:, None] * xh
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    return y @ p["out_proj"], {"ssm": h, "conv": new_conv}

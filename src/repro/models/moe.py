@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer: top-k router + group-local sort dispatch.
+
+Dispatch is O(T*k*d) + an (E, C, d) expert buffer — no (T, E, C) one-hot tensor is
+ever materialized. Tokens are routed in G groups aligned with the data-parallel
+sharding (G = product of batch mesh axes, from the activation-sharding context):
+the argsort that assigns expert slots runs over each group's local tokens only, so
+it lowers to a per-shard sort instead of a distributed sort network; the
+(G, E, C/G, d) -> (E, C, d) regroup is the expert-parallel all-to-all. Experts are
+sharded over the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Params, dense_init, swiglu, swiglu_init
+from repro.sharding import ctx as shctx
+from repro.sharding.ctx import constrain
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    m = cfg.moe
+    k_router, k_gate, k_up, k_down, k_shared = jax.random.split(key, 5)
+    E, d, f = m.n_experts, cfg.d_model, m.d_ff_expert
+    p = {
+        "router": dense_init(k_router, d, E, jnp.float32),  # router in fp32
+        "w_gate": (jax.random.normal(k_gate, (E, d, f), jnp.float32) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(k_up, (E, d, f), jnp.float32) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(k_down, (E, f, d), jnp.float32) * f ** -0.5).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = swiglu_init(k_shared, d, f * m.n_shared_experts, dtype)
+    return p
+
+
+def _n_groups(T: int) -> int:
+    """Dispatch groups = data-parallel shards (1 when no mesh context)."""
+    ctx = shctx.active()
+    if ctx is None:
+        return 1
+    shape = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    g = int(np.prod([shape[a] for a in ctx.batch_axes]))
+    while g > 1 and T % g:
+        g //= 2
+    return max(g, 1)
+
+
+def _dispatch_indices(expert_idx: jnp.ndarray, n_experts: int, capacity: int):
+    """expert_idx: (Tk,) local expert assignment. Returns (order, dest, keep)."""
+    order = jnp.argsort(expert_idx, stable=True)
+    e_sorted = expert_idx[order]
+    first = jnp.searchsorted(e_sorted, e_sorted, side="left")
+    pos = jnp.arange(e_sorted.shape[0]) - first
+    keep = pos < capacity
+    dest = jnp.where(keep, e_sorted * capacity + pos, n_experts * capacity)  # OOB -> drop
+    return order, dest, keep
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg, *, capacity_factor: float = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    m = cfg.moe
+    capacity_factor = m.capacity_factor if capacity_factor is None else capacity_factor
+    B, S, d = x.shape
+    T = B * S
+    k, E = m.top_k, m.n_experts
+    G = _n_groups(T)
+    Tg = T // G
+    cap_g = int(max(k, capacity_factor * Tg * k / E))
+
+    xt = x.reshape(G, Tg, d)
+    xt = constrain(xt, ("batch", None, None))
+
+    logits = (xt.astype(jnp.float32) @ p["router"])  # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    gates = gates / jnp.clip(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style), over all tokens.
+    assign = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=2)  # (G, Tg, E)
+    frac_tokens = jnp.mean(assign, axis=(0, 1)) / k
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs) * m.load_balance_coef
+
+    def route_group(xg, idxg, gateg):
+        # All local to one data shard group: the sort never crosses shards.
+        order, dest, keep = _dispatch_indices(idxg.reshape(-1), E, cap_g)
+        tok_sorted = (jnp.arange(Tg * k) // k)[order]
+        gate_sorted = gateg.reshape(-1)[order]
+        xs = jnp.where(keep[:, None], xg[tok_sorted], 0).astype(x.dtype)
+        buf = jnp.zeros((E * cap_g, d), x.dtype).at[dest].set(xs, mode="drop")
+        return buf.reshape(E, cap_g, d), (order, dest, keep, tok_sorted, gate_sorted)
+
+    buf_g, route_state = jax.vmap(route_group)(xt, idx, gates)  # (G, E, cap_g, d)
+    # Group-major buffers stay FULLY local to their data shard (no model
+    # sharding here): the scatter that builds them and the gather that unroutes
+    # are then shard-local; ALL cross-device movement happens in the single
+    # group-major <-> expert-major regroup below (the all-to-all).
+    buf_g = constrain(buf_g, ("batch", None, None, None))
+
+    # Regroup to expert-major: THE expert-parallel all-to-all. The slot dim is
+    # G-major, so sharding it over the data axes keeps each (expert, group) tile
+    # on one device row — expert compute is split over data x model, never
+    # replicated.
+    buf = buf_g.transpose(1, 0, 2, 3).reshape(E, G * cap_g, d)
+    buf = constrain(buf, ("model", "batch", None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_up"]
+    )
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out = constrain(out, ("model", "batch", None))
+
+    # Reverse all-to-all back to group-major, then un-route (shard-local).
+    out_g = out.reshape(E, G, cap_g, d).transpose(1, 0, 2, 3)
+    out_g = constrain(out_g, ("batch", None, None, None)).reshape(G, E * cap_g, d)
+
+    def unroute_group(out_flat, state):
+        order, dest, keep, tok_sorted, gate_sorted = state
+        y_sorted = out_flat.at[dest].get(mode="fill", fill_value=0) * (
+            gate_sorted[:, None].astype(x.dtype) * keep[:, None]
+        )
+        return jnp.zeros((Tg, d), x.dtype).at[tok_sorted].add(y_sorted)
+
+    y = jax.vmap(unroute_group)(out_g, route_state)  # (G, Tg, d)
+    y = constrain(y, ("batch", None, None)).reshape(B, S, d)
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x.reshape(T, d)).reshape(B, S, d)
+    return y, aux

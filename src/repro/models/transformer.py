@@ -1,0 +1,395 @@
+"""Decoder stack builder for dense / moe / ssm / hybrid / vlm families.
+
+Layers are grouped by the repeating ``layer_pattern`` unit (e.g. Jamba's
+``MMMAMMMM``) and jnp-stacked over unit repeats so the whole depth is driven by a
+single ``lax.scan`` — this keeps lowered HLO size O(unit) instead of O(n_layers),
+which is what lets 88-layer x 512-device programs compile quickly on one CPU core.
+
+Three entry points per model: full-sequence ``forward`` (train), ``prefill``
+(forward + cache build), and ``decode_step`` (one token against the cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import mamba2
+from repro.models.layers import (
+    Params,
+    attention_apply,
+    attention_decode,
+    attention_init,
+    cross_entropy,
+    dtype_of,
+    embed_init,
+    embed_lookup,
+    init_attention_cache,
+    rmsnorm,
+    rmsnorm_init,
+    swiglu,
+    swiglu_init,
+)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.layers import uscan
+from repro.sharding.ctx import constrain
+
+
+def _unit_info(cfg: ArchConfig) -> Tuple[int, int]:
+    unit = len(cfg.layer_pattern)
+    assert cfg.n_layers % unit == 0, (cfg.n_layers, cfg.layer_pattern)
+    return unit, cfg.n_layers // unit
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Vocab padded to a multiple of 256 so the vocab dim shards over any mesh
+    axis (standard practice, cf. MaxText/Megatron). Padded logit columns are
+    masked to -inf in the loss and sliced off at decode."""
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def _mask_padded_logits(logits: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    pv = padded_vocab(cfg)
+    if pv == cfg.vocab_size:
+        return logits
+    col = jnp.arange(pv)
+    return jnp.where(col < cfg.vocab_size, logits, -1e30)
+
+
+def _layer_init(key, cfg: ArchConfig, kind: str, layer_idx: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind == "A":
+        p["mixer"] = attention_init(k1, cfg, dtype)
+    else:
+        p["mixer"] = mamba2.mamba2_init(k1, cfg, dtype)
+    if cfg.d_ff > 0 or cfg.moe is not None:
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        if cfg.is_moe_layer(layer_idx):
+            p["ffn"] = moe_init(k2, cfg, dtype)
+        else:
+            p["ffn"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=None) -> Params:
+    dtype = dtype or dtype_of(cfg.dtype)
+    unit, repeats = _unit_info(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    kinds = cfg.layer_kinds()
+    # Stack each unit position over repeats.
+    unit_params = []
+    for pos in range(unit):
+        per_rep = [
+            _layer_init(keys[r * unit + pos], cfg, kinds[pos], pos, dtype)
+            for r in range(repeats)
+        ]
+        unit_params.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    params = {
+        "embed": embed_init(keys[-2], padded_vocab(cfg), cfg.d_model, dtype),
+        "unit": tuple(unit_params),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": (jax.random.normal(keys[-1], (cfg.d_model, padded_vocab(cfg)), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(dtype)
+        }
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        # anyres projector: maps (stubbed) vision-tower features into d_model.
+        params["projector"] = {
+            "w": (jax.random.normal(keys[-1], (cfg.d_model, cfg.d_model), jnp.float32)
+                  * cfg.d_model ** -0.5).astype(dtype)
+        }
+    return params
+
+
+def _apply_layer_full(lp: Params, x, cfg: ArchConfig, kind: str, layer_idx: int,
+                      positions, return_kv: bool):
+    """One block, full sequence. Returns (x, aux, cache_contrib)."""
+    if cfg.parallel_block and kind == "A" and "ffn" in lp:
+        return _apply_parallel_layer_full(lp, x, cfg, layer_idx, positions, return_kv)
+    h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    cache_out = None
+    if kind == "A":
+        mixed = _ckpt_name(attention_apply(lp["mixer"], h, cfg, positions=positions),
+                           "attn_out")
+        if return_kv:
+            hd = cfg.resolved_head_dim
+            B, S, _ = h.shape
+            k = (h @ lp["mixer"]["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+            from repro.models.layers import apply_rope
+
+            k = apply_rope(k, positions, cfg.rope_theta)
+            v = (h @ lp["mixer"]["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+            cache_out = {"k": k, "v": v}
+    else:
+        mixed = _ckpt_name(mamba2.mamba2_apply(lp["mixer"], h, cfg), "attn_out")
+        if return_kv:
+            cache_out = _mamba_final_state(lp["mixer"], h, cfg)
+    x = x + mixed
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in lp:
+        h2 = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        if cfg.is_moe_layer(layer_idx):
+            y, aux = moe_apply(lp["ffn"], h2, cfg)
+        else:
+            y = swiglu(lp["ffn"], h2)
+        x = x + _ckpt_name(y, "ffn_out")
+    return x, aux, cache_out
+
+
+def _ckpt_name(x, name):
+    """Tag post-collective activations so the "save_comm" remat policy can keep
+    them: full remat otherwise REPLAYS the forward tensor-parallel all-reduces
+    inside the backward pass (measured: ~25% of train collective bytes)."""
+    from jax.ad_checkpoint import checkpoint_name
+
+    return checkpoint_name(x, name)
+
+
+def _apply_parallel_layer_full(lp, x, cfg, layer_idx, positions, return_kv):
+    """PaLM-style: one shared pre-norm; attn and ffn branches added together, so
+    their model-axis partial sums fuse into a single all-reduce."""
+    h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+    mixed = attention_apply(lp["mixer"], h, cfg, positions=positions)
+    cache_out = None
+    if return_kv:
+        hd = cfg.resolved_head_dim
+        B, S, _ = h.shape
+        from repro.models.layers import apply_rope
+
+        k = apply_rope((h @ lp["mixer"]["wk"]).reshape(B, S, cfg.n_kv_heads, hd),
+                       positions, cfg.rope_theta)
+        v = (h @ lp["mixer"]["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+        cache_out = {"k": k, "v": v}
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe_layer(layer_idx):
+        y, aux = moe_apply(lp["ffn"], h, cfg)
+    else:
+        y = swiglu(lp["ffn"], h)
+    return x + _ckpt_name(mixed + y, "attn_out"), aux, cache_out
+
+
+def _mamba_final_state(p, h, cfg):
+    """Recompute the final (ssm, conv) state for prefill cache handoff."""
+    s = cfg.ssm
+    zxbcdt = h @ p["in_proj"]
+    _, xbc, _ = mamba2._split_proj(cfg, zxbcdt)
+    conv_tail = xbc[:, -(s.d_conv - 1):, :]
+    # Rerun the SSD scan to get the final state (cheap relative to the block).
+    d_inner, H, _ = mamba2._dims(cfg)
+    Bsz, L, _ = h.shape
+    chunk = mamba2.effective_chunk(L, s.chunk)
+    nc = L // chunk
+    xbc_conv = mamba2._causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = mamba2._split_xbc(cfg, xbc_conv)
+    import jax.nn
+
+    dt = jax.nn.softplus(
+        (zxbcdt[..., -H:]).astype(jnp.float32) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    a = (dt * A).reshape(Bsz, nc, chunk, H)
+    xh = xs.reshape(Bsz, L, H, s.headdim).astype(jnp.float32)
+    xdt = (xh * dt[..., None]).reshape(Bsz, nc, chunk, H, s.headdim)
+    rep = H // s.n_groups
+    Bh = jnp.repeat(Bm.reshape(Bsz, L, s.n_groups, s.d_state).astype(jnp.float32), rep, axis=2)
+    Ch = jnp.repeat(Cm.reshape(Bsz, L, s.n_groups, s.d_state).astype(jnp.float32), rep, axis=2)
+    Bh = Bh.reshape(Bsz, nc, chunk, H, s.d_state)
+    Ch = Ch.reshape(Bsz, nc, chunk, H, s.d_state)
+    h0 = jnp.zeros((Bsz, H, s.headdim, s.d_state), jnp.float32)
+    _, h_final = mamba2._ssd_scan(xdt, a, Bh, Ch, h0)
+    return {"ssm": h_final, "conv": conv_tail}
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    *,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+    remat_policy: str = "full",
+    return_cache: bool = False,
+    return_hidden: bool = False,
+):
+    """tokens: (B, S_text). Returns (logits, aux_loss[, cache]); with
+    return_hidden=True, returns final-norm hidden states instead of logits (for
+    the chunked-CE loss, which fuses the head projection)."""
+    x = embed_lookup(params["embed"], tokens)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(x.dtype)
+        if "projector" in params:
+            pe = pe @ params["projector"]["w"]
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.arange(S)
+    unit, repeats = _unit_info(cfg)
+    kinds = cfg.layer_kinds()
+
+    def unit_body(carry, unit_lp):
+        x, aux = carry
+        caches = []
+        for pos in range(unit):
+            x, a, c = _apply_layer_full(
+                unit_lp[pos], x, cfg, kinds[pos], pos, positions, return_cache
+            )
+            x = constrain(x, ("batch", None, None))
+            aux = aux + a
+            caches.append(c)
+        out = tuple(caches) if return_cache else None
+        return (x, aux), out
+
+    if remat:
+        if remat_policy == "save_comm":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "ffn_out")
+            unit_body = jax.checkpoint(unit_body, policy=policy)
+        else:
+            unit_body = jax.checkpoint(unit_body)
+    (x, aux), caches = uscan(unit_body, (x, jnp.zeros((), jnp.float32)), params["unit"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return (x, aux, caches) if return_cache else (x, aux)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = x @ params["lm_head"]["w"]
+    logits = _mask_padded_logits(logits, cfg)
+    if return_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            *, remat: bool = False, remat_policy: str = "full",
+            ce_chunk: int = 512) -> jnp.ndarray:
+    """Next-token LM loss (chunked softmax-CE: the (B, S, V) logits are never
+    materialized). batch: {"tokens": (B, S)[, "prefix_embeds": (B, P, d)]}."""
+    from repro.models.layers import chunked_softmax_ce
+
+    tokens = batch["tokens"]
+    hidden, aux = forward(
+        params, cfg, tokens, prefix_embeds=batch.get("prefix_embeds"),
+        remat=remat, remat_policy=remat_policy, return_hidden=True,
+    )
+    n_prefix = 0 if batch.get("prefix_embeds") is None else batch["prefix_embeds"].shape[1]
+    hidden = hidden[:, n_prefix:, :]
+    # Predict tokens[t+1] from position t; zero-weight the last position.
+    B, S = tokens.shape
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+    weights = jnp.concatenate(
+        [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], axis=1
+    )
+    head = params["embed"]["table"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    ce = chunked_softmax_ce(hidden, head, labels, weights, cfg.vocab_size, chunk=ce_chunk)
+    return ce + aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None) -> Any:
+    dtype = dtype or dtype_of(cfg.dtype)
+    unit, repeats = _unit_info(cfg)
+    kinds = cfg.layer_kinds()
+    caches = []
+    for pos in range(unit):
+        if kinds[pos] == "A":
+            one = init_attention_cache(cfg, batch, s_max, dtype)
+        else:
+            one = mamba2.init_mamba_cache(cfg, batch, dtype)
+        caches.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (repeats,) + x.shape), one))
+    return tuple(caches)
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    cache: Any,
+    token: jnp.ndarray,
+    pos: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Any]:
+    """token: (B,) int32; pos: scalar int32. Returns (logits (B, V), new cache)."""
+    x = embed_lookup(params["embed"], token[:, None])
+    unit, repeats = _unit_info(cfg)
+    kinds = cfg.layer_kinds()
+
+    def unit_body(x, scanned):
+        unit_lp, unit_cache = scanned
+        new_caches = []
+        for p_idx in range(unit):
+            lp, c = unit_lp[p_idx], unit_cache[p_idx]
+            h = rmsnorm(lp["norm1"], x, cfg.norm_eps)
+            parallel = cfg.parallel_block and kinds[p_idx] == "A" and "ffn" in lp
+            if kinds[p_idx] == "A":
+                mixed, c = attention_decode(lp["mixer"], h, cfg, c, pos)
+            else:
+                mixed, c = mamba2.mamba2_decode(lp["mixer"], h, cfg, c)
+            if parallel:
+                if cfg.is_moe_layer(p_idx):
+                    y, _ = moe_apply(lp["ffn"], h, cfg)
+                else:
+                    y = swiglu(lp["ffn"], h)
+                x = x + mixed + y
+            else:
+                x = x + mixed
+                if "ffn" in lp:
+                    h2 = rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                    if cfg.is_moe_layer(p_idx):
+                        y, _ = moe_apply(lp["ffn"], h2, cfg)
+                    else:
+                        y = swiglu(lp["ffn"], h2)
+                    x = x + y
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_cache = uscan(unit_body, x, (params["unit"], cache))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = x @ params["lm_head"]["w"]
+    return logits[:, 0, : cfg.vocab_size], new_cache
+
+
+def prefill(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    s_max: int,
+    *,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Any]:
+    """Full-context forward that also builds the serving cache.
+
+    Returns (last-position logits (B, V), cache padded to s_max). Only the last
+    position's logits are projected — the (B, S, V) tensor never exists."""
+    hidden, _, layer_caches = forward(
+        params, cfg, tokens, prefix_embeds=prefix_embeds, return_cache=True,
+        return_hidden=True,
+    )
+    last = hidden[:, -1, :]
+    if cfg.tie_embeddings:
+        logits = last @ params["embed"]["table"].T
+    else:
+        logits = last @ params["lm_head"]["w"]
+    logits = logits[:, None, :]
+    dtype = dtype_of(cfg.dtype)
+    unit, repeats = _unit_info(cfg)
+    kinds = cfg.layer_kinds()
+    caches = []
+    for pos in range(unit):
+        c = layer_caches[pos]  # stacked over repeats by scan
+        if kinds[pos] == "A":
+            B, S = c["k"].shape[1], c["k"].shape[2]
+            pad = s_max - S
+            c = {
+                "k": jnp.pad(c["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype),
+                "v": jnp.pad(c["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype),
+            }
+        caches.append(c)
+    return logits[:, -1, :], tuple(caches)

@@ -1,0 +1,131 @@
+"""Optimizers built from scratch (no optax dependency).
+
+Each optimizer is an (init, update) pair over arbitrary pytrees, optax-style:
+``state = opt.init(params); params, state = opt.update(params, state, grads)``.
+The paper's embedding PSs use Adagrad with co-located accumulators (handled
+separately in embeddings/table.py as a fused sparse update); the dense trainer
+replicas use any of these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], Tuple[Pytree, Pytree]]
+    name: str = "opt"
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(params, state, grads):
+        return _tmap(lambda p, g: p - (lr * g).astype(p.dtype), params, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(params, state, grads):
+        new_v = _tmap(lambda v, g: beta * v + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            step = _tmap(lambda v, g: beta * v + g.astype(jnp.float32), new_v, grads)
+        else:
+            step = new_v
+        new_p = _tmap(lambda p, s: p - (lr * s).astype(p.dtype), params, step)
+        return new_p, new_v
+
+    return Optimizer(init, update, "momentum")
+
+
+def adagrad(lr: float, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(params, state, grads):
+        new_acc = _tmap(lambda a, g: a + jnp.square(g.astype(jnp.float32)), state, grads)
+        new_p = _tmap(
+            lambda p, a, g: p - (lr * g.astype(jnp.float32) * jax.lax.rsqrt(a + eps)).astype(p.dtype),
+            params, new_acc, grads,
+        )
+        return new_p, new_acc
+
+    return Optimizer(init, update, "adagrad")
+
+
+def rmsprop(lr: float, decay: float = 0.99, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(params, state, grads):
+        new_s = _tmap(
+            lambda s, g: decay * s + (1 - decay) * jnp.square(g.astype(jnp.float32)),
+            state, grads,
+        )
+        new_p = _tmap(
+            lambda p, s, g: p - (lr * g.astype(jnp.float32) * jax.lax.rsqrt(s + eps)).astype(p.dtype),
+            params, new_s, grads,
+        )
+        return new_p, new_s
+
+    return Optimizer(init, update, "rmsprop")
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": _tmap(zeros, params), "v": _tmap(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, state, grads):
+        t = state["t"] + 1
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = _tmap(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def step(p, m_, v_):
+            upd = (m_ / c1) * jax.lax.rsqrt(v_ / c2 + eps * eps)  # ~adamw form
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return p - (lr * upd).astype(p.dtype)
+
+        return _tmap(step, params, m, v), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, "adam")
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Warmup-Stable-Decay schedule (MiniCPM [arXiv:2404.06395])."""
+
+    def lr_at(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        return jnp.where(step < warmup + stable, warm, peak_lr * (1.0 - frac) + 0.1 * peak_lr * frac)
+
+    return lr_at
+
+
+REGISTRY = {"sgd": sgd, "momentum": momentum, "adagrad": adagrad, "rmsprop": rmsprop, "adam": adam}
+
+
+def make(name: str, lr: float, **kw) -> Optimizer:
+    return REGISTRY[name](lr, **kw)

@@ -1,0 +1,147 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_global / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes_global / (chips * HBM_bw)
+    collective term = collective_bytes_per_chip / link_bw
+
+``cost_analysis()`` on the post-SPMD program reports *per-device* flops/bytes, so
+global = per_device * chips. Collective bytes are parsed from the optimized HLO
+(result-shape bytes per collective op; all-reduce counted twice for its
+reduce-scatter + all-gather phases) — per-device link traffic, so the chips
+factor cancels in the term.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.1 = f32[1024,256]{1,0} all-gather(%x), ...
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\][^\s]*\s+(" + "|".join(_COLLECTIVES) + r")\("
+)
+# tuple-result collectives:  = (f32[8,128], f32[8,128]) all-to-all(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes from the optimized per-device HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            b = _shape_bytes(dtype, dims)
+            out[kind] += b * (2 if kind == "all-reduce" else 1)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            inner, kind = m.groups()
+            b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(inner))
+            out[kind] += b * (2 if kind == "all-reduce" else 1)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collectives: Dict[str, int]
+    arg_bytes: int
+    temp_bytes: int
+    out_bytes: int
+    model_flops: float = 0.0
+    notes: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> Dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, mode: str,
+            chips: int, model_flops: float = 0.0, notes: str = "") -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    colls = collective_bytes(compiled.as_text())
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, mode=mode, chips=chips,
+        flops_per_chip=float(cost.get("flops", 0.0)),
+        bytes_per_chip=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_chip=float(sum(colls.values())),
+        collectives=colls,
+        arg_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        out_bytes=int(mem.output_size_in_bytes),
+        model_flops=model_flops,
+        notes=notes,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D with N = active params (MoE: non-expert + top_k/E of experts +
+    shared experts). Decode shapes: D = global_batch tokens (one step)."""
+    from repro.roofline.params import active_param_count
+
+    n_active = active_param_count(cfg)
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

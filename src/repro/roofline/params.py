@@ -1,0 +1,31 @@
+"""Parameter counting (total and MoE-active) from ArchConfig, without allocation."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def param_count(cfg: ArchConfig) -> int:
+    from repro.core import spmd
+
+    sds = jax.eval_shape(lambda: spmd.init_params(cfg, jax.random.PRNGKey(0)))
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(sds)))
+
+
+def _expert_params_per_moe_layer(cfg: ArchConfig) -> int:
+    m = cfg.moe
+    return m.n_experts * cfg.d_model * m.d_ff_expert * 3  # gate, up, down
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_moe_layers = sum(1 for i in range(len(cfg.layer_pattern)) if cfg.is_moe_layer(i)) \
+        * (cfg.n_layers // len(cfg.layer_pattern))
+    expert_total = n_moe_layers * _expert_params_per_moe_layer(cfg)
+    active_frac = m.top_k / m.n_experts
+    return int(total - expert_total * (1.0 - active_frac))

@@ -1,0 +1,164 @@
+"""Parameter/activation PartitionSpec rules.
+
+Baseline layout ("megatron + fsdp"): the tensor-parallel dim of every matmul
+weight shards over ``model``; the other dim shards over ``fsdp_axis`` (usually
+``data``) for the giant archs so params/optimizer state fit. Experts shard over
+``model`` (expert parallelism). Specs are right-aligned so jnp-stacked layer
+params (leading repeats/replica dims) inherit trailing rules.
+
+ShadowSync mode adds a leading replica dim sharded over the replica axis
+(``pod`` for LLM-scale, ``data`` for DLRM-scale); see core/spmd.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# name -> spec for the *trailing* dims of the weight.
+# (tp = model axis slot, fsdp = fsdp axis slot)
+_RULES = {
+    # attention / generic matmuls: (d_in, d_out_tp)
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # embeddings / unembedding: vocab over model
+    "table": ("tp", None),
+    "w": ("fsdp", "tp"),  # lm_head / projector
+    # mamba2
+    "in_proj": ("fsdp", "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "norm_scale": ("tp",),
+    # moe expert stacks: experts over model
+    "router": (None, None),
+    # small per-head vectors: replicate
+    "dt_bias": (None,),
+    "A_log": (None,),
+    "D": (None,),
+    # norms / biases: replicate
+    "scale": (None,),
+    "bias": (None,),
+    "b": (None,),
+}
+
+# MoE expert weights are 3D (E, d, f): override the 2D rule.
+_MOE_RULES = {
+    "w_gate": ("tp", "fsdp", None),
+    "w_up": ("tp", "fsdp", None),
+    "w_down": ("tp", None, "fsdp"),
+}
+
+
+def _resolve(slots, model_axis, fsdp_axis):
+    out = []
+    for s in slots:
+        if s == "tp":
+            out.append(model_axis)
+        elif s == "fsdp":
+            out.append(fsdp_axis)
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def _path_names(path) -> list:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return names
+
+
+def _divisible(dim: Optional[int], shape, spec, mesh_shape) -> tuple:
+    """Drop sharding on axes the dim doesn't divide into (GSPMD pads otherwise;
+    padding giant vocab dims is fine, padding tiny head dims is wasteful)."""
+    out = []
+    for size, ax in zip(shape[-len(spec):] if spec else (), spec):
+        if ax is None:
+            out.append(None)
+            continue
+        n = int(np.prod([mesh_shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+        out.append(ax if (size >= n and size % n == 0) else None)
+    return tuple(out)
+
+
+def param_spec(path, leaf, *, model_axis="model", fsdp_axis=None,
+               mesh_shape=None, replica_axis=None) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    # MoE expert weights are (E, d, f) per layer => ndim >= 4 once jnp-stacked
+    # over unit repeats (the only way these trees are built).
+    in_moe = "ffn" in names and leaf.ndim >= 4 and name in _MOE_RULES
+    slots = _MOE_RULES[name] if in_moe else _RULES.get(name, None)
+    if slots is None:
+        base = (None,) * leaf.ndim
+    else:
+        base = _resolve(slots, model_axis, fsdp_axis)
+    # Right-align: leading stacked dims (unit repeats) replicate...
+    lead = leaf.ndim - len(base)
+    spec = (None,) * lead + base
+    if mesh_shape is not None:
+        spec = (None,) * lead + _divisible(None, leaf.shape, base, mesh_shape)
+    # ...unless this pytree carries a leading replica dim.
+    if replica_axis is not None and leaf.ndim >= 1:
+        spec = (replica_axis,) + spec[1:]
+    return P(*spec)
+
+
+def build_param_specs(params: Any, mesh, *, model_axis="model", fsdp_axis=None,
+                      replica_axis=None) -> Any:
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh,
+            param_spec(path, leaf, model_axis=model_axis, fsdp_axis=fsdp_axis,
+                       mesh_shape=mesh_shape, replica_axis=replica_axis),
+        ),
+        params,
+    )
+
+
+def kv_cache_spec(leaf_shape, mesh_shape, *, batch_axis="data", model_axis="model") -> P:
+    """Serving-cache sharding. Attention KV leaves are (repeats, B, S, kv, hd);
+    mamba ssm state (repeats, B, H, p, n); conv state (repeats, B, K, C).
+    Shard batch over ``data`` when divisible, else shard the length/head dim;
+    shard kv-heads (or head_dim for MQA) over ``model`` when divisible."""
+    nd = len(leaf_shape)
+    data_n, model_n = mesh_shape[batch_axis], mesh_shape[model_axis]
+    spec = [None] * nd
+    b = leaf_shape[1] if nd >= 2 else 1
+    if nd >= 2 and b % data_n == 0 and b >= data_n:
+        spec[1] = batch_axis
+        data_used = True
+    else:
+        data_used = False
+    if nd == 5:  # (repeats, B, S, kv, hd) attn  OR (repeats, B, H, p, n) ssm
+        # heuristically: dim2 large => S (attn); shard the widest shardable dim
+        if not data_used and leaf_shape[2] % data_n == 0:
+            spec[2] = batch_axis
+        if leaf_shape[3] % model_n == 0:
+            spec[3] = model_axis
+        elif leaf_shape[4] % model_n == 0:
+            spec[4] = model_axis
+    elif nd == 4:  # (repeats, B, K, C) conv state
+        if leaf_shape[3] % model_n == 0:
+            spec[3] = model_axis
+    return P(*spec)
+
+
+def batch_spec(kind: str, *, replica_axis=None, batch_axes=("data",)) -> P:
+    """Token batches: batch dim over the data axes (plus pod in baseline mode)."""
+    if replica_axis is not None:
+        return P(replica_axis, batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+    ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    return P(ax, None)

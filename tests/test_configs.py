@@ -1,0 +1,92 @@
+"""The assigned architecture table, verified field by field."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config, reduced
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment table.
+EXACT = {
+    "mamba2-780m": (48, 1536, None, None, 0, 50280),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+    "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+}
+
+MOE = {
+    "jamba-1.5-large-398b": (16, 2),
+    "kimi-k2-1t-a32b": (384, 8),
+    "phi3.5-moe-42b-a6.6b": (16, 2),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_sizes(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = EXACT[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", list(MOE))
+def test_moe_sizes(arch):
+    cfg = get_config(arch)
+    assert (cfg.moe.n_experts, cfg.moe.top_k) == MOE[arch]
+
+
+def test_mamba2_is_attention_free():
+    cfg = get_config("mamba2-780m")
+    assert set(cfg.layer_kinds()) == {"M"}
+    assert cfg.ssm.d_state == 128  # ssm_state=128 per assignment
+
+
+def test_jamba_interleave_1_to_7():
+    kinds = get_config("jamba-1.5-large-398b").layer_kinds()
+    assert len(kinds) == 72
+    assert kinds.count("A") == 9 and kinds.count("M") == 63  # 1:7
+
+
+def test_input_shapes_exact():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_within_limits(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+
+
+def test_long_context_support_flags():
+    assert get_config("mamba2-780m").supports_long_context()
+    assert get_config("jamba-1.5-large-398b").supports_long_context()
+    assert not get_config("granite-34b").supports_long_context()
+    from repro.configs.phi3_medium_14b import CONFIG_SWA
+
+    assert CONFIG_SWA.supports_long_context()
+
+
+def test_dryrun_skip_rules():
+    from repro.launch.dryrun import should_skip
+
+    assert should_skip("granite-34b", "long_500k") is not None
+    assert should_skip("mamba2-780m", "long_500k") is None
+    assert should_skip("phi3-medium-14b", "long_500k") is None  # SWA variant
+    assert should_skip("whisper-base", "long_500k") is not None
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            assert should_skip(arch, shape) is None

@@ -1,0 +1,157 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sync import easgd_pair_update
+from repro.kernels.easgd_update.ops import easgd_pair_op
+from repro.kernels.easgd_update.ref import easgd_update_ref
+from repro.kernels.embedding_bag.ops import embedding_bag_op
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention.ops import gqa_attention_op
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+class TestEmbeddingBag:
+    @pytest.mark.parametrize("rows,d,n_bags,m", [
+        (64, 128, 8, 1), (100, 16, 32, 4), (512, 48, 17, 3), (1000, 256, 5, 8),
+    ])
+    def test_shapes(self, rows, d, n_bags, m):
+        key = jax.random.PRNGKey(rows + d)
+        table = jax.random.normal(key, (rows, d))
+        idx = jax.random.randint(jax.random.fold_in(key, 1), (n_bags, m), 0, rows)
+        out = embedding_bag_op(table, idx)
+        ref = embedding_bag_ref(table, idx)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        key = jax.random.PRNGKey(7)
+        table = jax.random.normal(key, (128, 128)).astype(dtype)
+        idx = jax.random.randint(jax.random.fold_in(key, 1), (16, 4), 0, 128)
+        out = embedding_bag_op(table, idx)
+        ref = embedding_bag_ref(table, idx)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2)
+
+    def test_batched_bag_dims(self):
+        """(B, F, m) bags, as DLRM uses them."""
+        key = jax.random.PRNGKey(9)
+        table = jax.random.normal(key, (200, 32))
+        idx = jax.random.randint(jax.random.fold_in(key, 1), (4, 6, 2), 0, 200)
+        out = embedding_bag_op(table, idx)
+        assert out.shape == (4, 6, 32)
+        ref = embedding_bag_ref(table, idx.reshape(-1, 2)).reshape(4, 6, 32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+    def test_duplicate_rows_pool(self):
+        table = jnp.eye(8, 128)
+        idx = jnp.asarray([[0, 0, 3]])
+        out = embedding_bag_op(table, idx)
+        assert float(out[0, 0]) == 2.0 and float(out[0, 3]) == 1.0
+
+
+class TestEASGDKernel:
+    @pytest.mark.parametrize("shape", [(130_000,), (257, 33), (64, 64, 3)])
+    @pytest.mark.parametrize("alpha", [0.1, 0.5, 0.9])
+    def test_vs_core_math(self, shape, alpha):
+        key = jax.random.PRNGKey(sum(shape))
+        tree = {"a": jax.random.normal(key, shape), "b": jnp.ones((5,))}
+        tree2 = jax.tree.map(lambda x: x * 2 + 1, tree)
+        ps1, wi1 = easgd_pair_op(tree, tree2, alpha)
+        ps2, wi2 = easgd_pair_update(tree, tree2, alpha)
+        for a, b in zip(jax.tree.leaves((ps1, wi1)), jax.tree.leaves((ps2, wi2))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+    def test_flat_kernel_vs_ref(self):
+        key = jax.random.PRNGKey(3)
+        a = jax.random.normal(key, (2048, 128))
+        b = jax.random.normal(jax.random.fold_in(key, 1), (2048, 128))
+        from repro.kernels.easgd_update.easgd_update import easgd_update
+
+        k_ps, k_wi = easgd_update(a, b, 0.3, block=512, interpret=True)
+        r_ps, r_wi = easgd_update_ref(a, b, 0.3)
+        np.testing.assert_allclose(np.asarray(k_ps), np.asarray(r_ps), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(k_wi), np.asarray(r_wi), rtol=1e-5, atol=1e-6)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,h,kv,d", [
+        (128, 4, 4, 64), (256, 4, 2, 64), (256, 8, 1, 128), (384, 2, 2, 32),
+    ])
+    def test_causal_gqa(self, s, h, kv, d):
+        key = jax.random.PRNGKey(s + h)
+        q = jax.random.normal(key, (2, s, h, d), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, kv, d), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, kv, d), jnp.float32)
+        out = gqa_attention_op(q, k, v, causal=True)
+        rep = h // kv
+        kr, vr = jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2)
+        ref = attention_ref(
+            q.transpose(0, 2, 1, 3).reshape(2 * h, s, d),
+            kr.transpose(0, 2, 1, 3).reshape(2 * h, s, d),
+            vr.transpose(0, 2, 1, 3).reshape(2 * h, s, d),
+        ).reshape(2, h, s, d).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    def test_noncausal(self):
+        key = jax.random.PRNGKey(11)
+        q = jax.random.normal(key, (1, 128, 2, 64))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 64))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 64))
+        out = gqa_attention_op(q, k, v, causal=False)
+        ref = attention_ref(q.transpose(0, 2, 1, 3).reshape(2, 128, 64),
+                            k.transpose(0, 2, 1, 3).reshape(2, 128, 64),
+                            v.transpose(0, 2, 1, 3).reshape(2, 128, 64),
+                            causal=False).reshape(1, 2, 128, 64).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    def test_unaligned_seq_padding(self):
+        """S not a multiple of the block: wrapper pads and slices."""
+        key = jax.random.PRNGKey(13)
+        q = jax.random.normal(key, (1, 100, 2, 64))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 100, 2, 64))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 100, 2, 64))
+        out = gqa_attention_op(q, k, v, causal=True)
+        ref = gqa_attention_op(q, k, v, causal=True, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4), (jnp.bfloat16, 3e-2)])
+    def test_dtypes(self, dtype, tol):
+        key = jax.random.PRNGKey(17)
+        q = jax.random.normal(key, (1, 128, 2, 64)).astype(dtype)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 64)).astype(dtype)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 64)).astype(dtype)
+        out = gqa_attention_op(q, k, v, causal=True)
+        ref = gqa_attention_op(q, k, v, causal=True, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+class TestInteractionKernel:
+    @pytest.mark.parametrize("b,f,d", [(64, 9, 16), (128, 27, 64), (100, 5, 32)])
+    def test_vs_ref(self, b, f, d):
+        from repro.kernels.interaction.ops import interaction_op
+        from repro.kernels.interaction.ref import interaction_ref
+
+        key = jax.random.PRNGKey(b + f)
+        z = jax.random.normal(key, (b, f, d))
+        out = interaction_op(z)
+        ref = interaction_ref(z)
+        assert out.shape == (b, f * (f - 1) // 2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    def test_matches_dlrm_interact(self):
+        """The kernel computes exactly the dot features of models.dlrm.interact."""
+        from repro.kernels.interaction.ops import interaction_op
+        from repro.models.dlrm import interact
+
+        key = jax.random.PRNGKey(3)
+        bottom = jax.random.normal(key, (16, 8))
+        pooled = jax.random.normal(jax.random.fold_in(key, 1), (16, 4, 8))
+        full = interact(bottom, pooled)  # (B, d + n_pairs)
+        z = jnp.concatenate([bottom[:, None, :], pooled], axis=1)
+        dots = interaction_op(z)
+        np.testing.assert_allclose(np.asarray(full[:, 8:]), np.asarray(dots),
+                                   rtol=1e-5, atol=1e-5)

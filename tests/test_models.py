@@ -1,0 +1,202 @@
+"""Per-architecture smoke tests (reduced configs) + decode/forward parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, reduced
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.roofline.params import active_param_count, param_count
+
+SEQ = 64
+BATCH = 2
+
+
+def make_inputs(cfg, key):
+    batch = {"tokens": jax.random.randint(key, (BATCH, SEQ), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (BATCH, cfg.frontend.n_tokens, cfg.d_model)) * 0.1
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (BATCH, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced variant of each assigned arch: one forward + one train step on CPU;
+    output shapes correct, loss finite, params updated, no NaNs."""
+    from repro import optim
+    from repro.core import spmd
+
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = spmd.init_params(cfg, key)
+    batch = make_inputs(cfg, key)
+
+    if cfg.family == "audio":
+        loss = W.loss_fn(params, cfg, batch)
+    else:
+        logits, aux = T.forward(params, cfg, batch["tokens"],
+                                prefix_embeds=batch.get("prefix_embeds"))
+        n_prefix = cfg.frontend.n_tokens if cfg.family == "vlm" else 0
+        assert logits.shape == (BATCH, SEQ + n_prefix, T.padded_vocab(cfg))
+        assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
+        loss = T.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+
+    opt = optim.adam(1e-3)
+    step = jax.jit(spmd.make_train_step(cfg, opt, "syncdp"))
+    p2, _, loss2 = step(params, opt.init(params), batch)
+    assert np.isfinite(float(loss2))
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert moved, "train step did not update parameters"
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in jax.tree.leaves(p2))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if a != "whisper-base"])
+def test_decode_matches_forward(arch):
+    """serve_step (1 token + cache) reproduces full-sequence logits — attention,
+    SSM state, hybrid, MoE, and VLM caches all round-trip."""
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    tokens = jax.random.randint(key, (BATCH, 32), 0, cfg.vocab_size)
+    pe = None
+    n_prefix = 0
+    if cfg.family == "vlm":
+        pe = jax.random.normal(key, (BATCH, cfg.frontend.n_tokens, cfg.d_model)) * 0.1
+        n_prefix = cfg.frontend.n_tokens
+    logits, _ = T.forward(params, cfg, tokens, prefix_embeds=pe)
+    if cfg.family == "vlm":
+        # decode path: prefill the image+prompt, then decode token-by-token
+        last, cache = T.prefill(params, cfg, tokens[:, :16], 32 + n_prefix, prefix_embeds=pe)
+        np.testing.assert_allclose(
+            np.asarray(last), np.asarray(logits[:, n_prefix + 15, :]), atol=2e-3)
+        return
+    cache = T.init_cache(cfg, BATCH, 32)
+    step = jax.jit(lambda c, tok, pos: T.decode_step(params, cfg, c, tok, pos))
+    outs = []
+    for t in range(32):
+        lg, cache = step(cache, tokens[:, t], jnp.asarray(t, jnp.int32))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(logits[..., : cfg.vocab_size]), atol=5e-4)
+
+
+def test_whisper_decode_matches_full():
+    cfg = reduced(get_config("whisper-base"))
+    key = jax.random.PRNGKey(2)
+    params = W.init_params(cfg, key)
+    frames = jax.random.normal(key, (BATCH, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
+    tokens = jax.random.randint(key, (BATCH, 16), 0, cfg.vocab_size)
+    enc = W.encode(params, cfg, frames)
+    full = W.decode_full(params, cfg, tokens, enc)
+    cache = W.init_cache(cfg, BATCH, 16)
+    cache = {"self": cache["self"], "cross": W.build_cross_cache(params, cfg, enc)}
+    step = jax.jit(lambda c, tok, pos: W.decode_step(params, cfg, c, tok, pos))
+    outs = []
+    for t in range(16):
+        lg, cache = step(cache, tokens[:, t], jnp.asarray(t, jnp.int32))
+        outs.append(lg)
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs, 1)),
+        np.asarray(full[..., : cfg.vocab_size]), atol=5e-4)
+
+
+def test_prefill_handoff_matches_decode():
+    """prefill(cache) then decode continues exactly like pure decode."""
+    cfg = reduced(get_config("jamba-1.5-large-398b"))
+    key = jax.random.PRNGKey(3)
+    params = T.init_params(cfg, key)
+    tokens = jax.random.randint(key, (BATCH, 24), 0, cfg.vocab_size)
+    # ground truth: full forward
+    logits, _ = T.forward(params, cfg, tokens)
+    # prefill the first 16, decode the rest
+    last, cache = T.prefill(params, cfg, tokens[:, :16], 24)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(logits[:, 15, :]), atol=5e-4)
+    step = jax.jit(lambda c, tok, pos: T.decode_step(params, cfg, c, tok, pos))
+    for t in range(16, 24):
+        lg, cache = step(cache, tokens[:, t], jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(logits[:, t, : cfg.vocab_size]), atol=5e-4)
+
+
+def test_sliding_window_masks_history():
+    """Sliding-window attention ignores tokens beyond the window."""
+    import dataclasses
+
+    cfg = dataclasses.replace(reduced(get_config("phi3-medium-14b")), sliding_window=8)
+    key = jax.random.PRNGKey(4)
+    params = T.init_params(cfg, key)
+    t1 = jax.random.randint(key, (1, 32), 0, cfg.vocab_size)
+    t2 = t1.at[:, :8].set((t1[:, :8] + 7) % cfg.vocab_size)  # perturb distant history
+    l1, _ = T.forward(params, cfg, t1)
+    l2, _ = T.forward(params, cfg, t2)
+    # Influence of tokens 0..7 propagates at most n_layers*(window-1) positions
+    # through the stack: unaffected beyond 7 + 2*7 = 21.
+    horizon = 7 + cfg.n_layers * (cfg.sliding_window - 1) + 1
+    np.testing.assert_allclose(
+        np.asarray(l1[:, horizon:]), np.asarray(l2[:, horizon:]), atol=1e-4)
+    assert float(jnp.max(jnp.abs(l1[:, :8] - l2[:, :8]))) > 1e-3
+
+
+def test_mamba2_ssd_matches_sequential_recurrence():
+    """Chunked SSD == naive O(L) recurrence (the state-space duality)."""
+    from repro.models import mamba2
+
+    cfg = reduced(get_config("mamba2-780m"))
+    key = jax.random.PRNGKey(5)
+    p = mamba2.mamba2_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, cfg.d_model)) * 0.5
+    y_chunked = mamba2.mamba2_apply(p, x, cfg)
+    # sequential: run decode steps feeding the same inputs
+    cache = mamba2.init_mamba_cache(cfg, 1, jnp.float32)
+    step = jax.jit(lambda c, xt: mamba2.mamba2_decode(p, xt, cfg, c))
+    ys = []
+    for t in range(64):
+        yt, cache = step(cache, x[:, t : t + 1, :])
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_load_balance_loss_positive_and_bounded():
+    cfg = reduced(get_config("phi3.5-moe-42b-a6.6b"))
+    from repro.models.moe import moe_apply, moe_init
+
+    key = jax.random.PRNGKey(6)
+    p = moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 32, cfg.d_model))
+    y, aux = moe_apply(p, x, cfg)
+    assert y.shape == x.shape
+    assert 0.0 < float(aux) < 10.0 * cfg.moe.load_balance_coef * cfg.moe.n_experts
+
+
+def test_param_counts_match_eval_shape():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    total = param_count(cfg)
+    active = active_param_count(cfg)
+    assert 30e9 < total < 60e9, total / 1e9  # ~42B
+    assert active < total
+    assert 4e9 < active < 12e9, active / 1e9  # ~6.6B active
+
+
+def test_vocab_padding_masked():
+    cfg = reduced(get_config("minicpm-2b"))  # vocab 512 in reduced... force odd
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, vocab_size=300)
+    params = T.init_params(cfg, jax.random.PRNGKey(7))
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (1, 16), 0, 300)
+    logits, _ = T.forward(params, cfg, tokens)
+    assert logits.shape[-1] == 512  # padded to 256-multiple
+    assert bool(jnp.all(logits[..., 300:] < -1e29))

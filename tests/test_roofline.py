@@ -1,0 +1,115 @@
+"""Roofline analysis unit tests: HLO collective parsing + term math + the
+calibrated EPS throughput model's paper-claim checks."""
+import numpy as np
+import pytest
+
+from benchmarks.eps_model import ClusterModel
+from repro.roofline import analysis as RA
+from repro.roofline.params import active_param_count, param_count
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = f32[1024,256]{1,0} all-gather(%x), channel_id=1, replica_groups={{0,1},{2,3}}
+  %ar = bf16[64,64]{1,0} all-reduce(%y), channel_id=2, to_apply=%sum
+  %aa = (f32[8,16], f32[8,16]) all-to-all(%a, %b), channel_id=3
+  %cp = f32[32]{0} collective-permute(%z), channel_id=4
+  %dot = f32[10,10]{1,0} dot(%p, %q)
+}
+"""
+
+
+class TestCollectiveParse:
+    def test_bytes_per_kind(self):
+        c = RA.collective_bytes(HLO_SAMPLE)
+        assert c["all-gather"] == 1024 * 256 * 4
+        assert c["all-reduce"] == 64 * 64 * 2 * 2  # bf16, x2 for RS+AG phases
+        assert c["all-to-all"] == 2 * 8 * 16 * 4  # tuple result
+        assert c["collective-permute"] == 32 * 4
+        assert c["reduce-scatter"] == 0
+
+    def test_non_collectives_ignored(self):
+        c = RA.collective_bytes("%d = f32[64,64] dot(%a, %b)\n")
+        assert sum(c.values()) == 0
+
+
+class TestRooflineTerms:
+    def _r(self, **kw):
+        base = dict(arch="a", shape="s", mesh="m", mode="syncdp", chips=256,
+                    flops_per_chip=197e12, bytes_per_chip=819e9,
+                    collective_bytes_per_chip=50e9, collectives={},
+                    arg_bytes=0, temp_bytes=0, out_bytes=0, model_flops=0.0)
+        base.update(kw)
+        return RA.Roofline(**base)
+
+    def test_unit_terms(self):
+        r = self._r()
+        assert r.t_compute == pytest.approx(1.0)
+        assert r.t_memory == pytest.approx(1.0)
+        assert r.t_collective == pytest.approx(1.0)
+
+    def test_bottleneck_attribution(self):
+        assert self._r(collective_bytes_per_chip=500e9).bottleneck == "collective"
+        assert self._r(bytes_per_chip=9e12).bottleneck == "memory"
+        assert self._r(flops_per_chip=1e15, bytes_per_chip=1e9,
+                       collective_bytes_per_chip=1e9).bottleneck == "compute"
+
+    def test_useful_ratio(self):
+        r = self._r(model_flops=197e12 * 256 * 0.75)
+        assert r.useful_flops_ratio == pytest.approx(0.75)
+
+
+class TestModelFlops:
+    def test_dense_6nd(self):
+        from repro.configs.base import INPUT_SHAPES, get_config
+
+        cfg = get_config("granite-20b")
+        mf = RA.model_flops_estimate(cfg, INPUT_SHAPES["train_4k"])
+        n = param_count(cfg)
+        assert mf == pytest.approx(6.0 * n * 256 * 4096)
+
+    def test_moe_active_params(self):
+        from repro.configs.base import get_config
+
+        cfg = get_config("kimi-k2-1t-a32b")
+        total, active = param_count(cfg), active_param_count(cfg)
+        assert 0.8e12 < total < 1.3e12, total / 1e12  # ~1T
+        assert 20e9 < active < 60e9, active / 1e9  # ~32B active
+
+    def test_decode_counts_one_token(self):
+        from repro.configs.base import INPUT_SHAPES, get_config
+
+        cfg = get_config("granite-20b")
+        mf = RA.model_flops_estimate(cfg, INPUT_SHAPES["decode_32k"])
+        assert mf == pytest.approx(2.0 * param_count(cfg) * 128)
+
+
+class TestEPSModel:
+    """The Fig-5 fluid model must reproduce every paper-reported behaviour."""
+
+    def setup_method(self):
+        self.m = ClusterModel()
+
+    def test_fr5_2ps_plateaus_near_14(self):
+        eps = [self.m.fr_eps(n, 5, 2) for n in range(5, 21)]
+        # growth stops: EPS at 20 trainers barely above EPS at 14
+        assert eps[-1] < eps[14 - 5] * 1.10
+
+    def test_fr30_linear(self):
+        assert self.m.fr_eps(20, 30, 2) > 0.95 * self.m.shadow_eps(20)
+
+    def test_four_ps_fixes_plateau(self):
+        assert self.m.fr_eps(20, 5, 4) > 0.95 * self.m.shadow_eps(20)
+
+    def test_shadow_always_linear(self):
+        for n in (5, 10, 20, 40):
+            assert self.m.shadow_eps(n) == pytest.approx(n * self.m.eps_0)
+
+    def test_shadow_gap_grows_with_n(self):
+        gaps = [self.m.shadow_avg_sync_gap(n, 2) for n in range(15, 21)]
+        assert all(b > a for a, b in zip(gaps, gaps[1:]))
+        assert 3 < gaps[0] < 30  # same order as paper's 8.60..12.48
+
+    def test_hogwild_saturates(self):
+        e12, e24, e64 = (self.m.hogwild_eps(t) for t in (12, 24, 64))
+        assert e24 / e12 < 1.9
+        assert e64 / e24 < 1.25

@@ -1,0 +1,168 @@
+"""Unit + property tests for the ShadowSync algorithms (paper Algorithms 2-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sync as S
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tree_close(a, b, atol=1e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+def make_stack(key, R=4, shape=(5, 3)):
+    return {"w": jax.random.normal(key, (R,) + shape),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (R, shape[0]))}
+
+
+class TestEASGD:
+    def test_pair_update_closed_form(self):
+        w_ps = {"w": jnp.ones((3,))}
+        w_i = {"w": jnp.zeros((3,))}
+        new_ps, new_wi = S.easgd_pair_update(w_ps, w_i, alpha=0.5)
+        # ps' = 0.5*1 + 0.5*0 = 0.5 ; wi' = 0.5*0 + 0.5*0.5 = 0.25
+        np.testing.assert_allclose(new_ps["w"], 0.5)
+        np.testing.assert_allclose(new_wi["w"], 0.25)
+
+    def test_asymmetry(self):
+        """After the exchange, PS and replica are NOT equal (paper §3.3)."""
+        key = jax.random.PRNGKey(0)
+        w_ps = {"w": jax.random.normal(key, (7,))}
+        w_i = {"w": jax.random.normal(jax.random.fold_in(key, 1), (7,))}
+        new_ps, new_wi = S.easgd_pair_update(w_ps, w_i, alpha=0.3)
+        assert float(jnp.max(jnp.abs(new_ps["w"] - new_wi["w"]))) > 1e-3
+
+    @settings(max_examples=30, deadline=None)
+    @given(alpha=st.floats(0.05, 0.95), seed=st.integers(0, 2**30))
+    def test_contraction(self, alpha, seed):
+        """The elastic exchange contracts ||w_ps - w_i|| for any alpha in (0,1)."""
+        key = jax.random.PRNGKey(seed)
+        w_ps = {"w": jax.random.normal(key, (11,))}
+        w_i = {"w": jax.random.normal(jax.random.fold_in(key, 1), (11,))}
+        d0 = float(jnp.linalg.norm(w_ps["w"] - w_i["w"]))
+        new_ps, new_wi = S.easgd_pair_update(w_ps, w_i, alpha)
+        d1 = float(jnp.linalg.norm(new_ps["w"] - new_wi["w"]))
+        assert d1 <= d0 + 1e-6
+
+    def test_round_mask(self):
+        """Replicas whose shadow clock did not fire are untouched."""
+        key = jax.random.PRNGKey(1)
+        stack = make_stack(key)
+        w_ps = jax.tree.map(jnp.zeros_like, S.tree_slice(stack, 0))
+        mask = jnp.asarray([True, False, True, False])
+        new_stack, new_ps = S.easgd_round(stack, w_ps, 0.5, mask=mask)
+        tree_close(S.tree_slice(new_stack, 1), S.tree_slice(stack, 1))
+        tree_close(S.tree_slice(new_stack, 3), S.tree_slice(stack, 3))
+        assert float(jnp.max(jnp.abs(new_stack["w"][0] - stack["w"][0]))) > 1e-6
+
+    def test_round_sequential_semantics(self):
+        """PS is updated between replicas (trainer 2 sees trainer 1's push)."""
+        stack = {"w": jnp.asarray([[1.0], [2.0]])}
+        w_ps = {"w": jnp.asarray([0.0])}
+        new_stack, new_ps = S.easgd_round(stack, w_ps, 0.5)
+        # step 1: ps=0.5, w0=0.75 ; step 2: ps=(0.5+2)/2=1.25, w1=(2+1.25)/2=1.625
+        np.testing.assert_allclose(new_ps["w"], [1.25])
+        np.testing.assert_allclose(new_stack["w"], [[0.75], [1.625]])
+
+    def test_snapshot_semantics(self):
+        """PS pulls toward the LAUNCH snapshot; pull-back lands on current."""
+        stack = {"w": jnp.asarray([[4.0]])}
+        snap = {"w": jnp.asarray([[2.0]])}
+        w_ps = {"w": jnp.asarray([0.0])}
+        new_stack, new_ps = S.easgd_round(stack, w_ps, 0.5, snapshot=snap)
+        np.testing.assert_allclose(new_ps["w"], [1.0])  # toward snapshot 2.0
+        np.testing.assert_allclose(new_stack["w"], [[2.5]])  # (4 + 1)/2
+
+
+class TestMA:
+    @settings(max_examples=20, deadline=None)
+    @given(alpha=st.floats(0.05, 1.0), seed=st.integers(0, 2**30))
+    def test_preserves_mean(self, alpha, seed):
+        """Elastic pull toward the average never moves the average."""
+        stack = make_stack(jax.random.PRNGKey(seed))
+        new = S.ma_round(stack, alpha)
+        tree_close(S.replica_mean(new), S.replica_mean(stack), atol=1e-5)
+
+    def test_alpha_one_is_hard_average(self):
+        stack = make_stack(jax.random.PRNGKey(2))
+        new = S.ma_round(stack, alpha=1.0)
+        mean = S.replica_mean(stack)
+        for i in range(4):
+            tree_close(S.tree_slice(new, i), mean, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(alpha=st.floats(0.05, 0.95), seed=st.integers(0, 2**30))
+    def test_reduces_dispersion(self, alpha, seed):
+        stack = make_stack(jax.random.PRNGKey(seed))
+        new = S.ma_round(stack, alpha)
+
+        def disp(s):
+            m = S.replica_mean(s)
+            return sum(float(jnp.sum((x - m_) ** 2)) for x, m_ in
+                       zip(jax.tree.leaves(s), jax.tree.leaves(m)))
+
+        assert disp(new) <= disp(stack) + 1e-6
+
+    def test_snapshot_average(self):
+        """Background MA averages the launch snapshot, not the current stack."""
+        stack = {"w": jnp.asarray([[10.0], [20.0]])}
+        snap = {"w": jnp.asarray([[0.0], [2.0]])}
+        new = S.ma_round(stack, alpha=1.0, snapshot=snap)
+        np.testing.assert_allclose(new["w"], [[1.0], [1.0]])
+
+
+class TestBMUF:
+    def test_state_init_and_step(self):
+        stack = {"w": jnp.asarray([[2.0], [4.0]])}
+        state = S.BMUFState.init({"w": jnp.asarray([0.0])})
+        new_stack, new_state = S.bmuf_round(stack, state, alpha=1.0)
+        # desc = mean(3.0) - 0 = 3; global = 3; replicas -> 3
+        np.testing.assert_allclose(new_state.w_global["w"], [3.0])
+        np.testing.assert_allclose(new_stack["w"], [[3.0], [3.0]])
+
+    def test_paper_n_scaling(self):
+        """Algorithm 4 line 9: w_global += n * w_desc."""
+        stack = {"w": jnp.asarray([[2.0], [4.0]])}
+        state = S.BMUFState.init({"w": jnp.asarray([0.0])})
+        _, new_state = S.bmuf_round(stack, state, alpha=0.5, step_scale_n=True)
+        np.testing.assert_allclose(new_state.w_global["w"], [6.0])  # 2 * 3
+
+    def test_momentum_accumulates(self):
+        stack = {"w": jnp.asarray([[1.0], [1.0]])}
+        state = S.BMUFState.init({"w": jnp.asarray([0.0])})
+        _, st1 = S.bmuf_round(stack, state, alpha=0.0, block_momentum=0.9)
+        _, st2 = S.bmuf_round(stack, st1, alpha=0.0, block_momentum=0.9)
+        v1 = float(st1.velocity["w"][0])
+        v2 = float(st2.velocity["w"][0])
+        assert v2 != pytest.approx(v1)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**30))
+    def test_fixed_point(self, seed):
+        """If all replicas equal w_global, BMUF is a no-op."""
+        key = jax.random.PRNGKey(seed)
+        w = {"w": jax.random.normal(key, (6,))}
+        stack = {"w": jnp.broadcast_to(w["w"], (3, 6))}
+        state = S.BMUFState(w_global=jax.tree.map(lambda x: x.astype(jnp.float32), w),
+                            velocity={"w": jnp.zeros((6,), jnp.float32)})
+        new_stack, new_state = S.bmuf_round(stack, state, alpha=0.7)
+        tree_close(new_stack, stack, atol=1e-5)
+        tree_close(new_state.w_global, state.w_global, atol=1e-5)
+
+
+class TestLerp:
+    @settings(max_examples=20, deadline=None)
+    @given(alpha=st.floats(0.0, 1.0), seed=st.integers(0, 2**30))
+    def test_lerp_bounds(self, alpha, seed):
+        """lerp stays within the segment endpoints elementwise."""
+        key = jax.random.PRNGKey(seed)
+        a = jax.random.normal(key, (8,))
+        b = jax.random.normal(jax.random.fold_in(key, 1), (8,))
+        out = S.lerp(a, b, alpha)
+        lo, hi = jnp.minimum(a, b), jnp.maximum(a, b)
+        assert bool(jnp.all(out >= lo - 1e-6) and jnp.all(out <= hi + 1e-6))

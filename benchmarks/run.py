@@ -1,10 +1,11 @@
-"""Benchmark driver: one function per paper table/figure + kernels + roofline.
+"""Benchmark driver: one function per paper table/figure + kernels + sync + roofline.
 
 Prints human-readable tables followed by a ``name,us_per_call,derived`` CSV
 (one row per benchmark entry).
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run --only fig5 # one table/figure
+  PYTHONPATH=src python -m benchmarks.run --only sync --json  # + BENCH_sync.json
 """
 from __future__ import annotations
 
@@ -14,7 +15,9 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|roofline")
+                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|sync|roofline")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_sync.json (sync bench results) to the cwd")
     args = ap.parse_args()
 
     from benchmarks.kernel_bench import bench_kernels
@@ -23,6 +26,7 @@ def main() -> None:
         bench_fig8_hogwild, bench_table1_elp, bench_table2_quality,
     )
     from benchmarks.roofline_report import bench_roofline
+    from benchmarks.sync_bench import bench_sync
 
     benches = [
         ("table1", bench_table1_elp),
@@ -32,6 +36,8 @@ def main() -> None:
         ("fig7", bench_fig7_shadow_algos),
         ("fig8", bench_fig8_hogwild),
         ("kernel", bench_kernels),
+        ("sync", lambda: bench_sync(
+            json_path="BENCH_sync.json" if args.json else None)),
         ("roofline", bench_roofline),
     ]
     rows = []

@@ -1,8 +1,75 @@
-"""Make `repro` (src layout) and `benchmarks` importable under bare `pytest`."""
+"""Make `repro` (src layout) and `benchmarks` importable under bare `pytest`,
+and provide a minimal `hypothesis` fallback when the real package is absent
+(the container does not ship it; tests only use `given` + `settings` +
+`st.floats`/`st.integers`). The fallback runs each property test over a
+deterministic sample grid — the real hypothesis, when installed, wins."""
 import os
+import random
 import sys
 
 _ROOT = os.path.dirname(os.path.abspath(__file__))
 for p in (_ROOT, os.path.join(_ROOT, "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import inspect
+    import itertools
+    import types
+
+    class _Floats:
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def sample(self, rng, k):
+            edge = [self.lo, self.hi]
+            return edge + [rng.uniform(self.lo, self.hi) for _ in range(max(k - 2, 0))]
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def sample(self, rng, k):
+            edge = [self.lo, self.hi]
+            return edge + [rng.randint(self.lo, self.hi) for _ in range(max(k - 2, 0))]
+
+    def _given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_stub_max_examples", 10)
+                n = min(n, 10)  # keep the fallback grid cheap
+                rng = random.Random(fn.__qualname__)
+                names = sorted(strategies)
+                columns = [strategies[name].sample(rng, n) for name in names]
+                for row in itertools.islice(zip(*columns), n):
+                    fn(*args, **dict(zip(names, row)), **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            # hide the strategy params so pytest doesn't look for fixtures
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies
+            ])
+            return wrapper
+        return deco
+
+    def _settings(**kw):
+        def deco(fn):
+            if "max_examples" in kw:
+                fn._stub_max_examples = kw["max_examples"]
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.floats = _Floats
+    _st.integers = _Integers
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

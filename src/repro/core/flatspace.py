@@ -1,0 +1,130 @@
+"""Flat replica-space: the persistent packed parameter layout the sync engine
+runs on (DESIGN.md §3).
+
+The dense replica pytree is packed ONCE at init into a contiguous
+``(R, n_rows, 128)`` fp32 buffer — 128 is the TPU lane width, ``n_rows`` is
+padded up to a whole number of kernel blocks — and every background sync
+becomes a single fused Pallas launch over that buffer:
+
+* no per-sync ``jax.tree.map`` fan-out over leaves,
+* no per-sync concat+pad flatten (the old ``easgd_update/ops._flatten``),
+* launch snapshots are one contiguous copy (EASGD) or one replica-mean
+  reduction (MA/BMUF — the landing only ever reads the snapshot's mean,
+  so the snapshot itself shrinks from R*N to N floats),
+* the buffer layout is donation-friendly: the training step consumes and
+  re-emits the same contiguous block, so XLA can update it in place.
+
+Packing casts every leaf to fp32 (the sync algorithms do their math in fp32
+anyway); unpacking restores each leaf's dtype and shape. The round trip is
+lossless for float32/bfloat16/float16 leaves because fp32 is a superset of
+both half formats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+LANE = 128  # TPU lane width: last dim of every flat buffer
+DEFAULT_BLOCK = 256  # fp32 sublane-aligned rows per kernel grid block
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpace:
+    """Static description of the packed layout for one replica's pytree.
+
+    Built once from a template pytree (arrays or ShapeDtypeStructs); the
+    pack/unpack methods are pure jnp and jit/vmap-friendly, so runners can
+    fuse them into their train step while the sync path stays flat.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    total: int  # live parameters per replica
+    n_rows: int  # padded rows of LANE floats (multiple of `block`)
+    block: int  # kernel grid block height (rows)
+
+    @classmethod
+    def from_tree(cls, tree: Pytree, block: int = DEFAULT_BLOCK) -> "FlatSpace":
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            raise ValueError("FlatSpace needs at least one leaf")
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+        total = int(sum(sizes))
+        n_rows = max(1, -(-total // (LANE * block))) * block
+        return cls(treedef, shapes, dtypes, sizes, total, n_rows, block)
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def slots(self) -> int:
+        """fp32 slots per replica row-plane (>= total; tail is zero padding)."""
+        return self.n_rows * LANE
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_rows // self.block
+
+    def buffer_bytes(self, n_replicas: int) -> int:
+        return n_replicas * self.slots * 4
+
+    # -- single replica -----------------------------------------------------
+    def pack(self, tree: Pytree) -> jnp.ndarray:
+        """Pytree -> contiguous (n_rows, LANE) fp32 plane."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        flat = jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in leaves]
+        )
+        flat = jnp.pad(flat, (0, self.slots - self.total))
+        return flat.reshape(self.n_rows, LANE)
+
+    def unpack(self, plane: jnp.ndarray) -> Pytree:
+        """(n_rows, LANE) plane -> pytree with original shapes/dtypes."""
+        vec = plane.reshape(-1)[: self.total]
+        out, off = [], 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes, self.sizes):
+            out.append(vec[off : off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    # -- replica stacks -----------------------------------------------------
+    def pack_stack(self, stack: Pytree) -> jnp.ndarray:
+        """Pytree with leading replica dim R -> (R, n_rows, LANE) fp32 buffer."""
+        leaves = jax.tree_util.tree_leaves(stack)
+        R = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.reshape(R, -1).astype(jnp.float32) for l in leaves], axis=1
+        )
+        flat = jnp.pad(flat, ((0, 0), (0, self.slots - self.total)))
+        return flat.reshape(R, self.n_rows, LANE)
+
+    def unpack_stack(self, buf: jnp.ndarray) -> Pytree:
+        """(R, n_rows, LANE) buffer -> pytree stack with leading replica dim."""
+        R = buf.shape[0]
+        vec = buf.reshape(R, -1)[:, : self.total]
+        out, off = [], 0
+        for shape, dtype, size in zip(self.shapes, self.dtypes, self.sizes):
+            out.append(vec[:, off : off + size].reshape((R,) + shape).astype(dtype))
+            off += size
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def unpack_replica(self, buf: jnp.ndarray, i: int) -> Pytree:
+        return self.unpack(buf[i])
+
+    def broadcast(self, tree: Pytree, n_replicas: int) -> jnp.ndarray:
+        """Pack one pytree and replicate it into a fresh (R, n_rows, LANE) buffer."""
+        plane = self.pack(tree)
+        return jnp.broadcast_to(plane, (n_replicas,) + plane.shape).copy()
+
+
+# Contiguous launch snapshot: one fused copy of the whole replica buffer
+# (vs the old per-leaf jax.tree.map(jnp.copy, ...) fan-out).
+snapshot = jax.jit(lambda buf: buf.copy())

@@ -14,6 +14,13 @@ Two runtimes:
   threads (jitted compute releases the GIL), a genuinely racing shared embedding
   state, and a shadow thread that syncs continuously in the background at
   whatever cadence it achieves — the paper's Algorithm 1 verbatim.
+
+Both runners default to the FLAT sync engine (DESIGN.md §3): dense replicas
+live in a persistent ``(R, n_rows, 128)`` fp32 buffer (core/flatspace.py) and
+every background sync is one fused Pallas launch — the launch snapshot is a
+single contiguous copy (EASGD) or a single replica-mean plane (MA/BMUF).
+``SyncConfig(engine="pytree")`` selects the pure jax.tree.map path in
+core/sync.py, which the flat kernels are tested against.
 """
 from __future__ import annotations
 
@@ -27,12 +34,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sync as S
+from repro.core.flatspace import LANE, FlatSpace
 from repro.data import ctr
 from repro.embeddings import table as emb
+from repro.kernels.bmuf_update import ops as bmuf_ops
+from repro.kernels.easgd_update import ops as easgd_ops
+from repro.kernels.ma_update import ops as ma_ops
 from repro.models import dlrm
 from repro.optim import Optimizer
 
 Pytree = Any
+
+
+def _dense_flatspace(cfg) -> FlatSpace:
+    """Layout of the DLRM dense replica space, from shapes only (no init)."""
+    shapes = jax.eval_shape(
+        lambda: dlrm.init_dense(cfg, jax.random.PRNGKey(0))
+    )
+    return FlatSpace.from_tree(shapes)
 
 
 # ---------------------------------------------------------------------------
@@ -41,11 +60,13 @@ Pytree = Any
 
 @dataclass
 class SimState:
-    w_stack: Pytree  # (R, ...) dense replicas
+    # Dense replicas: pytree stack with leading R (engine="pytree") or a
+    # persistent (R, n_rows, 128) fp32 flat buffer (engine="flat").
+    w_stack: Pytree
     opt_stack: Pytree
     emb_state: Pytree  # shared {"table", "acc"}
-    w_ps: Optional[Pytree]  # EASGD central copy
-    bmuf: Optional[S.BMUFState]
+    w_ps: Optional[Pytree]  # EASGD central copy (flat: (n_rows, 128) plane)
+    bmuf: Optional[S.BMUFState]  # flat engine: leaves are (n_rows, 128) planes
     step: int
 
 
@@ -63,13 +84,15 @@ class HogwildSim:
         seed: int = 0,
     ):
         self.cfg = cfg
-        self.sync_cfg = sync_cfg
+        self.sync_cfg = sync_cfg.validate()
+        self.engine = sync_cfg.engine
         self.R, self.M, self.B = n_trainers, n_threads, batch_size
         self.opt = optimizer
         self.emb_lr = emb_lr
         self.seed = seed
         self.spec = emb.spec_from_config(cfg)
         self.teacher = ctr.make_teacher(cfg, seed=seed + 777)
+        self.flat = _dense_flatspace(cfg) if self.engine == "flat" else None
         self._build()
 
     # -- jitted pieces ------------------------------------------------------
@@ -90,7 +113,7 @@ class HogwildSim:
             (w, opt_state), _ = jax.lax.scan(apply_one, (w, opt_state), g_w)
             return w, opt_state, jnp.mean(loss), g_pooled
 
-        def train_iter(state_w, state_opt, emb_state, batch):
+        def train_core(state_w, state_opt, emb_state, batch):
             # batch leaves: (R, M, B, ...)
             idx = batch["sparse"]
             pooled = emb.lookup(
@@ -107,22 +130,53 @@ class HogwildSim:
             emb2 = emb.sparse_adagrad_update(emb_state, spec, flat_idx, flat_g, self.emb_lr)
             return w2, opt2, emb2, jnp.mean(loss)
 
-        self._train_iter = jax.jit(train_iter, donate_argnums=(0, 1, 2))
-        self._easgd = jax.jit(
-            lambda ws, ps, mask, snap: S.easgd_round(
-                ws, ps, self.sync_cfg.alpha, mask=mask, snapshot=snap
-            )
-        )
-        self._ma = jax.jit(
-            lambda ws, snap: S.ma_round(ws, self.sync_cfg.alpha, snapshot=snap)
-        )
         sc = self.sync_cfg
-        self._bmuf = jax.jit(
-            lambda ws, st, snap: S.bmuf_round(
-                ws, st, sc.alpha, eta=sc.eta, block_momentum=sc.block_momentum,
-                nesterov=sc.nesterov, snapshot=snap,
+        if self.engine == "flat":
+            fs = self.flat
+
+            def train_iter(w_buf, state_opt, emb_state, batch):
+                # unpack -> train -> repack stays inside one jit: XLA fuses the
+                # layout moves with the optimizer update, and the donated flat
+                # buffer is re-emitted contiguously.
+                w2, opt2, emb2, loss = train_core(
+                    fs.unpack_stack(w_buf), state_opt, emb_state, batch
+                )
+                return fs.pack_stack(w2), opt2, emb2, loss
+
+            # Fused sync launches (ops are jitted; alpha etc. are static).
+            # EASGD launch snapshot: gather ONLY the fired rows (compact
+            # (F, n, 128) copy) — un-fired replicas are never consumed.
+            self._gather_rows = jax.jit(lambda buf, idx: buf[idx])
+            self._mean_flat = lambda buf: ma_ops.replica_mean_op(buf, block=fs.block)
+            self._easgd_flat = lambda buf, ps, snap, fired: easgd_ops.easgd_round_op(
+                buf, ps, snap, fired, sc.alpha, block=fs.block
             )
-        )
+            self._ma_flat = lambda buf, mean: ma_ops.ma_sync_op(
+                buf, mean, sc.alpha, block=fs.block
+            )
+            self._bmuf_flat = lambda buf, mean, wg, vel: bmuf_ops.bmuf_sync_op(
+                buf, mean, wg, vel, sc.alpha, eta=sc.eta,
+                block_momentum=sc.block_momentum, nesterov=sc.nesterov,
+                block=fs.block,
+            )
+        else:
+            train_iter = train_core
+            self._easgd = jax.jit(
+                lambda ws, ps, mask, snap: S.easgd_round(
+                    ws, ps, sc.alpha, mask=mask, snapshot=snap
+                )
+            )
+            self._ma = jax.jit(
+                lambda ws, snap: S.ma_round(ws, sc.alpha, snapshot=snap)
+            )
+            self._bmuf = jax.jit(
+                lambda ws, st, snap: S.bmuf_round(
+                    ws, st, sc.alpha, eta=sc.eta, block_momentum=sc.block_momentum,
+                    nesterov=sc.nesterov, snapshot=snap,
+                )
+            )
+
+        self._train_iter = jax.jit(train_iter, donate_argnums=(0, 1, 2))
 
         def eval_batch(w, emb_state, batch):
             pooled = emb.lookup(emb_state, spec, batch["sparse"])
@@ -136,12 +190,22 @@ class HogwildSim:
         key = jax.random.PRNGKey(self.seed)
         kw, ke = jax.random.split(key)
         w0 = dlrm.init_dense(self.cfg, kw)
-        w_stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (self.R,) + x.shape).copy(), w0)
+        emb_state = emb.init_tables(self.spec, ke)
         opt0 = self.opt.init(w0)
         opt_stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (self.R,) + x.shape).copy(), opt0)
-        emb_state = emb.init_tables(self.spec, ke)
-        w_ps = jax.tree.map(lambda x: x.copy(), w0) if self.sync_cfg.centralized() else None
-        bmuf = S.BMUFState.init(w0) if self.sync_cfg.algo == "bmuf" else None
+        if self.engine == "flat":
+            fs = self.flat
+            w_stack = fs.broadcast(w0, self.R)  # packed ONCE here
+            w_ps = fs.pack(w0) if self.sync_cfg.centralized() else None
+            bmuf = (
+                S.BMUFState(w_global=fs.pack(w0),
+                            velocity=jnp.zeros((fs.n_rows, LANE), jnp.float32))
+                if self.sync_cfg.algo == "bmuf" else None
+            )
+        else:
+            w_stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (self.R,) + x.shape).copy(), w0)
+            w_ps = jax.tree.map(lambda x: x.copy(), w0) if self.sync_cfg.centralized() else None
+            bmuf = S.BMUFState.init(w0) if self.sync_cfg.algo == "bmuf" else None
         return SimState(w_stack, opt_stack, emb_state, w_ps, bmuf, 0)
 
     def make_batch(self, it: int) -> Dict[str, jnp.ndarray]:
@@ -158,6 +222,22 @@ class HogwildSim:
         gap = self.sync_cfg.gap
         offs = (np.arange(self.R) * gap) // max(self.R, 1)
         return ((t + offs) % gap) == 0
+
+    def _launch_snapshot(self, st: SimState, mask: np.ndarray) -> Pytree:
+        """State captured when a background sync launches (lands `delay` later).
+
+        Flat engine: EASGD gathers a compact (F, n_rows, 128) copy of only the
+        FIRED replicas' rows; for the decentralized algorithms the landing
+        only consumes the snapshot's replica-mean, so the snapshot IS that
+        (n_rows, 128) mean plane.
+        """
+        if self.engine == "flat":
+            if self.sync_cfg.algo == "easgd":
+                fired = np.flatnonzero(np.asarray(mask))
+                return self._gather_rows(st.w_stack, jnp.asarray(fired, jnp.int32))
+            return self._mean_flat(st.w_stack)
+        # pytree: real deep copy (train_iter donates its buffers)
+        return jax.tree.map(jnp.copy, st.w_stack)
 
     def run(self, n_iters: int, *, log_every: int = 0,
             on_iter: Optional[Callable[[int, float], None]] = None) -> Dict[str, Any]:
@@ -185,8 +265,8 @@ class HogwildSim:
                 if pending is None:
                     mask = self._shadow_schedule(t + 1)
                     if mask.any():
-                        snap = jax.tree.map(jnp.copy, st.w_stack)  # launch snapshot (real copy: train donates buffers)
-                        pending = (t + 1 + sc.delay, snap, mask)
+                        pending = (t + 1 + sc.delay,
+                                   self._launch_snapshot(st, mask), mask)
             st.step = t + 1
             if on_iter:
                 on_iter(t, losses[-1])
@@ -200,6 +280,8 @@ class HogwildSim:
         }
 
     def _apply_sync(self, st: SimState, snap, mask) -> SimState:
+        if self.engine == "flat":
+            return self._apply_sync_flat(st, snap, mask)
         sc = self.sync_cfg
         mask_arr = jnp.asarray(mask) if mask is not None else jnp.ones((self.R,), bool)
         if sc.algo == "easgd":
@@ -212,10 +294,54 @@ class HogwildSim:
             raise ValueError(sc.algo)
         return st
 
+    def _apply_sync_flat(self, st: SimState, snap, mask) -> SimState:
+        """One fused kernel launch per landing; `snap` is a buffer copy for
+        EASGD, a replica-mean plane for MA/BMUF, or None (fixed-rate: sync
+        against the current buffer)."""
+        sc = self.sync_cfg
+        if sc.algo == "easgd":
+            fired = (np.arange(self.R) if mask is None
+                     else np.flatnonzero(np.asarray(mask)))
+            if fired.size == 0:
+                return st
+            fired = jnp.asarray(fired, jnp.int32)
+            # snap is a compact (F, n, 128) gather of the fired rows; the
+            # fixed-rate path (snap=None) gathers from the current buffer —
+            # stack is donated to the fused round, so the snapshot is always
+            # a separate buffer.
+            if snap is None:
+                snap = self._gather_rows(st.w_stack, fired)
+            st.w_stack, st.w_ps = self._easgd_flat(st.w_stack, st.w_ps, snap, fired)
+        elif sc.algo == "ma":
+            mean = snap if snap is not None else self._mean_flat(st.w_stack)
+            st.w_stack = self._ma_flat(st.w_stack, mean)
+        elif sc.algo == "bmuf":
+            mean = snap if snap is not None else self._mean_flat(st.w_stack)
+            st.w_stack, wg, vel = self._bmuf_flat(
+                st.w_stack, mean, st.bmuf.w_global, st.bmuf.velocity
+            )
+            st.bmuf = S.BMUFState(w_global=wg, velocity=vel)
+        else:
+            raise ValueError(sc.algo)
+        return st
+
+    def replica_params(self, st: SimState, i: int) -> Pytree:
+        """Replica i's dense weights as a pytree, whatever the engine."""
+        if self.engine == "flat":
+            return self.flat.unpack_replica(st.w_stack, i)
+        return S.tree_slice(st.w_stack, i)
+
+    def dense_stack(self, st: SimState) -> Pytree:
+        """The dense replica stack as an engine-independent pytree (leading R)
+        — the stable on-disk / external representation."""
+        if self.engine == "flat":
+            return self.flat.unpack_stack(st.w_stack)
+        return st.w_stack
+
     def evaluate(self, st: SimState, n_batches: int = 20, batch_size: int = 4096,
                  replica: int = 0) -> float:
         """Paper protocol: evaluate the FIRST trainer's replica."""
-        w = S.tree_slice(st.w_stack, replica)
+        w = self.replica_params(st, replica)
         tot = 0.0
         for i in range(n_batches):
             b = ctr.gen_batch(self.cfg, self.teacher, self.seed + 10_000_000, i, batch_size)
@@ -232,12 +358,19 @@ class ThreadedShadowRunner:
 
     The embedding state is read-modify-written WITHOUT a lock (Hogwild: concurrent
     trainers can lose updates — that is the point). Dense replicas are owned by
-    their trainer; the shadow thread interpolates them in the background."""
+    their trainer; the shadow thread interpolates them in the background.
+
+    Flat engine: each replica is one contiguous (n_rows, 128) fp32 plane. The
+    shadow thread's exchange is a single kernel launch per round — EASGD pairs
+    run the fused kernel directly on the planes, and a decentralized round is
+    slice-free: one fused mean over the R planes, then per-plane elastic
+    pull-backs (no host-side per-leaf jnp.stack / tree_slice rebuild)."""
 
     def __init__(self, cfg, sync_cfg: S.SyncConfig, *, n_trainers: int,
                  batch_size: int, optimizer: Optimizer, emb_lr: float = 0.05,
                  seed: int = 0, sync_sleep_s: float = 0.0):
-        self.cfg, self.sync_cfg = cfg, sync_cfg
+        self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
+        self.engine = sync_cfg.engine
         self.R, self.B = n_trainers, batch_size
         self.opt = optimizer
         self.emb_lr = emb_lr
@@ -245,6 +378,7 @@ class ThreadedShadowRunner:
         self.sync_sleep_s = sync_sleep_s
         self.spec = emb.spec_from_config(cfg)
         self.teacher = ctr.make_teacher(cfg, seed=seed + 777)
+        self.flat = _dense_flatspace(cfg) if self.engine == "flat" else None
         spec = self.spec
 
         def train_one(w, opt_state, emb_table, batch):
@@ -255,23 +389,56 @@ class ThreadedShadowRunner:
             w, opt_state = optimizer.update(w, opt_state, g_w)
             return w, opt_state, loss, g_pooled
 
-        self._train_one = jax.jit(train_one)
         self._emb_update = jax.jit(
             lambda st, idx, g: emb.sparse_adagrad_update(st, spec, idx, g, emb_lr)
         )
-        self._easgd_pair = jax.jit(
-            lambda ps, w: S.easgd_pair_update(ps, w, sync_cfg.alpha)
-        )
-        self._ma = jax.jit(lambda stack: S.ma_round(stack, sync_cfg.alpha))
+
+        if self.engine == "flat":
+            fs = self.flat
+            alpha = sync_cfg.alpha
+
+            def train_one_flat(w_plane, opt_state, emb_table, batch):
+                w, opt_state, loss, g_pooled = train_one(
+                    fs.unpack(w_plane), opt_state, emb_table, batch
+                )
+                return fs.pack(w), opt_state, loss, g_pooled
+
+            self._train_one = jax.jit(train_one_flat)
+            self._easgd_pair = lambda ps, w: easgd_ops.easgd_pair_flat_op(
+                ps, w, alpha, block=fs.block
+            )
+            # Decentralized round, slice-free: the fused replica-mean kernel
+            # over the stacked planes + per-plane pull-back kernel.
+            self._plane_mean = jax.jit(
+                lambda *planes: ma_ops.replica_mean_op(
+                    jnp.stack(planes), block=fs.block
+                )
+            )
+            self._pullback = jax.jit(
+                lambda plane, mean: ma_ops.ma_sync_op(
+                    plane[None], mean, alpha, block=fs.block
+                )[0]
+            )
+        else:
+            self._train_one = jax.jit(train_one)
+            self._easgd_pair = jax.jit(
+                lambda ps, w: S.easgd_pair_update(ps, w, sync_cfg.alpha)
+            )
+            self._ma = jax.jit(lambda stack: S.ma_round(stack, sync_cfg.alpha))
 
     def run(self, iters_per_trainer: int) -> Dict[str, Any]:
         key = jax.random.PRNGKey(self.seed)
         kw, ke = jax.random.split(key)
         w0 = dlrm.init_dense(self.cfg, kw)
-        self.w: List[Pytree] = [jax.tree.map(lambda x: x.copy(), w0) for _ in range(self.R)]
+        if self.engine == "flat":
+            plane0 = self.flat.pack(w0)
+            self.w: List[Pytree] = [plane0.copy() for _ in range(self.R)]
+            self.w_ps = plane0.copy()
+        else:
+            self.w = [jax.tree.map(lambda x: x.copy(), w0) for _ in range(self.R)]
+            self.w_ps = jax.tree.map(lambda x: x.copy(), w0)
         self.opt_states = [self.opt.init(w0) for _ in range(self.R)]
         self.emb_state = emb.init_tables(self.spec, ke)
-        self.w_ps = jax.tree.map(lambda x: x.copy(), w0)
         self.done = False
         self.examples = 0
         self.sync_count = 0
@@ -298,13 +465,21 @@ class ThreadedShadowRunner:
 
         def shadow():
             algo = self.sync_cfg.algo
+            flat = self.engine == "flat"
             while not self.done:
                 if algo == "easgd":
                     for i in range(self.R):
                         ps, wi = self._easgd_pair(self.w_ps, self.w[i])
                         self.w_ps, self.w[i] = ps, wi
                         self.sync_count += 1
-                else:  # decentralized: ma (bmuf analogous, ma used here)
+                elif flat:  # decentralized: ma (bmuf analogous, ma used here)
+                    mean = self._plane_mean(*self.w)
+                    for i in range(self.R):
+                        # lands on the CURRENT plane — trainers kept moving
+                        # while the mean was in flight (paper §3.3).
+                        self.w[i] = self._pullback(self.w[i], mean)
+                    self.sync_count += 1
+                else:
                     stack = jax.tree.map(lambda *xs: jnp.stack(xs), *self.w)
                     new = self._ma(stack)
                     for i in range(self.R):
@@ -325,12 +500,16 @@ class ThreadedShadowRunner:
         shadow_t.join(timeout=5.0)
         wall = time.perf_counter() - t0
         total_iters = sum(self.iter_count)
+        if self.engine == "flat":
+            w_out = [self.flat.unpack(p) for p in self.w]
+        else:
+            w_out = self.w
         return {
             "eps": self.examples / wall,
             "wall_s": wall,
             "train_loss": [float(np.mean(l[-50:])) for l in losses],
             "sync_count": self.sync_count,
             "avg_sync_gap": total_iters / max(self.sync_count, 1),
-            "w": self.w,
+            "w": w_out,
             "emb_state": self.emb_state,
         }

@@ -177,6 +177,18 @@ class SyncConfig:
     eta: float = 1.0
     block_momentum: float = 0.0
     nesterov: bool = False
+    # Sync substrate (DESIGN.md §3). "flat": replicas live in a persistent
+    # (R, n_rows, 128) fp32 buffer (core/flatspace.py) and every sync is one
+    # fused Pallas launch. "pytree": the pure jax.tree.map path above — kept
+    # as the numerical oracle for the fused kernels.
+    engine: str = "flat"  # flat | pytree
 
     def centralized(self) -> bool:
         return self.algo == "easgd"
+
+    def validate(self) -> "SyncConfig":
+        if self.algo not in ("easgd", "ma", "bmuf"):
+            raise ValueError(f"unknown sync algo: {self.algo!r}")
+        if self.engine not in ("flat", "pytree"):
+            raise ValueError(f"unknown sync engine: {self.engine!r}")
+        return self

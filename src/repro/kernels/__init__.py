@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Packages: easgd_update / ma_update / bmuf_update (the flat sync
+# engine's fused per-algorithm launches, DESIGN.md 3), embedding_bag,
+# interaction, flash_attention. `backend.py` resolves interpret-vs-
+# compiled once per process (compiled Pallas on TPU, interpreter
+# elsewhere); wrappers take `interpret=None` to use it.

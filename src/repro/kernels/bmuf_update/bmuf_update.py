@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused BMUF sync (Algorithm 4) on flat replica space.
+
+The pytree path chains mean -> descent -> block-momentum -> global step ->
+(optional Nesterov look-ahead) -> broadcast -> lerp: every N-sized state op
+is a separate HBM round trip and the stack is streamed three more times
+(DESIGN.md §3.3).
+
+Here the whole landing is ONE launch. The N-sized state math (velocity,
+w_global, look-ahead) runs once per block on the first replica grid step and
+the results stay VMEM-resident — revisited output blocks — while every
+replica streams by exactly once for the elastic pull-back:
+
+    read  R*N (stack) + 3N (mean, w_global, velocity)
+    write R*N (stack) + 2N (w_global, velocity)
+
+The replica mean itself is computed at sync-launch time by
+``ma_update.replica_mean`` (it IS the decentralized launch snapshot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.flatspace import LANE
+
+
+def _bmuf_kernel(stack_ref, mean_ref, wg_ref, vel_ref,
+                 out_stack_ref, out_wg_ref, out_vel_ref, *,
+                 alpha: float, eta: float, block_momentum: float,
+                 nesterov: bool, scale: float):
+    i = pl.program_id(1)
+
+    # First replica of this block: run the N-sized global step once; the
+    # results stay resident in the revisited out blocks for i > 0.
+    @pl.when(i == 0)
+    def _():
+        desc = mean_ref[...] - wg_ref[...]
+        vel = block_momentum * vel_ref[...] + eta * scale * desc
+        out_vel_ref[...] = vel
+        out_wg_ref[...] = wg_ref[...] + vel
+
+    vel = out_vel_ref[...]
+    wg = out_wg_ref[...]
+    look = wg + block_momentum * vel if nesterov else wg
+    wi = stack_ref[0].astype(jnp.float32)
+    out_stack_ref[0] = ((1.0 - alpha) * wi + alpha * look).astype(out_stack_ref.dtype)
+
+
+def bmuf_update(
+    stack: jnp.ndarray,
+    mean: jnp.ndarray,
+    w_global: jnp.ndarray,
+    velocity: jnp.ndarray,
+    alpha: float,
+    *,
+    eta: float = 1.0,
+    block_momentum: float = 0.0,
+    nesterov: bool = False,
+    scale: float = 1.0,
+    block: int = 256,
+    interpret: bool = False,
+):
+    """One-launch BMUF landing on flat replica space.
+
+    stack: (R, n, 128); mean, w_global, velocity: (n, 128) fp32.
+    Returns (new_stack, new_w_global, new_velocity).
+    """
+    R, n, lanes = stack.shape
+    assert lanes == LANE and n % block == 0, (stack.shape, block)
+    stack_spec = pl.BlockSpec((1, block, LANE), lambda j, i: (i, j, 0))
+    plane_spec = pl.BlockSpec((block, LANE), lambda j, i: (j, 0))
+    return pl.pallas_call(
+        functools.partial(
+            _bmuf_kernel, alpha=alpha, eta=eta,
+            block_momentum=block_momentum, nesterov=nesterov, scale=scale,
+        ),
+        grid=(n // block, R),
+        in_specs=[stack_spec, plane_spec, plane_spec, plane_spec],
+        out_specs=[stack_spec, plane_spec, plane_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(stack.shape, stack.dtype),
+            jax.ShapeDtypeStruct(w_global.shape, jnp.float32),
+            jax.ShapeDtypeStruct(velocity.shape, jnp.float32),
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(stack, mean, w_global, velocity)

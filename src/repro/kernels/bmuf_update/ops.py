@@ -1,0 +1,36 @@
+"""Jitted BMUF sync entry point over flat replica space: one launch per
+background landing (the launch-time replica mean comes from
+``ma_update.replica_mean_op``)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.bmuf_update.bmuf_update import bmuf_update
+from repro.kernels.bmuf_update.ref import bmuf_update_ref
+
+BLOCK = 256
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 2, 3), static_argnames=(
+    "alpha", "eta", "block_momentum", "nesterov", "scale",
+    "use_pallas", "interpret", "block"))
+def bmuf_sync_op(stack: jnp.ndarray, mean: jnp.ndarray, w_global: jnp.ndarray,
+                 velocity: jnp.ndarray, alpha: float, *, eta: float = 1.0,
+                 block_momentum: float = 0.0, nesterov: bool = False,
+                 scale: float = 1.0, use_pallas: bool = True,
+                 interpret: Optional[bool] = None, block: int = BLOCK,
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused Algorithm-4 landing. Returns (new_stack, new_w_global, new_velocity)."""
+    if use_pallas:
+        return bmuf_update(stack, mean, w_global, velocity, alpha, eta=eta,
+                           block_momentum=block_momentum, nesterov=nesterov,
+                           scale=scale, block=block,
+                           interpret=resolve_interpret(interpret))
+    return bmuf_update_ref(stack, mean, w_global, velocity, alpha, eta=eta,
+                           block_momentum=block_momentum, nesterov=nesterov,
+                           scale=scale)

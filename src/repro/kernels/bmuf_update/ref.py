@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused BMUF landing (== core.sync.bmuf_round given
+a precomputed snapshot mean, on flat replica buffers)."""
+import jax.numpy as jnp
+
+
+def bmuf_update_ref(stack, mean, w_global, velocity, alpha, *,
+                    eta=1.0, block_momentum=0.0, nesterov=False, scale=1.0):
+    desc = mean.astype(jnp.float32) - w_global
+    vel = block_momentum * velocity + eta * scale * desc
+    wg = w_global + vel
+    look = wg + block_momentum * vel if nesterov else wg
+    wi = stack.astype(jnp.float32)
+    new_stack = ((1.0 - alpha) * wi + alpha * look[None]).astype(stack.dtype)
+    return new_stack, wg, vel

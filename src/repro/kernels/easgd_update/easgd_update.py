@@ -1,11 +1,21 @@
-"""Pallas TPU kernel: fused ShadowSync-EASGD exchange.
+"""Pallas TPU kernels: fused ShadowSync-EASGD exchange (Algorithm 2).
 
-Algorithm 2 is two dependent elementwise lerps over the full dense parameter
-vector — pure memory-bandwidth work that the shadow thread runs continuously.
-Unfused, XLA reads w_ps and w_i twice (once per lerp); this kernel streams both
-through VMEM once and writes both results in a single pass: 2 reads + 2 writes
-per element instead of 4 reads + 2 writes (1.5x less HBM traffic on the op the
-background sync is made of).
+Two kernels over flat replica space (core/flatspace.py):
+
+* ``easgd_update`` — one PS<->replica pair exchange. Two dependent elementwise
+  lerps streamed through VMEM in a single pass: 2 reads + 2 writes per element
+  instead of 4 reads + 2 writes unfused.
+
+* ``easgd_round_update`` — a whole masked sequential round in ONE launch.
+  The replica index is a Pallas grid dimension; the *fired* replica ids
+  arrive via scalar prefetch (PrefetchScalarGridSpec) and drive the stack
+  block index maps, so an un-fired replica is never fetched and never
+  written — zero HBM traffic for it. The PS plane is a revisited output
+  block: it stays resident in VMEM while all fired replicas of a block
+  stream past it (sequential Algorithm-2 semantics: replica i+1 sees the
+  PS already moved by replica i), costing one HBM read + one write per
+  block instead of one per replica. Stack and PS are aliased in/out, so
+  un-fired rows keep their buffer contents and the launch updates in place.
 """
 from __future__ import annotations
 
@@ -14,9 +24,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.flatspace import LANE
 
 
-def _kernel(ps_ref, wi_ref, new_ps_ref, new_wi_ref, *, alpha: float):
+def _pair_kernel(ps_ref, wi_ref, new_ps_ref, new_wi_ref, *, alpha: float):
     ps = ps_ref[...].astype(jnp.float32)
     wi = wi_ref[...].astype(jnp.float32)
     new_ps = (1.0 - alpha) * ps + alpha * wi
@@ -31,16 +44,16 @@ def easgd_update(
     alpha: float,
     *,
     block: int = 1024,
-    lanes: int = 128,
+    lanes: int = LANE,
     interpret: bool = False,
 ):
-    """w_ps, w_i: (n, 128)-reshaped flat params. Returns (new_ps, new_wi)."""
+    """w_ps, w_i: (n, 128) flat planes. Returns (new_ps, new_wi)."""
     n, l = w_ps.shape
     assert l == lanes and n % block == 0, (w_ps.shape, block)
     grid = (n // block,)
     spec = pl.BlockSpec((block, lanes), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_kernel, alpha=alpha),
+        functools.partial(_pair_kernel, alpha=alpha),
         grid=grid,
         in_specs=[spec, spec],
         out_specs=(spec, spec),
@@ -50,3 +63,70 @@ def easgd_update(
         ),
         interpret=interpret,
     )(w_ps, w_i)
+
+
+def _round_kernel(fired_ref, stack_ref, snap_ref, ps_ref,
+                  out_stack_ref, out_ps_ref, *, alpha: float):
+    i = pl.program_id(1)  # position in the fired-replica axis (fast axis)
+
+    # First fired replica of this block: seed the resident PS accumulator.
+    @pl.when(i == 0)
+    def _():
+        out_ps_ref[...] = ps_ref[...].astype(jnp.float32)
+
+    ps = out_ps_ref[...]
+    wi = stack_ref[0].astype(jnp.float32)
+    snap = snap_ref[0].astype(jnp.float32)
+    # PS moves toward the launch snapshot; the pull-back lands on the
+    # current (still-moving) replica — paper §3.3.
+    new_ps = (1.0 - alpha) * ps + alpha * snap
+    new_wi = (1.0 - alpha) * wi + alpha * new_ps
+    out_ps_ref[...] = new_ps
+    out_stack_ref[0] = new_wi.astype(out_stack_ref.dtype)
+
+
+def easgd_round_update(
+    stack: jnp.ndarray,
+    w_ps: jnp.ndarray,
+    snapshot: jnp.ndarray,
+    fired: jnp.ndarray,
+    alpha: float,
+    *,
+    block: int = 256,
+    interpret: bool = False,
+):
+    """Masked sequential EASGD round in one launch.
+
+    stack: (R, n, 128) fp32 replica buffer; w_ps: (n, 128) fp32;
+    fired: (F,) int32 replica ids whose shadow clock fired, in exchange order;
+    snapshot: (F, n, 128) fp32 — launch-time copies of the FIRED replicas
+    only, positionally aligned with ``fired`` (un-fired replicas are never
+    consumed, so they are never snapshotted).
+    Returns (new_stack, new_ps); rows not in ``fired`` are bit-identical.
+    """
+    R, n, lanes = stack.shape
+    assert lanes == LANE and n % block == 0, (stack.shape, block)
+    F = fired.shape[0]
+    assert snapshot.shape[0] == F, (snapshot.shape, F)
+    stack_spec = pl.BlockSpec(
+        (1, block, LANE), lambda j, i, fired_ref: (fired_ref[i], j, 0)
+    )
+    snap_spec = pl.BlockSpec((1, block, LANE), lambda j, i, fired_ref: (i, j, 0))
+    ps_spec = pl.BlockSpec((block, LANE), lambda j, i, fired_ref: (j, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block, F),
+        in_specs=[stack_spec, snap_spec, ps_spec],
+        out_specs=[stack_spec, ps_spec],
+    )
+    return pl.pallas_call(
+        functools.partial(_round_kernel, alpha=alpha),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(stack.shape, stack.dtype),
+            jax.ShapeDtypeStruct(w_ps.shape, jnp.float32),
+        ],
+        # operand order incl. scalar prefetch: (fired, stack, snap, ps)
+        input_output_aliases={1: 0, 3: 1},
+        interpret=interpret,
+    )(fired, stack, snapshot, w_ps)

@@ -1,51 +1,72 @@
-"""Jitted wrapper: applies the fused EASGD kernel across a whole parameter pytree
-by flattening + concatenating leaves into one (n, 128) stream (padding the tail),
-so the shadow thread's exchange is a single kernel launch per sync."""
+"""Jitted EASGD entry points over flat replica space.
+
+``easgd_round_op`` / ``easgd_pair_flat_op`` are the runners' native path:
+state already lives in a persistent FlatSpace buffer, so a sync is exactly
+one kernel launch — no flatten, no concat, no padding at sync time.
+
+``easgd_pair_op`` keeps the legacy arbitrary-pytree API (tests, ad-hoc use):
+it packs through FlatSpace per call, which is the cost the flat engine
+exists to avoid.
+"""
 from __future__ import annotations
 
 import functools
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.easgd_update.easgd_update import easgd_update
-from repro.kernels.easgd_update.ref import easgd_update_ref
+from repro.core.flatspace import FlatSpace
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.easgd_update.easgd_update import easgd_round_update, easgd_update
+from repro.kernels.easgd_update.ref import easgd_round_ref, easgd_update_ref
 
-LANE = 128
-BLOCK = 1024
-
-
-def _flatten(tree: Any) -> Tuple[jnp.ndarray, Any, list, int]:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    sizes = [l.size for l in leaves]
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
-    total = flat.size
-    padded = -(-total // (LANE * BLOCK)) * (LANE * BLOCK)
-    flat = jnp.pad(flat, (0, padded - total)).reshape(-1, LANE)
-    return flat, treedef, sizes, total
+BLOCK = 256
 
 
-def _unflatten(flat: jnp.ndarray, treedef, sizes, total, like: Any) -> Any:
-    vec = flat.reshape(-1)[:total]
-    leaves, out, off = jax.tree_util.tree_leaves(like), [], 0
-    for leaf, size in zip(leaves, sizes):
-        out.append(vec[off : off + size].reshape(leaf.shape).astype(leaf.dtype))
-        off += size
-    return jax.tree_util.tree_unflatten(treedef, out)
+@functools.partial(jax.jit, static_argnames=("alpha", "use_pallas", "interpret", "block"))
+def easgd_pair_flat_op(w_ps: jnp.ndarray, w_i: jnp.ndarray, alpha: float, *,
+                       use_pallas: bool = True, interpret: Optional[bool] = None,
+                       block: int = BLOCK) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One PS<->replica exchange on (n, 128) flat planes. NOT donated: the
+    threaded runner's trainer threads may still be reading these planes."""
+    if use_pallas:
+        return easgd_update(w_ps, w_i, alpha, block=block,
+                            interpret=resolve_interpret(interpret))
+    return easgd_update_ref(w_ps, w_i, alpha)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("alpha", "use_pallas", "interpret", "block"))
+def easgd_round_op(stack: jnp.ndarray, w_ps: jnp.ndarray, snapshot: jnp.ndarray,
+                   fired: jnp.ndarray, alpha: float, *, use_pallas: bool = True,
+                   interpret: Optional[bool] = None,
+                   block: int = BLOCK) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked sequential round over a (R, n, 128) replica buffer, one launch.
+
+    ``fired``: (F,) int32 replica ids in exchange order; ``snapshot``:
+    (F, n, 128) launch copies of exactly the fired replicas (positional).
+    Retraces per distinct F (the shadow schedule produces only a handful of
+    fired-set sizes). ``stack`` and ``w_ps`` are donated — the kernel updates
+    them in place; ``snapshot`` must be a separate buffer, never the live
+    stack.
+    """
+    if use_pallas:
+        return easgd_round_update(stack, w_ps, snapshot, fired, alpha,
+                                  block=block, interpret=resolve_interpret(interpret))
+    return easgd_round_ref(stack, w_ps, snapshot, fired, alpha)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "use_pallas", "interpret"))
 def easgd_pair_op(w_ps: Any, w_i: Any, alpha: float, *, use_pallas: bool = True,
-                  interpret: bool = True) -> Tuple[Any, Any]:
-    """Fused Algorithm-2 exchange over arbitrary pytrees."""
-    ps_flat, treedef, sizes, total = _flatten(w_ps)
-    wi_flat, _, _, _ = _flatten(w_i)
+                  interpret: Optional[bool] = None) -> Tuple[Any, Any]:
+    """Fused Algorithm-2 exchange over arbitrary pytrees (packs per call)."""
+    space = FlatSpace.from_tree(w_ps, block=BLOCK)
+    ps_flat = space.pack(w_ps)
+    wi_flat = space.pack(w_i)
     if use_pallas:
-        new_ps, new_wi = easgd_update(ps_flat, wi_flat, alpha, block=BLOCK, interpret=interpret)
+        new_ps, new_wi = easgd_update(ps_flat, wi_flat, alpha, block=space.block,
+                                      interpret=resolve_interpret(interpret))
     else:
         new_ps, new_wi = easgd_update_ref(ps_flat, wi_flat, alpha)
-    return (
-        _unflatten(new_ps, treedef, sizes, total, w_ps),
-        _unflatten(new_wi, treedef, sizes, total, w_i),
-    )
+    return space.unpack(new_ps), space.unpack(new_wi)

@@ -1,5 +1,5 @@
-"""Pure-jnp oracle for the fused EASGD exchange (== core.sync.easgd_pair_update
-on a flat array)."""
+"""Pure-jnp oracles for the fused EASGD kernels (== core.sync math on flat
+planes)."""
 import jax.numpy as jnp
 
 
@@ -9,3 +9,24 @@ def easgd_update_ref(w_ps: jnp.ndarray, w_i: jnp.ndarray, alpha: float):
     new_ps = (1 - alpha) * ps + alpha * wi
     new_wi = (1 - alpha) * wi + alpha * new_ps
     return new_ps.astype(w_ps.dtype), new_wi.astype(w_i.dtype)
+
+
+def easgd_round_ref(stack: jnp.ndarray, w_ps: jnp.ndarray,
+                    snapshot: jnp.ndarray, fired, alpha: float):
+    """Sequential masked round: stack (R, n, 128); snapshot (F, n, 128) holds
+    the FIRED replicas' launch copies, positionally aligned with `fired` (a
+    sequence of replica ids in exchange order, of static LENGTH — the ids
+    themselves may be traced, so this oracle also works under jit)."""
+    fired = jnp.asarray(fired, jnp.int32)
+    ps = w_ps.astype(jnp.float32)
+    if fired.shape[0] == 0:
+        return stack, ps
+    new_rows = []
+    for k in range(fired.shape[0]):
+        i = fired[k]
+        ps = (1 - alpha) * ps + alpha * snapshot[k].astype(jnp.float32)
+        new_rows.append(
+            ((1 - alpha) * stack[i].astype(jnp.float32) + alpha * ps).astype(stack.dtype)
+        )
+    new_stack = stack.at[fired].set(jnp.stack(new_rows))
+    return new_stack, ps

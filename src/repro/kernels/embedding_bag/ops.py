@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
@@ -19,7 +20,7 @@ def embedding_bag_op(
     idx: jnp.ndarray,
     *,
     use_pallas: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """table: (rows, d); idx: (..., m) -> (..., d) sum-pooled lookups."""
     if not use_pallas:
@@ -30,7 +31,7 @@ def embedding_bag_op(
     if pad:
         table = jnp.pad(table, ((0, 0), (0, pad)))
     flat_idx = idx.reshape(-1, idx.shape[-1]).astype(jnp.int32)
-    out = embedding_bag(table, flat_idx, interpret=interpret)
+    out = embedding_bag(table, flat_idx, interpret=resolve_interpret(interpret))
     if pad:
         out = out[:, :d]
     return out.reshape(*idx.shape[:-1], d)

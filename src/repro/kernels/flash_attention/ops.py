@@ -10,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -22,7 +23,7 @@ def gqa_attention_op(
     *,
     causal: bool = True,
     use_pallas: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block: int = 128,
 ) -> jnp.ndarray:
     B, S, H, d = q.shape
@@ -43,6 +44,6 @@ def gqa_attention_op(
             kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
             vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
         out = flash_attention(
-            qf, kf, vf, causal=causal, block_q=block, block_k=block, interpret=interpret
+            qf, kf, vf, causal=causal, block_q=block, block_k=block, interpret=resolve_interpret(interpret)
         )[:, :S]
     return out.reshape(B, H, S, d).transpose(0, 2, 1, 3)

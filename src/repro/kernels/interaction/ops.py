@@ -6,18 +6,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.interaction.interaction import interaction
 from repro.kernels.interaction.ref import interaction_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "batch_tile"))
 def interaction_op(z: jnp.ndarray, *, use_pallas: bool = True,
-                   interpret: bool = True, batch_tile: int = 128) -> jnp.ndarray:
+                   interpret: bool | None = None, batch_tile: int = 128) -> jnp.ndarray:
     if not use_pallas:
         return interaction_ref(z)
     B = z.shape[0]
     pad = (-B) % batch_tile if B >= batch_tile else 0
     if pad:
         z = jnp.pad(z, ((0, pad), (0, 0), (0, 0)))
-    out = interaction(z, batch_tile=batch_tile, interpret=interpret)
+    out = interaction(z, batch_tile=batch_tile, interpret=resolve_interpret(interpret))
     return out[:B]

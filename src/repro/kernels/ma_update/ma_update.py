@@ -1,0 +1,83 @@
+"""Pallas TPU kernels: fused Model-Averaging sync (Algorithm 3) on flat
+replica space.
+
+The pytree path is a mean -> broadcast -> lerp chain: it streams the stack
+once for the mean, materializes an R-wide broadcast, and streams the stack
+again (read + write) for the elastic pull-back — five stack-sized HBM
+streams per sync plus per-leaf launch overhead (DESIGN.md §3.3).
+
+Flat MA splits along the paper's launch/landing boundary instead:
+
+* ``replica_mean`` (launch time) — one grid pass that folds the replica
+  axis into a revisited VMEM accumulator: read R*N, write N. Because the
+  landing only ever consumes the snapshot's *mean*, this IS the launch
+  snapshot for decentralized algorithms — N floats instead of R*N.
+* ``ma_update`` (landing) — one grid pass applying the elastic pull-back:
+  the mean plane stays VMEM-resident per block while every replica streams
+  by once — read R*N + N, write R*N.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.flatspace import LANE
+
+
+def _mean_kernel(stack_ref, out_ref):
+    i = pl.program_id(1)
+    R = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += stack_ref[0].astype(jnp.float32)
+
+    @pl.when(i == R - 1)
+    def _():
+        out_ref[...] *= 1.0 / R
+
+
+def replica_mean(stack: jnp.ndarray, *, block: int = 256,
+                 interpret: bool = False) -> jnp.ndarray:
+    """(R, n, 128) replica buffer -> (n, 128) fp32 mean, one launch."""
+    R, n, lanes = stack.shape
+    assert lanes == LANE and n % block == 0, (stack.shape, block)
+    stack_spec = pl.BlockSpec((1, block, LANE), lambda j, i: (i, j, 0))
+    out_spec = pl.BlockSpec((block, LANE), lambda j, i: (j, 0))
+    return pl.pallas_call(
+        _mean_kernel,
+        grid=(n // block, R),
+        in_specs=[stack_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, LANE), jnp.float32),
+        interpret=interpret,
+    )(stack)
+
+
+def _ma_kernel(stack_ref, mean_ref, out_ref, *, alpha: float):
+    wi = stack_ref[0].astype(jnp.float32)
+    g = mean_ref[...]
+    out_ref[0] = ((1.0 - alpha) * wi + alpha * g).astype(out_ref.dtype)
+
+
+def ma_update(stack: jnp.ndarray, mean: jnp.ndarray, alpha: float, *,
+              block: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """Elastic pull-back of every replica toward ``mean``, one launch."""
+    R, n, lanes = stack.shape
+    assert lanes == LANE and n % block == 0, (stack.shape, block)
+    stack_spec = pl.BlockSpec((1, block, LANE), lambda j, i: (i, j, 0))
+    mean_spec = pl.BlockSpec((block, LANE), lambda j, i: (j, 0))
+    return pl.pallas_call(
+        functools.partial(_ma_kernel, alpha=alpha),
+        grid=(n // block, R),
+        in_specs=[stack_spec, mean_spec],
+        out_specs=stack_spec,
+        out_shape=jax.ShapeDtypeStruct(stack.shape, stack.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(stack, mean)

@@ -1,0 +1,42 @@
+"""Jitted MA sync entry points over flat replica space.
+
+One launch per phase of the paper's background round: ``replica_mean_op`` at
+sync-launch (the snapshot for decentralized algorithms IS the mean) and
+``ma_sync_op`` at landing (elastic pull-back into the current buffer).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.ma_update.ma_update import ma_update, replica_mean
+from repro.kernels.ma_update.ref import ma_update_ref, replica_mean_ref
+
+BLOCK = 256
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "block"))
+def replica_mean_op(stack: jnp.ndarray, *, use_pallas: bool = True,
+                    interpret: Optional[bool] = None,
+                    block: int = BLOCK) -> jnp.ndarray:
+    """(R, n, 128) replica buffer -> (n, 128) fp32 replica mean."""
+    if use_pallas:
+        return replica_mean(stack, block=block, interpret=resolve_interpret(interpret))
+    return replica_mean_ref(stack)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("alpha", "use_pallas", "interpret", "block"))
+def ma_sync_op(stack: jnp.ndarray, mean: jnp.ndarray, alpha: float, *,
+               use_pallas: bool = True, interpret: Optional[bool] = None,
+               block: int = BLOCK) -> jnp.ndarray:
+    """Pull every replica of a (R, n, 128) buffer toward ``mean``, one launch.
+    ``stack`` is donated: the pull-back lands in place."""
+    if use_pallas:
+        return ma_update(stack, mean, alpha, block=block,
+                         interpret=resolve_interpret(interpret))
+    return ma_update_ref(stack, mean, alpha)

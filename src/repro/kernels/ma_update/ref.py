@@ -1,0 +1,13 @@
+"""Pure-jnp oracles for the fused MA kernels (== core.sync.ma_round on flat
+replica buffers)."""
+import jax.numpy as jnp
+
+
+def replica_mean_ref(stack: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(stack.astype(jnp.float32), axis=0)
+
+
+def ma_update_ref(stack: jnp.ndarray, mean: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    wi = stack.astype(jnp.float32)
+    out = (1.0 - alpha) * wi + alpha * mean[None].astype(jnp.float32)
+    return out.astype(stack.dtype)

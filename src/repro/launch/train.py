@@ -62,7 +62,9 @@ def run_dlrm(args) -> dict:
           f"avg_sync_gap {out['avg_sync_gap']:.2f}; EPS(sim wall) {examples/wall:.0f}")
     if args.save:
         st = out["state"]
-        ckpt.save(args.save, {"w": st.w_stack, "opt": st.opt_stack,
+        # engine-independent checkpoint: dense replicas as the named pytree,
+        # not the flat engine's packed buffer
+        ckpt.save(args.save, {"w": sim.dense_stack(st), "opt": st.opt_stack,
                               "emb": st.emb_state},
                   metadata={"step": st.step, "algo": args.algo})
         print(f"checkpoint -> {args.save}")

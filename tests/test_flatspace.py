@@ -1,0 +1,266 @@
+"""Flat replica-space sync engine: layout round-trips, fused-kernel parity
+against the core/sync.py pytree oracle, and end-to-end flat-vs-pytree runner
+equivalence (DESIGN.md §3)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sync as S
+from repro.core.flatspace import LANE, FlatSpace
+from repro.kernels.bmuf_update.ops import bmuf_sync_op
+from repro.kernels.bmuf_update.ref import bmuf_update_ref
+from repro.kernels.easgd_update.ops import easgd_round_op
+from repro.kernels.easgd_update.ref import easgd_round_ref
+from repro.kernels.ma_update.ops import ma_sync_op, replica_mean_op
+from repro.kernels.ma_update.ref import ma_update_ref, replica_mean_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-5, atol=1e-6)
+
+
+def tree_close(a, b, **tol):
+    tol = tol or TOL
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), **tol)
+
+
+# ---------------------------------------------------------------------------
+# Layout: pack -> unpack round trips
+# ---------------------------------------------------------------------------
+
+def _random_tree(key, dtypes):
+    """Nested mixed-dtype pytree with awkward (non-lane-aligned) shapes."""
+    ks = jax.random.split(key, 5)
+    return {
+        "mlp": [
+            {"w": jax.random.normal(ks[0], (13, 37)).astype(dtypes[0]),
+             "b": jax.random.normal(ks[1], (37,)).astype(dtypes[1])},
+            {"w": jax.random.normal(ks[2], (37, 5)).astype(dtypes[2 % len(dtypes)]),
+             "b": jnp.float32(0.25)},  # scalar leaf
+        ],
+        "gain": (jax.random.normal(ks[3], (3, 1, 7)).astype(dtypes[0]),
+                 jax.random.normal(ks[4], (111,)).astype(dtypes[1])),
+    }
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("seed", range(5))
+    @pytest.mark.parametrize("dtypes", [
+        (jnp.float32, jnp.float32, jnp.float32),
+        (jnp.bfloat16, jnp.float32, jnp.float16),
+        (jnp.float16, jnp.bfloat16, jnp.float32),
+    ])
+    def test_pack_unpack_property(self, seed, dtypes):
+        """fp32 packing is lossless for f32/bf16/f16 leaves: unpack(pack(t)) == t
+        exactly, with dtypes and shapes restored."""
+        tree = _random_tree(jax.random.PRNGKey(seed), dtypes)
+        fs = FlatSpace.from_tree(tree)
+        plane = fs.pack(tree)
+        assert plane.shape == (fs.n_rows, LANE) and plane.dtype == jnp.float32
+        assert fs.n_rows % fs.block == 0
+        out = fs.unpack(plane)
+        assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(tree)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_stack_roundtrip(self, seed):
+        tree = _random_tree(jax.random.PRNGKey(seed),
+                            (jnp.float32, jnp.bfloat16, jnp.float32))
+        stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (4,) + jnp.shape(x)), tree)
+        fs = FlatSpace.from_tree(tree)
+        buf = fs.pack_stack(stack)
+        assert buf.shape == (4, fs.n_rows, LANE)
+        out = fs.unpack_stack(buf)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(stack)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        # per-replica view agrees with the stack view
+        one = fs.unpack_replica(buf, 2)
+        tree_close(one, tree)
+
+    def test_padding_is_zero_and_stable(self):
+        tree = {"w": jnp.ones((130,))}
+        fs = FlatSpace.from_tree(tree, block=8)
+        plane = fs.pack(tree)
+        assert fs.total == 130 and fs.slots >= 130
+        np.testing.assert_array_equal(np.asarray(plane.reshape(-1)[130:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernels vs the sync.py pytree oracle
+# ---------------------------------------------------------------------------
+
+def _buffers(key, R=4, n=256):
+    stack = jax.random.normal(key, (R, n, LANE), jnp.float32)
+    snap = jax.random.normal(jax.random.fold_in(key, 1), (R, n, LANE), jnp.float32)
+    ps = jax.random.normal(jax.random.fold_in(key, 2), (n, LANE), jnp.float32)
+    return stack, snap, ps
+
+
+class TestEASGDFlat:
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    @pytest.mark.parametrize("fired", [(0, 1, 2, 3), (1, 3), (2,)])
+    def test_masked_round_vs_oracle(self, fired, use_pallas):
+        """Fired replicas follow sequential Algorithm-2 semantics against the
+        launch snapshot; un-fired replicas are bit-identical."""
+        stack, snap, ps = _buffers(jax.random.PRNGKey(7))
+        fired_arr = jnp.asarray(fired, jnp.int32)
+        # the op donates stack/ps — pass copies so the originals survive;
+        # the snapshot is a compact gather of only the fired rows
+        new_stack, new_ps = easgd_round_op(
+            stack.copy(), ps.copy(), snap[fired_arr], fired_arr, 0.3,
+            use_pallas=use_pallas)
+        ref_stack, ref_ps = easgd_round_ref(stack, ps, snap[fired_arr], fired, 0.3)
+        np.testing.assert_allclose(np.asarray(new_stack), np.asarray(ref_stack), **TOL)
+        np.testing.assert_allclose(np.asarray(new_ps), np.asarray(ref_ps), **TOL)
+        mask = jnp.asarray([i in fired for i in range(4)])
+        o_stack, o_ps = S.easgd_round(
+            {"w": stack}, {"w": ps}, 0.3, mask=mask, snapshot={"w": snap})
+        np.testing.assert_allclose(np.asarray(new_stack), np.asarray(o_stack["w"]), **TOL)
+        np.testing.assert_allclose(np.asarray(new_ps), np.asarray(o_ps["w"]), **TOL)
+        for i in range(4):
+            if i not in fired:
+                assert np.array_equal(np.asarray(new_stack[i]), np.asarray(stack[i]))
+
+    def test_delay_path_snapshot_differs_from_current(self):
+        """PS pulls toward the LAUNCH snapshot while the pull-back lands on the
+        current (moved-on) replica — the §3.3 background semantics."""
+        stack, snap, ps = _buffers(jax.random.PRNGKey(11))
+        fired = jnp.arange(4, dtype=jnp.int32)
+        with_snap, _ = easgd_round_op(stack.copy(), ps.copy(), snap[fired], fired, 0.5)
+        no_snap, _ = easgd_round_op(stack.copy(), ps.copy(), stack[fired], fired, 0.5)
+        assert float(jnp.max(jnp.abs(with_snap - no_snap))) > 1e-3
+
+
+class TestMAFlat:
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    def test_mean_and_pullback_vs_oracle(self, use_pallas):
+        stack, snap, _ = _buffers(jax.random.PRNGKey(3))
+        mean = (replica_mean_op(snap) if use_pallas else replica_mean_ref(snap))
+        new = (ma_sync_op(stack.copy(), mean, 0.4) if use_pallas  # op donates stack
+               else ma_update_ref(stack, mean, 0.4))
+        oracle = S.ma_round({"w": stack}, 0.4, snapshot={"w": snap})
+        np.testing.assert_allclose(np.asarray(new), np.asarray(oracle["w"]), **TOL)
+
+    def test_no_delay_uses_current_stack(self):
+        stack, _, _ = _buffers(jax.random.PRNGKey(4))
+        mean = jnp.mean(stack, axis=0)
+        new = ma_sync_op(stack.copy(), replica_mean_op(stack), 1.0)
+        for i in range(4):
+            np.testing.assert_allclose(np.asarray(new[i]), np.asarray(mean), **TOL)
+
+
+class TestBMUFFlat:
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    @pytest.mark.parametrize("bm,nesterov", [(0.0, False), (0.8, False), (0.9, True)])
+    def test_landing_vs_oracle_multi_round(self, bm, nesterov, use_pallas):
+        """State (w_global, velocity) carries correctly across rounds."""
+        stack, snap, _ = _buffers(jax.random.PRNGKey(5))
+        wg = jnp.mean(stack, axis=0)
+        vel = jnp.zeros_like(wg)
+        # the fused op donates stack/wg/vel — the oracle carries its own copies
+        o_state = S.BMUFState(w_global={"w": wg.copy()}, velocity={"w": vel.copy()})
+        o_stack = {"w": stack.copy()}
+        for r in range(3):
+            mean = replica_mean_op(snap) if use_pallas else replica_mean_ref(snap)
+            if use_pallas:
+                stack, wg, vel = bmuf_sync_op(stack, mean, wg, vel, 0.5,
+                                              eta=0.9, block_momentum=bm,
+                                              nesterov=nesterov)
+            else:
+                stack, wg, vel = bmuf_update_ref(stack, mean, wg, vel, 0.5,
+                                                 eta=0.9, block_momentum=bm,
+                                                 nesterov=nesterov)
+            o_stack, o_state = S.bmuf_round(o_stack, o_state, 0.5, eta=0.9,
+                                            block_momentum=bm, nesterov=nesterov,
+                                            snapshot={"w": snap})
+            # next round's launch snapshot = current state (copy: the fused op
+            # donates `stack`, and the oracle still reads the snapshot)
+            snap = stack.copy()
+        np.testing.assert_allclose(np.asarray(stack), np.asarray(o_stack["w"]), **TOL)
+        np.testing.assert_allclose(np.asarray(wg), np.asarray(o_state.w_global["w"]), **TOL)
+        np.testing.assert_allclose(np.asarray(vel), np.asarray(o_state.velocity["w"]), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: HogwildSim flat engine == pytree engine
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _run_engine(algo, engine, mode="shadow", delay=1, iters=12):
+    from repro import optim
+    from repro.configs import dlrm_ctr
+    from repro.core.runners import HogwildSim
+
+    sim = HogwildSim(
+        dlrm_ctr.tiny(),
+        S.SyncConfig(algo=algo, mode=mode, gap=4, alpha=0.5, delay=delay,
+                     engine=engine),
+        n_trainers=3, n_threads=2, batch_size=32,
+        optimizer=optim.adagrad(0.02),
+        seed=0,
+    )
+    out = sim.run(iters)
+    ev = sim.evaluate(out["state"], n_batches=2, batch_size=256)
+    return tuple(out["train_loss"]), ev, out["sync_count"]
+
+
+@pytest.mark.parametrize("algo", ["easgd", "ma", "bmuf"])
+def test_sim_flat_matches_pytree_shadow(algo):
+    """mode="shadow" exercises the masked + launch-snapshot/delay paths; the
+    two engines must produce numerically equivalent training (fp32 tol)."""
+    loss_f, ev_f, n_f = _run_engine(algo, "flat")
+    loss_p, ev_p, n_p = _run_engine(algo, "pytree")
+    assert n_f == n_p
+    np.testing.assert_allclose(loss_f, loss_p, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(ev_f, ev_p, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("algo", ["easgd", "ma"])
+def test_sim_flat_matches_pytree_fixed_rate(algo):
+    loss_f, ev_f, _ = _run_engine(algo, "flat", mode="fixed_rate")
+    loss_p, ev_p, _ = _run_engine(algo, "pytree", mode="fixed_rate")
+    np.testing.assert_allclose(loss_f, loss_p, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(ev_f, ev_p, rtol=1e-4, atol=1e-5)
+
+
+def test_sim_flat_longer_delay_matches(algo="ma"):
+    loss_f, ev_f, _ = _run_engine(algo, "flat", delay=3)
+    loss_p, ev_p, _ = _run_engine(algo, "pytree", delay=3)
+    np.testing.assert_allclose(loss_f, loss_p, rtol=1e-4, atol=1e-5)
+
+
+def test_invalid_engine_rejected():
+    with pytest.raises(ValueError):
+        S.SyncConfig(engine="sparse").validate()
+
+
+# ---------------------------------------------------------------------------
+# HBM stream accounting (the perf claim sync_bench records per PR)
+# ---------------------------------------------------------------------------
+
+class TestStreamAccounting:
+    @pytest.mark.parametrize("r", [2, 8, 20])
+    def test_flat_strictly_reduces_streams(self, r):
+        from benchmarks.sync_bench import (
+            MIN_STREAM_RATIO, flat_sync_bytes, pytree_sync_bytes)
+
+        n = 512 * 1024
+        for algo in ("easgd", "ma", "bmuf"):
+            ratio = pytree_sync_bytes(algo, r, n) / flat_sync_bytes(algo, r, n)
+            assert ratio >= MIN_STREAM_RATIO[algo], (algo, r, ratio)
+
+    def test_unfired_replicas_cost_nothing(self):
+        from benchmarks.sync_bench import flat_sync_bytes
+
+        n = 1024
+        full = flat_sync_bytes("easgd", 8, n, fired=8)
+        one = flat_sync_bytes("easgd", 8, n, fired=1)
+        assert one < full

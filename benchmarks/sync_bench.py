@@ -1,5 +1,9 @@
 """Per-algorithm sync cost: flat replica-space engine vs pytree path.
 
+Algorithms are auto-discovered from the ``core.algorithms`` registry — a
+newly registered algorithm gets a benchmark row (and a stream-ratio floor
+check against its own ``min_stream_ratio``) without touching this file.
+
 Two numbers per (algo, engine) at DLRM-CTR dense scale (DESIGN.md §3.3):
 
 * wall time of one full background sync cycle (launch snapshot + landing),
@@ -8,7 +12,8 @@ Two numbers per (algo, engine) at DLRM-CTR dense scale (DESIGN.md §3.3):
 * the derived HBM stream count: analytic bytes moved per sync cycle under
   op-level accounting (each op in the chain reads its inputs and writes its
   outputs once; no cross-op fusion — that fusion is exactly what the flat
-  engine's kernels provide).
+  engine's kernels provide). The model itself is algorithm metadata
+  (``pytree_sync_bytes`` / ``flat_sync_bytes``).
 
 `--json` writes BENCH_sync.json so the perf trajectory is recorded per PR.
 
@@ -24,62 +29,30 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import algorithms
+
 R = 8  # trainers
-ALGOS = ("easgd", "ma", "bmuf")
 ALPHA = 0.5
 
-# Acceptance floors: flat must move at least this factor fewer bytes per sync.
-MIN_STREAM_RATIO = {"easgd": 1.5, "ma": 2.0, "bmuf": 2.0}
+ALGOS = algorithms.names()
+
+# Acceptance floors: flat must move at least this factor fewer bytes per
+# sync. Owned by each algorithm (SyncAlgorithm.min_stream_ratio).
+MIN_STREAM_RATIO = {name: algorithms.get(name).min_stream_ratio
+                    for name in ALGOS}
 
 
 # ---------------------------------------------------------------------------
-# Analytic HBM-stream accounting (fp32 bytes per full sync cycle)
+# Analytic HBM-stream accounting (fp32 bytes per full sync cycle) —
+# thin wrappers over the registry, kept for test/back-compat imports.
 # ---------------------------------------------------------------------------
 
-def pytree_sync_bytes(algo: str, r: int, n: int, *, nesterov: bool = False) -> int:
-    """Op-level accounting of core/sync.py per background sync cycle.
-
-    N-sized ops: lerp/where read 2 inputs + write 1; mean reads the stack,
-    writes a mean; broadcast materializes an R-wide operand for the lerp.
-    Launch snapshot is a deep copy of the replica stack (read + write R*N).
-    """
-    rn = r * n
-    if algo == "easgd":
-        # copy(2RN) + per-replica scan: lerp_ps(3N) + lerp_wi(3N)
-        # + masked keep_ps(3N) + keep_wi(3N)
-        slots = 2 * rn + 12 * rn
-    elif algo == "ma":
-        # copy(2RN) + mean(RN+N) + broadcast(N+RN) + lerp(2RN+RN)
-        slots = 2 * rn + (rn + n) + (n + rn) + 3 * rn
-    elif algo == "bmuf":
-        # MA chain + desc/velocity/w_global updates (r 2N + w N each)
-        slots = 2 * rn + (rn + n) + (n + rn) + 3 * rn + 9 * n
-        if nesterov:
-            slots += 3 * n  # look-ahead op
-    else:
-        raise ValueError(algo)
-    return 4 * slots
+def pytree_sync_bytes(algo: str, r: int, n: int) -> int:
+    return algorithms.get(algo).pytree_sync_bytes(r, n)
 
 
 def flat_sync_bytes(algo: str, r: int, n: int, *, fired: Optional[int] = None) -> int:
-    """Flat engine accounting: one contiguous launch snapshot + one fused
-    kernel landing (kernels/{easgd,ma,bmuf}_update)."""
-    rn = r * n
-    f = r if fired is None else fired
-    if algo == "easgd":
-        # fired-rows gather(2FN) + round kernel: r(F*N stack + F*N snap + N ps)
-        # + w(F*N stack + N ps); un-fired replicas cost nothing, at launch OR
-        # landing.
-        slots = 2 * f * n + (2 * f * n + n) + (f * n + n)
-    elif algo == "ma":
-        # launch mean(RN+N) + pull-back kernel(r RN+N, w RN)
-        slots = (rn + n) + (2 * rn + n)
-    elif algo == "bmuf":
-        # launch mean(RN+N) + fused landing(r RN+3N, w RN+2N)
-        slots = (rn + n) + (2 * rn + 5 * n)
-    else:
-        raise ValueError(algo)
-    return 4 * slots
+    return algorithms.get(algo).flat_sync_bytes(r, n, fired=fired)
 
 
 def stream_ratio(algo: str, r: int, n: int) -> float:
@@ -102,9 +75,6 @@ def bench_sync(json_path: Optional[str] = None) -> List[Tuple[str, float, str]]:
     from repro.configs import dlrm_ctr
     from repro.core import sync as S
     from repro.core.flatspace import LANE, FlatSpace
-    from repro.kernels.bmuf_update.ref import bmuf_update_ref
-    from repro.kernels.easgd_update.ref import easgd_round_ref
-    from repro.kernels.ma_update.ref import ma_update_ref, replica_mean_ref
     from repro.models import dlrm
 
     cfg = dlrm_ctr.CONFIG  # paper-scale dense MLPs (~0.5M params/replica)
@@ -115,55 +85,48 @@ def bench_sync(json_path: Optional[str] = None) -> List[Tuple[str, float, str]]:
     stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (R,) + x.shape) + 0.0, w0)
     buf = fs.broadcast(w0, R)
     plane = fs.pack(w0)
-    vel = jnp.zeros_like(plane)
-    bmuf_state = S.BMUFState.init(w0)
-    all_fired = tuple(range(R))
 
     # launch + landing, two jitted calls each — mirrors the runners
     snap_tree = jax.jit(lambda ws: jax.tree.map(jnp.copy, ws))
-    pytree_land = {
-        "easgd": jax.jit(lambda ws, snap: S.easgd_round(ws, w0, ALPHA, snapshot=snap)),
-        "ma": jax.jit(lambda ws, snap: S.ma_round(ws, ALPHA, snapshot=snap)),
-        "bmuf": jax.jit(lambda ws, snap: S.bmuf_round(ws, bmuf_state, ALPHA, snapshot=snap)),
-    }
-    fired_idx = jnp.arange(R, dtype=jnp.int32)
-    snap_flat_gather = jax.jit(lambda b: b[fired_idx])  # easgd: fired rows only
-    snap_flat_mean = jax.jit(replica_mean_ref)
-    flat_land = {
-        "easgd": jax.jit(lambda b, ps, snap: easgd_round_ref(b, ps, snap, all_fired, ALPHA)),
-        "ma": jax.jit(lambda b, mean: ma_update_ref(b, mean, ALPHA)),
-        "bmuf": jax.jit(lambda b, mean: bmuf_update_ref(b, mean, plane, vel, ALPHA)),
-    }
 
     print("\n== Background-sync cycle: flat engine vs pytree path "
           f"(R={R}, N={fs.total:,} params -> {n:,} slots) ==")
     rows: List[Tuple[str, float, str]] = []
     results: Dict[str, Dict[str, float]] = {}
-    for algo in ALGOS:
-        us_py = _time(snap_tree, stack) + _time(pytree_land[algo], stack, stack)
+    for name in ALGOS:
+        algo = algorithms.get(name)
+        sc = S.SyncConfig(algo=name, alpha=ALPHA)
 
-        us_fl = _time(snap_flat_gather if algo == "easgd" else snap_flat_mean, buf)
-        if algo == "easgd":
-            us_fl += _time(flat_land[algo], buf, plane, buf)
-        else:
-            mean = snap_flat_mean(buf)
-            us_fl += _time(flat_land[algo], buf, mean)
+        # pytree cycle: deep-copy snapshot + jitted oracle landing
+        state_py = algo.init_state(w0, sc)
+        land_py = jax.jit(
+            lambda ws, st_, snap, _a=algo, _sc=sc: _a.land(ws, st_, snap, None, _sc))
+        us_py = _time(snap_tree, stack) + _time(land_py, stack, state_py, stack)
+
+        # flat cycle: the algorithm's non-donating jitted oracle refs
+        state_fl = algo.init_state_flat(plane, sc, fs)
+        snap_fn, land_fn = algo.flat_ref_fns(sc, fs)
+        us_fl = _time(snap_fn, buf)
+        snap = snap_fn(buf)
+        us_fl += _time(land_fn, buf, state_fl, snap)
 
         # Same N (padded slots) for both engines so the ratio compares like
         # units; the padding overhead itself is recorded in the JSON config.
-        b_py = pytree_sync_bytes(algo, R, n)
-        b_fl = flat_sync_bytes(algo, R, n)
+        b_py = algo.pytree_sync_bytes(R, n)
+        b_fl = algo.flat_sync_bytes(R, n)
         ratio = b_py / b_fl
-        assert ratio >= MIN_STREAM_RATIO[algo], (algo, ratio)
-        rows.append((f"sync/{algo}_pytree", us_py, f"{b_py / 1e6:.1f} MB/sync"))
-        rows.append((f"sync/{algo}_flat", us_fl,
+        assert ratio >= algo.min_stream_ratio, (name, ratio)
+        rows.append((f"sync/{name}_pytree", us_py, f"{b_py / 1e6:.1f} MB/sync"))
+        rows.append((f"sync/{name}_flat", us_fl,
                      f"{b_fl / 1e6:.1f} MB/sync ({ratio:.2f}x fewer streams)"))
-        results[algo] = {
+        results[name] = {
             "pytree_us": us_py, "flat_us": us_fl,
             "pytree_bytes": b_py, "flat_bytes": b_fl,
             "stream_ratio": ratio, "wall_speedup": us_py / max(us_fl, 1e-9),
+            "snapshot_kind": algo.snapshot_kind,
+            "centralized": algo.centralized,
         }
-        print(f"  {algo:6s}  pytree {us_py:9.1f} us  flat {us_fl:9.1f} us  "
+        print(f"  {name:6s}  pytree {us_py:9.1f} us  flat {us_fl:9.1f} us  "
               f"({us_py / max(us_fl, 1e-9):4.2f}x wall)   "
               f"streams {b_py / 1e6:7.1f} -> {b_fl / 1e6:7.1f} MB ({ratio:.2f}x fewer)")
 
@@ -172,7 +135,8 @@ def bench_sync(json_path: Optional[str] = None) -> List[Tuple[str, float, str]]:
             "bench": "sync_bench",
             "config": {"R": R, "params_per_replica": fs.total,
                        "flat_slots": n, "padding_overhead": n / fs.total,
-                       "alpha": ALPHA, "lane": LANE},
+                       "alpha": ALPHA, "lane": LANE,
+                       "algorithms": list(ALGOS)},
             "results": results,
         }
         with open(json_path, "w") as f:

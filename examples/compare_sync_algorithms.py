@@ -1,5 +1,6 @@
-"""Compare S-EASGD / S-BMUF / S-MA and their fixed-rate counterparts
-(paper §4.2-4.3 scaled down).
+"""Compare every registered sync algorithm, shadow vs fixed-rate
+(paper §4.2-4.3 scaled down). The sweep is driven by the algorithm
+registry, so a newly registered algorithm shows up here for free.
 
     PYTHONPATH=src python examples/compare_sync_algorithms.py
 """
@@ -7,6 +8,7 @@ import numpy as np
 
 from repro import optim
 from repro.configs import dlrm_ctr
+from repro.core import algorithms
 from repro.core.runners import HogwildSim
 from repro.core.sync import SyncConfig
 
@@ -24,7 +26,7 @@ def run(algo, mode, alpha=0.5):
 
 def main():
     print(f"{'method':16s} {'train':>8s} {'eval':>8s}")
-    for algo in ("easgd", "bmuf", "ma"):
+    for algo in algorithms.names():
         tr, ev = run(algo, "shadow")
         print(f"S-{algo.upper():14s} {tr:8.5f} {ev:8.5f}")
         tr, ev = run(algo, "fixed_rate")

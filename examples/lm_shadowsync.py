@@ -15,7 +15,7 @@ import numpy as np
 
 from repro import optim
 from repro.configs.base import ARCH_IDS, get_config, reduced
-from repro.core import spmd
+from repro.core import algorithms, spmd
 from repro.core.sync import SyncConfig
 from repro.data import tokens as tok
 
@@ -23,6 +23,7 @@ from repro.data import tokens as tok
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), default="mamba2-780m")
+    ap.add_argument("--algo", choices=list(algorithms.names()), default="ma")
     ap.add_argument("--iters", type=int, default=80)
     ap.add_argument("--gap", type=int, default=5)
     args = ap.parse_args()
@@ -36,7 +37,9 @@ def main():
         lambda x: jnp.broadcast_to(x[None], (R,) + x.shape).copy(), opt.init(params))
 
     train_step = jax.jit(spmd.make_train_step(cfg, opt, "shadow"))
-    sync_step = jax.jit(spmd.make_sync_step(cfg, SyncConfig(algo="ma", alpha=0.5)))
+    sync_cfg = SyncConfig(algo=args.algo, alpha=0.5).validate()
+    sync_step = jax.jit(spmd.make_sync_step(cfg, sync_cfg))
+    algo_state = algorithms.get(args.algo).init_state(params, sync_cfg)
 
     trans = tok.make_transition(cfg.vocab_size, 0)
     losses = []
@@ -52,11 +55,12 @@ def main():
         stack, opt_stack, loss = train_step(stack, opt_stack, batch)
         losses.append(float(jnp.mean(loss)))
         if (it + 1) % args.gap == 0:
-            stack = sync_step(stack)  # the background program
+            stack, algo_state = sync_step(stack, algo_state)  # the background program
         if (it + 1) % 20 == 0:
             print(f"iter {it+1}: loss {np.mean(losses[-20:]):.4f}")
     print(f"\n{args.arch}: {np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f} "
-          f"(2 replicas, Shadow-MA, zero cross-replica traffic in train_step)")
+          f"(2 replicas, Shadow-{args.algo.upper()}, "
+          f"zero cross-replica traffic in train_step)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,605 @@
+"""Pluggable sync-algorithm API: one registry powering all three substrates.
+
+The paper's framework claim is that ShadowSync is "generic to host various
+types of synchronization algorithms". This module makes that claim an API:
+a ``SyncAlgorithm`` bundles an algorithm's full lifecycle for BOTH sync
+engines plus its analytic cost model, and a global registry
+(``register`` / ``get`` / ``names``) is the ONLY dispatch point — the
+runners (`core/runners.py`), the SPMD sync step (`core/spmd.py`), the
+launcher (`launch/train.py`), and the benchmark (`benchmarks/sync_bench.py`)
+are all algorithm-agnostic. Adding an algorithm is one registry entry; it
+immediately runs in HogwildSim (flat + pytree), ThreadedShadowRunner, the
+SPMD sync_step, and the sync benchmark. See DESIGN.md §6.
+
+Lifecycle hooks (state is OPAQUE to every caller — ``SimState.algo_state``):
+
+* ``init_state(w0, cfg)`` / ``init_state_flat(plane0, cfg, fs)`` — per-run
+  algorithm state (EASGD: the sync-PS copy; BMUF: global model + block
+  momentum; gossip: the round counter; MA: None).
+* ``land(stack, state, snap, mask, cfg)`` — the pytree oracle: pure,
+  jit-friendly math over replica stacks (leading dim R). ``snap`` is the
+  launch snapshot (None: sync against the current stack), ``mask`` the
+  fired-replica mask (None: all). Algorithms are free to ignore ``mask``
+  (the decentralized mean algorithms treat every landing as global).
+* ``launch_snapshot_flat(buf, mask, cfg, fs)`` / ``land_flat(...)`` — the
+  flat-engine path: host-level hooks that dispatch the fused Pallas kernels
+  (`kernels/{easgd,ma,bmuf,gossip}_update`). The base class provides a
+  correct (unfused) fallback that routes through the pytree oracle, so a
+  new algorithm only NEEDS the oracle; fused kernels are an override.
+* ``make_shadow_round(cfg, fs)`` — builds the ThreadedShadowRunner's
+  background round: a host callable mutating the per-trainer planes/pytrees
+  in place while trainer threads keep moving (Algorithm 1).
+* ``make_sync_step(cfg)`` — the SPMD background program: a pure jittable
+  ``(params_stack, algo_state) -> (params_stack, algo_state)`` owning all
+  cross-replica traffic.
+* ``pytree_sync_bytes`` / ``flat_sync_bytes`` / ``min_stream_ratio`` /
+  ``flat_ref_fns`` — the analytic HBM-stream model and CPU-timeable oracle
+  callables consumed by ``benchmarks/sync_bench.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flatspace
+from repro.core import sync as S
+from repro.core.flatspace import LANE, FlatSpace
+from repro.kernels.bmuf_update import ops as bmuf_ops
+from repro.kernels.bmuf_update.ref import bmuf_update_ref
+from repro.kernels.easgd_update import ops as easgd_ops
+from repro.kernels.easgd_update.ref import easgd_round_ref
+from repro.kernels.gossip_update import ops as gossip_ops
+from repro.kernels.ma_update import ops as ma_ops
+from repro.kernels.ma_update.ref import ma_update_ref, replica_mean_ref
+
+Pytree = Any
+
+_gather = jax.jit(lambda buf, idx: buf[idx])
+
+
+def _fired_ids(mask, R: int) -> np.ndarray:
+    return np.arange(R) if mask is None else np.flatnonzero(np.asarray(mask))
+
+
+def _stack_planes(ws: List[jnp.ndarray]) -> jnp.ndarray:
+    return jnp.stack(ws)
+
+
+def _stack_trees(ws: List[Pytree]) -> Pytree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ws)
+
+
+# ---------------------------------------------------------------------------
+# Strategy protocol
+# ---------------------------------------------------------------------------
+
+class SyncAlgorithm:
+    """Base strategy. Subclasses MUST implement ``land`` (the pytree oracle)
+    and set ``name``; everything else has a correct generic default, so a
+    one-method algorithm runs end-to-end on every substrate. Built-ins
+    override the flat hooks with their fused Pallas kernels."""
+
+    name: str = ""
+    centralized: bool = False
+    # what launch_snapshot_flat produces: "copy" | "gather" | "mean"
+    snapshot_kind: str = "copy"
+    # floor asserted by sync_bench on pytree_sync_bytes / flat_sync_bytes
+    min_stream_ratio: float = 1.0
+
+    # -- pytree engine (the numerical oracle; also the SPMD substrate) -------
+    def init_state(self, w0: Pytree, cfg: "S.SyncConfig") -> Any:
+        return None
+
+    def land(self, stack: Pytree, state: Any, snap: Optional[Pytree],
+             mask: Optional[jnp.ndarray], cfg: "S.SyncConfig") -> Tuple[Pytree, Any]:
+        raise NotImplementedError
+
+    # -- flat engine ----------------------------------------------------------
+    def init_state_flat(self, plane0: jnp.ndarray, cfg: "S.SyncConfig",
+                        fs: FlatSpace) -> Any:
+        return self.init_state(fs.unpack(plane0), cfg)
+
+    def launch_snapshot_flat(self, buf: jnp.ndarray, mask, cfg: "S.SyncConfig",
+                             fs: FlatSpace, state: Any = None) -> jnp.ndarray:
+        """Fallback: one contiguous copy of the whole replica buffer.
+        ``state`` is the algorithm's opaque state at launch time (gossip uses
+        it to pick the round's participant rows)."""
+        return flatspace.snapshot(buf)
+
+    def land_flat(self, buf: jnp.ndarray, state: Any, snap, mask,
+                  cfg: "S.SyncConfig", fs: FlatSpace) -> Tuple[jnp.ndarray, Any]:
+        """Fallback: unpack -> pytree oracle -> repack, inside one jit."""
+        fn = _flat_fallback(self, cfg, fs)
+        mask_arr = None if mask is None else jnp.asarray(mask)
+        return fn(buf, state, snap, mask_arr)
+
+    # -- ThreadedShadowRunner background round --------------------------------
+    def make_shadow_round(self, cfg: "S.SyncConfig", fs: Optional[FlatSpace]
+                          ) -> Callable[[List, Any], Tuple[Any, int]]:
+        """Returns round(ws, state) -> (state, n_syncs); mutates ``ws`` (the
+        per-trainer planes or pytrees) in place. Fallback: stack, land against
+        the current state (no snapshot — the threaded shadow reads live), and
+        slice back."""
+        if fs is not None:
+            def rnd(ws, state):
+                buf, state = self.land_flat(_stack_planes(ws), state, None,
+                                            None, cfg, fs)
+                for i in range(len(ws)):
+                    ws[i] = buf[i]
+                return state, 1
+        else:
+            land = jax.jit(lambda stack, st_: self.land(stack, st_, None, None, cfg))
+
+            def rnd(ws, state):
+                new, state = land(_stack_trees(ws), state)
+                for i in range(len(ws)):
+                    ws[i] = S.tree_slice(new, i)
+                return state, 1
+        return rnd
+
+    # -- SPMD background program ----------------------------------------------
+    def make_sync_step(self, cfg: "S.SyncConfig") -> Callable:
+        """Uniform jittable signature across all algorithms."""
+        def sync_step(params_stack, algo_state=None):
+            return self.land(params_stack, algo_state, None, None, cfg)
+
+        return sync_step
+
+    # -- analytic HBM-stream model (fp32 bytes per full sync cycle) -----------
+    def pytree_sync_bytes(self, r: int, n: int) -> int:
+        # generic: snapshot copy (2RN) + one read+write land pass (3RN)
+        return 4 * (2 * r * n + 3 * r * n)
+
+    def flat_sync_bytes(self, r: int, n: int, *, fired: Optional[int] = None) -> int:
+        # fallback flat engine does the same work as the pytree path
+        return self.pytree_sync_bytes(r, n)
+
+    def flat_ref_fns(self, cfg: "S.SyncConfig", fs: FlatSpace
+                     ) -> Tuple[Callable, Callable]:
+        """(snapshot_fn(buf) -> snap, land_fn(buf, state, snap) -> (buf, state)):
+        jitted, NON-donating, all-replicas-fired oracle versions of the flat
+        cycle — what sync_bench times on CPU (Pallas targets TPU; interpret-
+        mode timing is not meaningful)."""
+        def land(buf, state, snap):
+            new, state = self.land(fs.unpack_stack(buf), state,
+                                   fs.unpack_stack(snap), None, cfg)
+            return fs.pack_stack(new), state
+
+        return jax.jit(lambda buf: buf.copy()), jax.jit(land)
+
+
+@functools.lru_cache(maxsize=None)
+def _flat_fallback(algo: SyncAlgorithm, cfg, fs: FlatSpace) -> Callable:
+    def run(buf, state, snap, mask):
+        stack = fs.unpack_stack(buf)
+        snap_t = fs.unpack_stack(snap) if snap is not None else None
+        new, state = algo.land(stack, state, snap_t, mask, cfg)
+        return fs.pack_stack(new), state
+
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, SyncAlgorithm] = {}
+
+
+def register(algo, *, override: bool = False) -> SyncAlgorithm:
+    """Register an algorithm instance (or class — instantiated with no args).
+    Usable as a class decorator: ``@register`` above a SyncAlgorithm subclass."""
+    if isinstance(algo, type):
+        cls, algo = algo, algo()
+    else:
+        cls = None
+    if not algo.name:
+        raise ValueError(f"{type(algo).__name__} must set a non-empty .name")
+    if algo.name in _REGISTRY and not override:
+        raise ValueError(f"sync algorithm {algo.name!r} already registered "
+                         "(pass override=True to replace)")
+    _REGISTRY[algo.name] = algo
+    return cls if cls is not None else algo
+
+
+def unregister(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get(name: str) -> SyncAlgorithm:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown sync algorithm {name!r}; "
+                       f"registered: {list(names())}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# EASGD (centralized; paper Algorithm 2)
+# ---------------------------------------------------------------------------
+
+@register
+class EASGD(SyncAlgorithm):
+    name = "easgd"
+    centralized = True
+    snapshot_kind = "gather"  # compact (F, n, 128) copy of only the fired rows
+    min_stream_ratio = 1.5
+
+    def init_state(self, w0, cfg):
+        return jax.tree.map(jnp.copy, w0)  # the sync-PS copy
+
+    def land(self, stack, state, snap, mask, cfg):
+        return S.easgd_round(stack, state, cfg.alpha, mask=mask, snapshot=snap)
+
+    def init_state_flat(self, plane0, cfg, fs):
+        return jnp.copy(plane0)  # (n_rows, 128) fp32 PS plane
+
+    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None):
+        fired = _fired_ids(mask, buf.shape[0])
+        return _gather(buf, jnp.asarray(fired, jnp.int32))
+
+    def land_flat(self, buf, state, snap, mask, cfg, fs):
+        fired = _fired_ids(mask, buf.shape[0])
+        if fired.size == 0:
+            return buf, state
+        fired = jnp.asarray(fired, jnp.int32)
+        if snap is None:  # fixed-rate: gather from the current buffer — the
+            # round op donates ``buf``, so the snapshot must be separate
+            snap = _gather(buf, fired)
+        return easgd_ops.easgd_round_op(buf, state, snap, fired, cfg.alpha,
+                                        block=fs.block)
+
+    def make_shadow_round(self, cfg, fs):
+        if fs is not None:
+            pair = lambda ps, w: easgd_ops.easgd_pair_flat_op(
+                ps, w, cfg.alpha, block=fs.block)
+        else:
+            pair = jax.jit(lambda ps, w: S.easgd_pair_update(ps, w, cfg.alpha))
+
+        def rnd(ws, state):
+            # shadow threads reach the PS one replica at a time (Algorithm 2)
+            for i in range(len(ws)):
+                state, ws[i] = pair(state, ws[i])
+            return state, len(ws)
+
+        return rnd
+
+    def pytree_sync_bytes(self, r, n):
+        # copy(2RN) + per-replica scan: lerp_ps(3N) + lerp_wi(3N)
+        # + masked keep_ps(3N) + keep_wi(3N)
+        return 4 * (2 * r * n + 12 * r * n)
+
+    def flat_sync_bytes(self, r, n, *, fired=None):
+        # fired-rows gather(2FN) + round kernel: r(FN stack + FN snap + N ps)
+        # + w(FN stack + N ps); un-fired replicas cost nothing, at launch OR
+        # landing.
+        f = r if fired is None else fired
+        return 4 * (2 * f * n + (2 * f * n + n) + (f * n + n))
+
+    def flat_ref_fns(self, cfg, fs):
+        def land(buf, ps, snap):
+            fired = jnp.arange(buf.shape[0], dtype=jnp.int32)
+            return easgd_round_ref(buf, ps, snap, fired, cfg.alpha)
+
+        return jax.jit(lambda buf: buf.copy()), jax.jit(land)
+
+
+# ---------------------------------------------------------------------------
+# Model Averaging (decentralized; paper Algorithm 3)
+# ---------------------------------------------------------------------------
+
+@register
+class MA(SyncAlgorithm):
+    name = "ma"
+    snapshot_kind = "mean"  # the landing only ever reads the snapshot's mean
+    min_stream_ratio = 2.0
+
+    def land(self, stack, state, snap, mask, cfg):
+        return S.ma_round(stack, cfg.alpha, snapshot=snap), state
+
+    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None):
+        return ma_ops.replica_mean_op(buf, block=fs.block)
+
+    def land_flat(self, buf, state, snap, mask, cfg, fs):
+        mean = snap if snap is not None else ma_ops.replica_mean_op(buf, block=fs.block)
+        return ma_ops.ma_sync_op(buf, mean, cfg.alpha, block=fs.block), state
+
+    def make_shadow_round(self, cfg, fs):
+        if fs is not None:
+            # slice-free decentralized round: one fused mean over the stacked
+            # planes, then per-plane elastic pull-backs landing on the
+            # CURRENT plane — trainers kept moving while the mean was in
+            # flight (paper §3.3).
+            plane_mean = jax.jit(lambda *planes: ma_ops.replica_mean_op(
+                jnp.stack(planes), block=fs.block))
+            pullback = jax.jit(lambda plane, mean: ma_ops.ma_sync_op(
+                plane[None], mean, cfg.alpha, block=fs.block)[0])
+
+            def rnd(ws, state):
+                mean = plane_mean(*ws)
+                for i in range(len(ws)):
+                    ws[i] = pullback(ws[i], mean)
+                return state, 1
+        else:
+            land = jax.jit(lambda stack: S.ma_round(stack, cfg.alpha))
+
+            def rnd(ws, state):
+                new = land(_stack_trees(ws))
+                for i in range(len(ws)):
+                    ws[i] = S.tree_slice(new, i)
+                return state, 1
+        return rnd
+
+    def pytree_sync_bytes(self, r, n):
+        # copy(2RN) + mean(RN+N) + broadcast(N+RN) + lerp(2RN+RN)
+        rn = r * n
+        return 4 * (2 * rn + (rn + n) + (n + rn) + 3 * rn)
+
+    def flat_sync_bytes(self, r, n, *, fired=None):
+        # launch mean(RN+N) + pull-back kernel(r RN+N, w RN)
+        rn = r * n
+        return 4 * ((rn + n) + (2 * rn + n))
+
+    def flat_ref_fns(self, cfg, fs):
+        return (jax.jit(replica_mean_ref),
+                jax.jit(lambda buf, st_, mean:
+                        (ma_update_ref(buf, mean, cfg.alpha), st_)))
+
+
+# ---------------------------------------------------------------------------
+# BMUF (decentralized; paper Algorithm 4)
+# ---------------------------------------------------------------------------
+
+def _bmuf_plane_step(mean, wg, vel, cfg):
+    """N-sized BMUF global step on flat planes; returns (look, wg', vel')."""
+    desc = mean - wg
+    vel = cfg.block_momentum * vel + cfg.eta * desc
+    wg = wg + vel
+    look = wg + cfg.block_momentum * vel if cfg.nesterov else wg
+    return look, wg, vel
+
+
+@register
+class BMUF(SyncAlgorithm):
+    name = "bmuf"
+    snapshot_kind = "mean"
+    min_stream_ratio = 2.0
+
+    def init_state(self, w0, cfg):
+        return S.BMUFState.init(w0)
+
+    def land(self, stack, state, snap, mask, cfg):
+        return S.bmuf_round(stack, state, cfg.alpha, eta=cfg.eta,
+                            block_momentum=cfg.block_momentum,
+                            nesterov=cfg.nesterov, snapshot=snap)
+
+    def init_state_flat(self, plane0, cfg, fs):
+        return S.BMUFState(w_global=jnp.copy(plane0),
+                           velocity=jnp.zeros((fs.n_rows, LANE), jnp.float32))
+
+    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None):
+        return ma_ops.replica_mean_op(buf, block=fs.block)
+
+    def land_flat(self, buf, state, snap, mask, cfg, fs):
+        mean = snap if snap is not None else ma_ops.replica_mean_op(buf, block=fs.block)
+        new, wg, vel = bmuf_ops.bmuf_sync_op(
+            buf, mean, state.w_global, state.velocity, cfg.alpha, eta=cfg.eta,
+            block_momentum=cfg.block_momentum, nesterov=cfg.nesterov,
+            block=fs.block)
+        return new, S.BMUFState(w_global=wg, velocity=vel)
+
+    def make_shadow_round(self, cfg, fs):
+        if fs is not None:
+            plane_mean = jax.jit(lambda *planes: ma_ops.replica_mean_op(
+                jnp.stack(planes), block=fs.block))
+            state_step = jax.jit(
+                lambda mean, wg, vel: _bmuf_plane_step(mean, wg, vel, cfg))
+            pullback = jax.jit(lambda plane, look: ma_ops.ma_sync_op(
+                plane[None], look, cfg.alpha, block=fs.block)[0])
+
+            def rnd(ws, state):
+                # real block momentum in the background: mean -> N-sized
+                # global step -> per-plane pull-back toward the look-ahead,
+                # landing on the CURRENT planes (paper §3.3).
+                mean = plane_mean(*ws)
+                look, wg, vel = state_step(mean, state.w_global, state.velocity)
+                for i in range(len(ws)):
+                    ws[i] = pullback(ws[i], look)
+                return S.BMUFState(w_global=wg, velocity=vel), 1
+        else:
+            land = jax.jit(lambda stack, st_: S.bmuf_round(
+                stack, st_, cfg.alpha, eta=cfg.eta,
+                block_momentum=cfg.block_momentum, nesterov=cfg.nesterov))
+
+            def rnd(ws, state):
+                new, state = land(_stack_trees(ws), state)
+                for i in range(len(ws)):
+                    ws[i] = S.tree_slice(new, i)
+                return state, 1
+        return rnd
+
+    def pytree_sync_bytes(self, r, n):
+        # MA chain + desc/velocity/w_global updates (r 2N + w N each)
+        rn = r * n
+        return 4 * (2 * rn + (rn + n) + (n + rn) + 3 * rn + 9 * n)
+
+    def flat_sync_bytes(self, r, n, *, fired=None):
+        # launch mean(RN+N) + fused landing(r RN+3N, w RN+2N)
+        rn = r * n
+        return 4 * ((rn + n) + (2 * rn + 5 * n))
+
+    def flat_ref_fns(self, cfg, fs):
+        def land(buf, state, mean):
+            new, wg, vel = bmuf_update_ref(
+                buf, mean, state.w_global, state.velocity, cfg.alpha,
+                eta=cfg.eta, block_momentum=cfg.block_momentum,
+                nesterov=cfg.nesterov)
+            return new, S.BMUFState(w_global=wg, velocity=vel)
+
+        return jax.jit(replica_mean_ref), jax.jit(land)
+
+
+# ---------------------------------------------------------------------------
+# Gossip (decentralized, pairwise, partial participation; ADPSGD-style —
+# the algorithm FAMILY the pre-registry API could not express)
+# ---------------------------------------------------------------------------
+
+def _ring_partner(R: int, shift) -> jnp.ndarray:
+    """Rotating perfect matching over replica ids 0..R-1.
+
+    Position k of the rotated ring holds id (k + shift) % R; consecutive ring
+    positions pair up. Returns (R,) int32 ``partner`` — an involution; a
+    self-partner means unpaired this round (the odd one out when R is odd).
+    jit-friendly: ``shift`` (the algorithm's round counter) may be traced.
+    Successive shifts alternate the matchings, so the union of pair edges
+    over rounds is a connected ring — pairwise averaging mixes globally
+    without any collective.
+    """
+    order = (jnp.arange(R, dtype=jnp.int32) + shift) % R
+    npair = R // 2
+    a, b = order[0:2 * npair:2], order[1:2 * npair:2]
+    partner = jnp.arange(R, dtype=jnp.int32).at[a].set(b).at[b].set(a)
+    return partner
+
+
+def _ring_partner_np(R: int, shift: int) -> List[int]:
+    """Host mirror of `_ring_partner`."""
+    order = [(k + shift) % R for k in range(R)]
+    partner = list(range(R))
+    for k in range(0, R - 1, 2):
+        a, b = order[k], order[k + 1]
+        partner[a], partner[b] = b, a
+    return partner
+
+
+def _gossip_participants_np(mask: Optional[np.ndarray], R: int, shift: int):
+    """Participant rows of a gossip round, host-side (flat-engine operands).
+
+    A ring pair is ACTIVE when either member's shadow clock fired — the
+    initiator pulls its passive partner into the exchange (ADPSGD), so even
+    a round with a single fired replica synchronizes. Returns
+    (rows, self_pos, partner_pos): the sorted replica ids of all active-pair
+    members (== the rows the launch snapshot gathers, and the rows that
+    land), plus each one's own/partner position inside that snapshot.
+    """
+    partner = _ring_partner_np(R, shift)
+    m = np.ones((R,), bool) if mask is None else np.asarray(mask).astype(bool)
+    rows = [i for i in range(R)
+            if partner[i] != i and (m[i] or m[partner[i]])]
+    pos = {rid: k for k, rid in enumerate(rows)}
+    self_pos = [pos[i] for i in rows]
+    partner_pos = [pos[partner[i]] for i in rows]
+    return rows, self_pos, partner_pos
+
+
+@register
+class Gossip(SyncAlgorithm):
+    name = "gossip"
+    snapshot_kind = "gather"
+    min_stream_ratio = 2.0
+
+    def init_state(self, w0, cfg):
+        return jnp.zeros((), jnp.int32)  # round counter drives pair rotation
+
+    def init_state_flat(self, plane0, cfg, fs):
+        return self.init_state(None, cfg)
+
+    def land(self, stack, state, snap, mask, cfg):
+        R = jax.tree.leaves(stack)[0].shape[0]
+        mask = jnp.ones((R,), bool) if mask is None else jnp.asarray(mask)
+        src = snap if snap is not None else stack
+        ids = jnp.arange(R, dtype=jnp.int32)
+        partner = _ring_partner(R, state)
+        # a pair is active when EITHER member fired: the initiator pulls its
+        # passive partner into the exchange (ADPSGD) — a singleton-fire
+        # round still synchronizes.
+        active = (partner != ids) & (mask | mask[partner])
+
+        def land_leaf(x, x_snap):
+            xs = x_snap.astype(jnp.float32)
+            mix = 0.5 * (xs + xs[partner])
+            new = (1.0 - cfg.alpha) * x.astype(jnp.float32) + cfg.alpha * mix
+            keep = active.reshape((R,) + (1,) * (x.ndim - 1))
+            return jnp.where(keep, new, x.astype(jnp.float32)).astype(x.dtype)
+
+        return jax.tree.map(land_leaf, stack, src), state + 1
+
+    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None):
+        # Self-describing snapshot: a compact gather of exactly the
+        # active-pair members' rows PLUS the pairing that produced it, so the
+        # landing never has to re-derive the participant set from state that
+        # may have moved while the sync was in flight (ADPSGD: the initiator
+        # picks its partner at launch).
+        rows, self_pos, partner_pos = _gossip_participants_np(
+            mask, buf.shape[0], 0 if state is None else int(state))
+        return (_gather(buf, jnp.asarray(rows, jnp.int32)),
+                rows, self_pos, partner_pos)
+
+    def land_flat(self, buf, state, snap, mask, cfg, fs):
+        if snap is None:  # fixed-rate: pair and gather at landing time (the
+            # round op donates ``buf``, so the snapshot must be separate)
+            snap = self.launch_snapshot_flat(buf, mask, cfg, fs, state)
+        snap_rows, rows, self_pos, partner_pos = snap
+        new_state = state + 1
+        if not rows:
+            return buf, new_state
+        new = gossip_ops.gossip_round_op(
+            buf, snap_rows, jnp.asarray(rows, jnp.int32),
+            jnp.asarray(self_pos, jnp.int32),
+            jnp.asarray(partner_pos, jnp.int32), cfg.alpha, block=fs.block)
+        return new, new_state
+
+    def make_shadow_round(self, cfg, fs):
+        if fs is not None:
+            pair = lambda a, b: gossip_ops.gossip_pair_flat_op(
+                a, b, cfg.alpha, block=fs.block)
+        else:
+            def pair_tree(a, b):
+                mix = jax.tree.map(
+                    lambda x, y: 0.5 * (x.astype(jnp.float32)
+                                        + y.astype(jnp.float32)), a, b)
+                return S.lerp(a, mix, cfg.alpha), S.lerp(b, mix, cfg.alpha)
+
+            pair = jax.jit(pair_tree)
+
+        def rnd(ws, state):
+            R = len(ws)
+            partner = _ring_partner_np(R, int(state))
+            for i in range(R):
+                if partner[i] > i:  # exchange each pair once
+                    ws[i], ws[partner[i]] = pair(ws[i], ws[partner[i]])
+            return state + 1, 1
+
+        return rnd
+
+    def pytree_sync_bytes(self, r, n):
+        # copy(2RN) + partner gather(2RN) + mix(3RN) + lerp(3RN) + where(4RN)
+        return 4 * (2 * r * n + 12 * r * n)
+
+    def flat_sync_bytes(self, r, n, *, fired=None):
+        # participant-rows gather(2PN) + round kernel per participant:
+        # r(PN stack + 2PN snap) + w(PN stack); inactive pairs cost nothing.
+        # With f initiators the active pairs pull in at most f partners.
+        f = r if fired is None else fired
+        p = min(2 * f, 2 * (r // 2))
+        return 4 * (2 * p * n + 3 * p * n + p * n)
+
+    def flat_ref_fns(self, cfg, fs):
+        def land(buf, state, snap):
+            R = buf.shape[0]
+            ids = jnp.arange(R, dtype=jnp.int32)
+            partner = _ring_partner(R, state)
+            mix = 0.5 * (snap + snap[partner])
+            new = jnp.where((partner != ids)[:, None, None],
+                            (1.0 - cfg.alpha) * buf + cfg.alpha * mix, buf)
+            return new, state + 1
+
+        return jax.jit(lambda buf: buf.copy()), jax.jit(land)

@@ -58,6 +58,14 @@ class FlatSpace:
             raise ValueError("FlatSpace needs at least one leaf")
         shapes = tuple(tuple(l.shape) for l in leaves)
         dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+        packable = {jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16),
+                    jnp.dtype(jnp.float16)}
+        bad = sorted({str(d) for d in dtypes if d not in packable})
+        if bad:
+            raise TypeError(
+                f"FlatSpace packs through fp32, which is lossless only for "
+                f"f32/bf16/f16 leaves; got {bad}. Keep integer/f64 state out "
+                f"of the dense replica tree.")
         sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
         total = int(sum(sizes))
         n_rows = max(1, -(-total // (LANE * block))) * block

@@ -17,10 +17,13 @@ Two runtimes:
 
 Both runners default to the FLAT sync engine (DESIGN.md §3): dense replicas
 live in a persistent ``(R, n_rows, 128)`` fp32 buffer (core/flatspace.py) and
-every background sync is one fused Pallas launch — the launch snapshot is a
-single contiguous copy (EASGD) or a single replica-mean plane (MA/BMUF).
-``SyncConfig(engine="pytree")`` selects the pure jax.tree.map path in
-core/sync.py, which the flat kernels are tested against.
+every background sync is one fused Pallas launch. ``SyncConfig(engine=
+"pytree")`` selects the pure jax.tree.map oracle path.
+
+Neither runner knows any algorithm by name: the whole sync lifecycle —
+state init, launch snapshot, landing, the threaded shadow round — is owned
+by the ``SyncAlgorithm`` fetched from ``core.algorithms`` (DESIGN.md §6),
+so a newly registered algorithm runs here without touching this file.
 """
 from __future__ import annotations
 
@@ -33,13 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import algorithms
 from repro.core import sync as S
-from repro.core.flatspace import LANE, FlatSpace
+from repro.core.flatspace import FlatSpace
 from repro.data import ctr
 from repro.embeddings import table as emb
-from repro.kernels.bmuf_update import ops as bmuf_ops
-from repro.kernels.easgd_update import ops as easgd_ops
-from repro.kernels.ma_update import ops as ma_ops
 from repro.models import dlrm
 from repro.optim import Optimizer
 
@@ -65,8 +66,9 @@ class SimState:
     w_stack: Pytree
     opt_stack: Pytree
     emb_state: Pytree  # shared {"table", "acc"}
-    w_ps: Optional[Pytree]  # EASGD central copy (flat: (n_rows, 128) plane)
-    bmuf: Optional[S.BMUFState]  # flat engine: leaves are (n_rows, 128) planes
+    # Opaque, owned by the SyncAlgorithm (EASGD: the sync-PS copy; BMUF:
+    # global model + block momentum; gossip: round counter; MA: None).
+    algo_state: Any
     step: int
 
 
@@ -86,6 +88,7 @@ class HogwildSim:
         self.cfg = cfg
         self.sync_cfg = sync_cfg.validate()
         self.engine = sync_cfg.engine
+        self.algo = algorithms.get(sync_cfg.algo)
         self.R, self.M, self.B = n_trainers, n_threads, batch_size
         self.opt = optimizer
         self.emb_lr = emb_lr
@@ -143,37 +146,14 @@ class HogwildSim:
                 )
                 return fs.pack_stack(w2), opt2, emb2, loss
 
-            # Fused sync launches (ops are jitted; alpha etc. are static).
-            # EASGD launch snapshot: gather ONLY the fired rows (compact
-            # (F, n, 128) copy) — un-fired replicas are never consumed.
-            self._gather_rows = jax.jit(lambda buf, idx: buf[idx])
-            self._mean_flat = lambda buf: ma_ops.replica_mean_op(buf, block=fs.block)
-            self._easgd_flat = lambda buf, ps, snap, fired: easgd_ops.easgd_round_op(
-                buf, ps, snap, fired, sc.alpha, block=fs.block
-            )
-            self._ma_flat = lambda buf, mean: ma_ops.ma_sync_op(
-                buf, mean, sc.alpha, block=fs.block
-            )
-            self._bmuf_flat = lambda buf, mean, wg, vel: bmuf_ops.bmuf_sync_op(
-                buf, mean, wg, vel, sc.alpha, eta=sc.eta,
-                block_momentum=sc.block_momentum, nesterov=sc.nesterov,
-                block=fs.block,
-            )
+            # Sync launches/landings are owned by the algorithm (host hooks
+            # dispatching fused Pallas kernels) — nothing to build here.
         else:
             train_iter = train_core
-            self._easgd = jax.jit(
-                lambda ws, ps, mask, snap: S.easgd_round(
-                    ws, ps, sc.alpha, mask=mask, snapshot=snap
-                )
-            )
-            self._ma = jax.jit(
-                lambda ws, snap: S.ma_round(ws, sc.alpha, snapshot=snap)
-            )
-            self._bmuf = jax.jit(
-                lambda ws, st, snap: S.bmuf_round(
-                    ws, st, sc.alpha, eta=sc.eta, block_momentum=sc.block_momentum,
-                    nesterov=sc.nesterov, snapshot=snap,
-                )
+            # pytree landing: one jit over the algorithm's oracle (retraces
+            # only per snap/mask None-ness — a handful of structures).
+            self._land_py = jax.jit(
+                lambda ws, st, snap, mask: self.algo.land(ws, st, snap, mask, sc)
             )
 
         self._train_iter = jax.jit(train_iter, donate_argnums=(0, 1, 2))
@@ -196,17 +176,11 @@ class HogwildSim:
         if self.engine == "flat":
             fs = self.flat
             w_stack = fs.broadcast(w0, self.R)  # packed ONCE here
-            w_ps = fs.pack(w0) if self.sync_cfg.centralized() else None
-            bmuf = (
-                S.BMUFState(w_global=fs.pack(w0),
-                            velocity=jnp.zeros((fs.n_rows, LANE), jnp.float32))
-                if self.sync_cfg.algo == "bmuf" else None
-            )
+            algo_state = self.algo.init_state_flat(fs.pack(w0), self.sync_cfg, fs)
         else:
             w_stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (self.R,) + x.shape).copy(), w0)
-            w_ps = jax.tree.map(lambda x: x.copy(), w0) if self.sync_cfg.centralized() else None
-            bmuf = S.BMUFState.init(w0) if self.sync_cfg.algo == "bmuf" else None
-        return SimState(w_stack, opt_stack, emb_state, w_ps, bmuf, 0)
+            algo_state = self.algo.init_state(w0, self.sync_cfg)
+        return SimState(w_stack, opt_stack, emb_state, algo_state, 0)
 
     def make_batch(self, it: int) -> Dict[str, jnp.ndarray]:
         """One-pass stream: (R*M) distinct shards per iteration."""
@@ -226,16 +200,13 @@ class HogwildSim:
     def _launch_snapshot(self, st: SimState, mask: np.ndarray) -> Pytree:
         """State captured when a background sync launches (lands `delay` later).
 
-        Flat engine: EASGD gathers a compact (F, n_rows, 128) copy of only the
-        FIRED replicas' rows; for the decentralized algorithms the landing
-        only consumes the snapshot's replica-mean, so the snapshot IS that
-        (n_rows, 128) mean plane.
+        Flat engine: the algorithm picks its own compact form — a fired-rows
+        gather (EASGD/gossip), a replica-mean plane (MA/BMUF), or a full
+        buffer copy (the generic fallback).
         """
         if self.engine == "flat":
-            if self.sync_cfg.algo == "easgd":
-                fired = np.flatnonzero(np.asarray(mask))
-                return self._gather_rows(st.w_stack, jnp.asarray(fired, jnp.int32))
-            return self._mean_flat(st.w_stack)
+            return self.algo.launch_snapshot_flat(
+                st.w_stack, mask, self.sync_cfg, self.flat, st.algo_state)
         # pytree: real deep copy (train_iter donates its buffers)
         return jax.tree.map(jnp.copy, st.w_stack)
 
@@ -280,49 +251,17 @@ class HogwildSim:
         }
 
     def _apply_sync(self, st: SimState, snap, mask) -> SimState:
+        """Land one background sync: the algorithm owns the semantics (one
+        fused kernel launch on the flat engine; the jitted pytree oracle
+        otherwise). ``snap=None`` means fixed-rate — sync against the current
+        state; ``mask=None`` means every replica fired."""
         if self.engine == "flat":
-            return self._apply_sync_flat(st, snap, mask)
-        sc = self.sync_cfg
-        mask_arr = jnp.asarray(mask) if mask is not None else jnp.ones((self.R,), bool)
-        if sc.algo == "easgd":
-            st.w_stack, st.w_ps = self._easgd(st.w_stack, st.w_ps, mask_arr, snap if snap is not None else st.w_stack)
-        elif sc.algo == "ma":
-            st.w_stack = self._ma(st.w_stack, snap)
-        elif sc.algo == "bmuf":
-            st.w_stack, st.bmuf = self._bmuf(st.w_stack, st.bmuf, snap)
+            st.w_stack, st.algo_state = self.algo.land_flat(
+                st.w_stack, st.algo_state, snap, mask, self.sync_cfg, self.flat)
         else:
-            raise ValueError(sc.algo)
-        return st
-
-    def _apply_sync_flat(self, st: SimState, snap, mask) -> SimState:
-        """One fused kernel launch per landing; `snap` is a buffer copy for
-        EASGD, a replica-mean plane for MA/BMUF, or None (fixed-rate: sync
-        against the current buffer)."""
-        sc = self.sync_cfg
-        if sc.algo == "easgd":
-            fired = (np.arange(self.R) if mask is None
-                     else np.flatnonzero(np.asarray(mask)))
-            if fired.size == 0:
-                return st
-            fired = jnp.asarray(fired, jnp.int32)
-            # snap is a compact (F, n, 128) gather of the fired rows; the
-            # fixed-rate path (snap=None) gathers from the current buffer —
-            # stack is donated to the fused round, so the snapshot is always
-            # a separate buffer.
-            if snap is None:
-                snap = self._gather_rows(st.w_stack, fired)
-            st.w_stack, st.w_ps = self._easgd_flat(st.w_stack, st.w_ps, snap, fired)
-        elif sc.algo == "ma":
-            mean = snap if snap is not None else self._mean_flat(st.w_stack)
-            st.w_stack = self._ma_flat(st.w_stack, mean)
-        elif sc.algo == "bmuf":
-            mean = snap if snap is not None else self._mean_flat(st.w_stack)
-            st.w_stack, wg, vel = self._bmuf_flat(
-                st.w_stack, mean, st.bmuf.w_global, st.bmuf.velocity
-            )
-            st.bmuf = S.BMUFState(w_global=wg, velocity=vel)
-        else:
-            raise ValueError(sc.algo)
+            mask_arr = None if mask is None else jnp.asarray(mask)
+            st.w_stack, st.algo_state = self._land_py(
+                st.w_stack, st.algo_state, snap, mask_arr)
         return st
 
     def replica_params(self, st: SimState, i: int) -> Pytree:
@@ -360,17 +299,20 @@ class ThreadedShadowRunner:
     trainers can lose updates — that is the point). Dense replicas are owned by
     their trainer; the shadow thread interpolates them in the background.
 
-    Flat engine: each replica is one contiguous (n_rows, 128) fp32 plane. The
-    shadow thread's exchange is a single kernel launch per round — EASGD pairs
-    run the fused kernel directly on the planes, and a decentralized round is
-    slice-free: one fused mean over the R planes, then per-plane elastic
-    pull-backs (no host-side per-leaf jnp.stack / tree_slice rebuild)."""
+    Flat engine: each replica is one contiguous (n_rows, 128) fp32 plane and
+    the shadow thread's exchange is a handful of fused kernel launches per
+    round. The round itself is built by the SyncAlgorithm
+    (``make_shadow_round``), so this runner hosts any registered algorithm:
+    EASGD pairs against the PS plane, slice-free decentralized mean +
+    pull-backs (MA), the full block-momentum global step (BMUF), or rotating
+    pairwise exchanges (gossip)."""
 
     def __init__(self, cfg, sync_cfg: S.SyncConfig, *, n_trainers: int,
                  batch_size: int, optimizer: Optimizer, emb_lr: float = 0.05,
                  seed: int = 0, sync_sleep_s: float = 0.0):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
         self.engine = sync_cfg.engine
+        self.algo = algorithms.get(sync_cfg.algo)
         self.R, self.B = n_trainers, batch_size
         self.opt = optimizer
         self.emb_lr = emb_lr
@@ -395,7 +337,6 @@ class ThreadedShadowRunner:
 
         if self.engine == "flat":
             fs = self.flat
-            alpha = sync_cfg.alpha
 
             def train_one_flat(w_plane, opt_state, emb_table, batch):
                 w, opt_state, loss, g_pooled = train_one(
@@ -404,27 +345,11 @@ class ThreadedShadowRunner:
                 return fs.pack(w), opt_state, loss, g_pooled
 
             self._train_one = jax.jit(train_one_flat)
-            self._easgd_pair = lambda ps, w: easgd_ops.easgd_pair_flat_op(
-                ps, w, alpha, block=fs.block
-            )
-            # Decentralized round, slice-free: the fused replica-mean kernel
-            # over the stacked planes + per-plane pull-back kernel.
-            self._plane_mean = jax.jit(
-                lambda *planes: ma_ops.replica_mean_op(
-                    jnp.stack(planes), block=fs.block
-                )
-            )
-            self._pullback = jax.jit(
-                lambda plane, mean: ma_ops.ma_sync_op(
-                    plane[None], mean, alpha, block=fs.block
-                )[0]
-            )
         else:
             self._train_one = jax.jit(train_one)
-            self._easgd_pair = jax.jit(
-                lambda ps, w: S.easgd_pair_update(ps, w, sync_cfg.alpha)
-            )
-            self._ma = jax.jit(lambda stack: S.ma_round(stack, sync_cfg.alpha))
+        # The background round: a host callable from the algorithm that
+        # mutates the per-trainer planes/pytrees in place (Algorithm 1).
+        self._shadow_round = self.algo.make_shadow_round(self.sync_cfg, self.flat)
 
     def run(self, iters_per_trainer: int) -> Dict[str, Any]:
         key = jax.random.PRNGKey(self.seed)
@@ -433,10 +358,11 @@ class ThreadedShadowRunner:
         if self.engine == "flat":
             plane0 = self.flat.pack(w0)
             self.w: List[Pytree] = [plane0.copy() for _ in range(self.R)]
-            self.w_ps = plane0.copy()
+            self.algo_state = self.algo.init_state_flat(
+                plane0, self.sync_cfg, self.flat)
         else:
             self.w = [jax.tree.map(lambda x: x.copy(), w0) for _ in range(self.R)]
-            self.w_ps = jax.tree.map(lambda x: x.copy(), w0)
+            self.algo_state = self.algo.init_state(w0, self.sync_cfg)
         self.opt_states = [self.opt.init(w0) for _ in range(self.R)]
         self.emb_state = emb.init_tables(self.spec, ke)
         self.done = False
@@ -464,27 +390,12 @@ class ThreadedShadowRunner:
                     self.examples += self.B
 
         def shadow():
-            algo = self.sync_cfg.algo
-            flat = self.engine == "flat"
             while not self.done:
-                if algo == "easgd":
-                    for i in range(self.R):
-                        ps, wi = self._easgd_pair(self.w_ps, self.w[i])
-                        self.w_ps, self.w[i] = ps, wi
-                        self.sync_count += 1
-                elif flat:  # decentralized: ma (bmuf analogous, ma used here)
-                    mean = self._plane_mean(*self.w)
-                    for i in range(self.R):
-                        # lands on the CURRENT plane — trainers kept moving
-                        # while the mean was in flight (paper §3.3).
-                        self.w[i] = self._pullback(self.w[i], mean)
-                    self.sync_count += 1
-                else:
-                    stack = jax.tree.map(lambda *xs: jnp.stack(xs), *self.w)
-                    new = self._ma(stack)
-                    for i in range(self.R):
-                        self.w[i] = S.tree_slice(new, i)
-                    self.sync_count += 1
+                # One algorithm-owned background round over the live replica
+                # planes — landings interpolate into the CURRENT state while
+                # trainers keep moving (paper §3.3).
+                self.algo_state, n = self._shadow_round(self.w, self.algo_state)
+                self.sync_count += n
                 if self.sync_sleep_s:
                     time.sleep(self.sync_sleep_s)
 

@@ -107,27 +107,17 @@ def make_train_step(cfg: ArchConfig, opt: Optimizer, mode: str,
 
 
 def make_sync_step(cfg: ArchConfig, sync_cfg: S.SyncConfig) -> Callable:
-    """The background program. Owns ALL cross-replica communication."""
-    if sync_cfg.algo == "easgd":
-        def sync_step(params_stack, w_ps):
-            return S.easgd_round(params_stack, w_ps, sync_cfg.alpha)
+    """The background program. Owns ALL cross-replica communication.
 
-        return sync_step
-    if sync_cfg.algo == "ma":
-        def sync_step(params_stack):
-            return S.ma_round(params_stack, sync_cfg.alpha)
+    Uniform signature across every registered algorithm:
+    ``sync_step(params_stack, algo_state) -> (params_stack, algo_state)``,
+    where ``algo_state`` is the opaque state from
+    ``algorithms.get(name).init_state(params, sync_cfg)`` (None for the
+    stateless ones — jit treats None as an empty pytree, so one compiled
+    program shape serves them all)."""
+    from repro.core import algorithms
 
-        return sync_step
-    if sync_cfg.algo == "bmuf":
-        def sync_step(params_stack, bmuf_state):
-            return S.bmuf_round(
-                params_stack, bmuf_state, sync_cfg.alpha,
-                eta=sync_cfg.eta, block_momentum=sync_cfg.block_momentum,
-                nesterov=sync_cfg.nesterov,
-            )
-
-        return sync_step
-    raise ValueError(sync_cfg.algo)
+    return algorithms.get(sync_cfg.algo).make_sync_step(sync_cfg)
 
 
 def make_prefill_step(cfg: ArchConfig, s_max: int) -> Callable:

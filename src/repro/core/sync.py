@@ -160,12 +160,13 @@ def bmuf_round(
 
 
 # ---------------------------------------------------------------------------
-# Algorithm registry used by runners
+# Sync configuration (algorithms themselves live in core/algorithms.py —
+# the pluggable registry every runner/substrate dispatches through)
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
 class SyncConfig:
-    algo: str = "easgd"  # easgd | ma | bmuf
+    algo: str = "easgd"  # any name in core.algorithms.names()
     alpha: float = 0.5
     # shadow mode: sync fires per replica every `gap` iterations with staggered
     # offsets; FR mode: foreground, all replicas at t % gap == 0.
@@ -184,11 +185,14 @@ class SyncConfig:
     engine: str = "flat"  # flat | pytree
 
     def centralized(self) -> bool:
-        return self.algo == "easgd"
+        from repro.core import algorithms  # deferred: algorithms imports us
+        return algorithms.get(self.algo).centralized
 
     def validate(self) -> "SyncConfig":
-        if self.algo not in ("easgd", "ma", "bmuf"):
-            raise ValueError(f"unknown sync algo: {self.algo!r}")
+        from repro.core import algorithms  # deferred: algorithms imports us
+        if self.algo not in algorithms.names():
+            raise ValueError(f"unknown sync algo: {self.algo!r}; "
+                             f"registered: {list(algorithms.names())}")
         if self.engine not in ("flat", "pytree"):
             raise ValueError(f"unknown sync engine: {self.engine!r}")
         return self

@@ -1,0 +1,127 @@
+"""Pallas TPU kernels: fused ADPSGD-style gossip sync (pairwise averaging)
+on flat replica space.
+
+A gossip round pairs up the replicas whose shadow clocks fired (partial
+participation is the algorithm's native mode — see core/algorithms.py::Gossip)
+and elastically pulls each participant toward its pair's snapshot average:
+
+    w_i <- (1-alpha) * w_i + alpha * 0.5 * (snap_i + snap_j)
+
+Two kernels:
+
+* ``gossip_round_update`` — a whole round in ONE launch. Participant rows and
+  their snapshot positions arrive via scalar prefetch and drive the block
+  index maps, so a replica that did not land a pair this round is never
+  fetched and never written — zero HBM traffic for it, exactly like the
+  un-fired replicas of the EASGD round kernel. The snapshot is passed twice
+  with two index maps (own row, partner row), so the pair mix is computed
+  in-VMEM without materializing a mixed plane in HBM.
+
+* ``gossip_pair_update`` — one symmetric pair exchange over two (n, 128)
+  planes (the ThreadedShadowRunner's shadow-thread primitive): both mixes
+  stream through VMEM in a single pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.flatspace import LANE
+
+
+def _pair_kernel(a_ref, b_ref, out_a_ref, out_b_ref, *, alpha: float):
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    mix = 0.5 * (a + b)
+    out_a_ref[...] = ((1.0 - alpha) * a + alpha * mix).astype(out_a_ref.dtype)
+    out_b_ref[...] = ((1.0 - alpha) * b + alpha * mix).astype(out_b_ref.dtype)
+
+
+def gossip_pair_update(
+    w_a: jnp.ndarray,
+    w_b: jnp.ndarray,
+    alpha: float,
+    *,
+    block: int = 256,
+    lanes: int = LANE,
+    interpret: bool = False,
+):
+    """Symmetric pair exchange on (n, 128) flat planes. Returns (new_a, new_b)."""
+    n, l = w_a.shape
+    assert l == lanes and n % block == 0, (w_a.shape, block)
+    grid = (n // block,)
+    spec = pl.BlockSpec((block, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_pair_kernel, alpha=alpha),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(w_a.shape, w_a.dtype),
+            jax.ShapeDtypeStruct(w_b.shape, w_b.dtype),
+        ),
+        interpret=interpret,
+    )(w_a, w_b)
+
+
+def _round_kernel(land_ref, self_ref, partner_ref, stack_ref, snap_a_ref,
+                  snap_b_ref, out_ref, *, alpha: float):
+    del land_ref, self_ref, partner_ref  # consumed by the index maps
+    wi = stack_ref[0].astype(jnp.float32)
+    mix = 0.5 * (snap_a_ref[0].astype(jnp.float32)
+                 + snap_b_ref[0].astype(jnp.float32))
+    out_ref[0] = ((1.0 - alpha) * wi + alpha * mix).astype(out_ref.dtype)
+
+
+def gossip_round_update(
+    stack: jnp.ndarray,
+    snapshot: jnp.ndarray,
+    land: jnp.ndarray,
+    self_pos: jnp.ndarray,
+    partner_pos: jnp.ndarray,
+    alpha: float,
+    *,
+    block: int = 256,
+    interpret: bool = False,
+):
+    """A whole gossip round in one launch.
+
+    stack: (R, n, 128) fp32 replica buffer; snapshot: (F, n, 128) launch-time
+    copies of the FIRED replicas' rows (compact gather, id order);
+    land: (P,) int32 replica ids that landed a pair this round (both members
+    of every pair appear); self_pos / partner_pos: (P,) int32 positions of
+    each participant's own / partner's row inside ``snapshot``.
+    Returns new_stack; rows not in ``land`` are bit-identical.
+    """
+    R, n, lanes = stack.shape
+    assert lanes == LANE and n % block == 0, (stack.shape, block)
+    P = land.shape[0]
+    assert self_pos.shape == partner_pos.shape == (P,), (self_pos.shape, P)
+    stack_spec = pl.BlockSpec(
+        (1, block, LANE), lambda j, k, land_ref, s_ref, p_ref: (land_ref[k], j, 0)
+    )
+    snap_a_spec = pl.BlockSpec(
+        (1, block, LANE), lambda j, k, land_ref, s_ref, p_ref: (s_ref[k], j, 0)
+    )
+    snap_b_spec = pl.BlockSpec(
+        (1, block, LANE), lambda j, k, land_ref, s_ref, p_ref: (p_ref[k], j, 0)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n // block, P),
+        in_specs=[stack_spec, snap_a_spec, snap_b_spec],
+        out_specs=[stack_spec],
+    )
+    return pl.pallas_call(
+        functools.partial(_round_kernel, alpha=alpha),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(stack.shape, stack.dtype)],
+        # operand order incl. scalar prefetch:
+        # (land, self_pos, partner_pos, stack, snapshot, snapshot)
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(land, self_pos, partner_pos, stack, snapshot, snapshot)[0]

@@ -1,0 +1,53 @@
+"""Jitted gossip sync entry points over flat replica space.
+
+``gossip_round_op`` is the HogwildSim landing: one launch covering every pair
+that formed this round (retraces per distinct participant count — the shadow
+schedule produces only a handful). ``gossip_pair_flat_op`` is the threaded
+runner's shadow-thread primitive: one symmetric pair exchange per launch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.gossip_update.gossip_update import (
+    gossip_pair_update, gossip_round_update)
+from repro.kernels.gossip_update.ref import gossip_pair_ref, gossip_round_ref
+
+BLOCK = 256
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "use_pallas", "interpret", "block"))
+def gossip_pair_flat_op(w_a: jnp.ndarray, w_b: jnp.ndarray, alpha: float, *,
+                        use_pallas: bool = True, interpret: Optional[bool] = None,
+                        block: int = BLOCK) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One symmetric pair exchange on (n, 128) flat planes. NOT donated: the
+    threaded runner's trainer threads may still be reading these planes."""
+    if use_pallas:
+        return gossip_pair_update(w_a, w_b, alpha, block=block,
+                                  interpret=resolve_interpret(interpret))
+    return gossip_pair_ref(w_a, w_b, alpha)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("alpha", "use_pallas", "interpret", "block"))
+def gossip_round_op(stack: jnp.ndarray, snapshot: jnp.ndarray,
+                    land: jnp.ndarray, self_pos: jnp.ndarray,
+                    partner_pos: jnp.ndarray, alpha: float, *,
+                    use_pallas: bool = True, interpret: Optional[bool] = None,
+                    block: int = BLOCK) -> jnp.ndarray:
+    """All pair landings of a round over a (R, n, 128) buffer, one launch.
+
+    ``stack`` is donated — the kernel updates it in place; ``snapshot`` must
+    be a separate buffer (the compact fired-rows gather), never the live
+    stack. Non-participant rows are bit-identical on return.
+    """
+    if use_pallas:
+        return gossip_round_update(stack, snapshot, land, self_pos,
+                                   partner_pos, alpha, block=block,
+                                   interpret=resolve_interpret(interpret))
+    return gossip_round_ref(stack, snapshot, land, self_pos, partner_pos, alpha)

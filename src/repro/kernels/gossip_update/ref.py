@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the fused gossip kernels (== core.algorithms.Gossip
+pytree math on flat replica buffers)."""
+import jax.numpy as jnp
+
+
+def gossip_pair_ref(w_a: jnp.ndarray, w_b: jnp.ndarray, alpha: float):
+    a = w_a.astype(jnp.float32)
+    b = w_b.astype(jnp.float32)
+    mix = 0.5 * (a + b)
+    new_a = (1.0 - alpha) * a + alpha * mix
+    new_b = (1.0 - alpha) * b + alpha * mix
+    return new_a.astype(w_a.dtype), new_b.astype(w_b.dtype)
+
+
+def gossip_round_ref(stack: jnp.ndarray, snapshot: jnp.ndarray, land,
+                     self_pos, partner_pos, alpha: float) -> jnp.ndarray:
+    """Pair landings on a (R, n, 128) buffer. ``snapshot`` is the (F, n, 128)
+    compact gather of the fired replicas; ``land``/``self_pos``/``partner_pos``
+    are (P,) index vectors of static length (ids may be traced)."""
+    land = jnp.asarray(land, jnp.int32)
+    if land.shape[0] == 0:
+        return stack
+    self_pos = jnp.asarray(self_pos, jnp.int32)
+    partner_pos = jnp.asarray(partner_pos, jnp.int32)
+    mix = 0.5 * (snapshot[self_pos].astype(jnp.float32)
+                 + snapshot[partner_pos].astype(jnp.float32))
+    new_rows = ((1.0 - alpha) * stack[land].astype(jnp.float32)
+                + alpha * mix).astype(stack.dtype)
+    return stack.at[land].set(new_rows)

@@ -78,14 +78,15 @@ def build(cfg, shape_name: str, mesh, *, mode: str = "syncdp",
 
 
 def build_sync_step(arch: str, mesh, *, algo: str = "easgd", n_replicas: int = 2):
-    """The background program (ShadowSync's own artifact)."""
+    """The background program (ShadowSync's own artifact). Uniform across the
+    algorithm registry: sync_step(params_stack, algo_state)."""
     cfg = get_config(arch)
+    sync_cfg = SyncConfig(algo=algo).validate()
     params = SP.param_structs(cfg, mesh, mode="shadow", n_replicas=n_replicas)
-    sync = spmd.make_sync_step(cfg, SyncConfig(algo=algo))
-    if algo == "easgd":
-        ps = SP.param_structs(cfg, mesh, mode="syncdp")
-        return sync, (params, ps), (0, 1)
-    return sync, (params,), (0,)
+    state = SP.sync_state_structs(
+        sync_cfg, SP.param_structs(cfg, mesh, mode="syncdp"), mesh)
+    sync = spmd.make_sync_step(cfg, sync_cfg)
+    return sync, (params, state), (0, 1)
 
 
 def _depth_variant(cfg, n_units: int):

@@ -56,6 +56,23 @@ def opt_structs(opt, params_sds, mesh, *, replica_axis=None, fsdp: bool = True) 
     return _annotate(sds, shardings)
 
 
+def sync_state_structs(sync_cfg, params_sds, mesh, *, fsdp: bool = True) -> Any:
+    """Sharded structs for a registered sync algorithm's opaque state (the
+    sync-PS copy, momentum buffers, a counter, or None), derived from the
+    SINGLE-replica param structs — whatever the algorithm's ``init_state``
+    builds, sharded like optimizer state."""
+    from repro.core import algorithms
+
+    algo = algorithms.get(sync_cfg.algo)
+    sds = jax.eval_shape(lambda p: algo.init_state(p, sync_cfg), params_sds)
+    if sds is None:
+        return None
+    shardings = rules.build_param_specs(
+        sds, mesh, fsdp_axis="data" if fsdp else None, replica_axis=None
+    )
+    return _annotate(sds, shardings)
+
+
 def train_batch_structs(cfg: ArchConfig, shape: InputShape, mesh, *,
                         mode: str = "syncdp", n_replicas: int = 2) -> Dict[str, Any]:
     bx = batch_axes(mesh, mode)

@@ -27,10 +27,10 @@ import numpy as np
 from repro import optim
 from repro.configs import dlrm_ctr
 from repro.configs.base import ARCH_IDS, get_config, reduced
-from repro.core import spmd
+from repro.core import algorithms, spmd
 from repro.core.elp import elp
 from repro.core.runners import HogwildSim, ThreadedShadowRunner
-from repro.core.sync import BMUFState, SyncConfig
+from repro.core.sync import SyncConfig
 from repro import checkpoint as ckpt
 
 
@@ -78,7 +78,7 @@ def run_lm(args) -> dict:
     cfg = reduced(get_config(args.arch))
     opt = optim.make(args.optimizer, args.lr)
     R = args.replicas
-    sync_cfg = SyncConfig(algo=args.algo, alpha=args.alpha)
+    sync_cfg = SyncConfig(algo=args.algo, alpha=args.alpha).validate()
     key = jax.random.PRNGKey(args.seed)
     params = spmd.init_params(cfg, key)
     stack = spmd.stack_replicas(params, R)
@@ -87,8 +87,8 @@ def run_lm(args) -> dict:
         lambda x: jnp.broadcast_to(x[None], (R,) + x.shape).copy(), opt.init(params))
     train_step = jax.jit(spmd.make_train_step(cfg, opt, "shadow"))
     sync_step = jax.jit(spmd.make_sync_step(cfg, sync_cfg))
-    w_ps = jax.tree.map(jnp.copy, params) if args.algo == "easgd" else None
-    bmuf = BMUFState.init(params) if args.algo == "bmuf" else None
+    # Opaque per-algorithm state (sync-PS copy, momentum, counter, or None).
+    algo_state = algorithms.get(args.algo).init_state(params, sync_cfg)
 
     trans = tok.make_transition(cfg.vocab_size, seed=args.seed)
     losses = []
@@ -100,12 +100,7 @@ def run_lm(args) -> dict:
         losses.append(float(jnp.mean(loss)))
         # Background cadence (host loop quantization of the shadow thread).
         if (it + 1) % args.sync_gap == 0:
-            if args.algo == "easgd":
-                stack, w_ps = sync_step(stack, w_ps)
-            elif args.algo == "ma":
-                stack = sync_step(stack)
-            else:
-                stack, bmuf = sync_step(stack, bmuf)
+            stack, algo_state = sync_step(stack, algo_state)
     wall = time.perf_counter() - t0
     print(f"{args.arch} x{R} replicas [{args.algo}]: loss "
           f"{np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f} "
@@ -119,7 +114,7 @@ def main():
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     d = sub.add_parser("dlrm")
-    d.add_argument("--algo", choices=["easgd", "ma", "bmuf"], default="easgd")
+    d.add_argument("--algo", choices=list(algorithms.names()), default="easgd")
     d.add_argument("--mode", choices=["shadow", "fixed_rate"], default="shadow")
     d.add_argument("--trainers", type=int, default=4)
     d.add_argument("--threads", type=int, default=4)
@@ -142,7 +137,7 @@ def main():
 
     l = sub.add_parser("lm")
     l.add_argument("--arch", choices=list(ARCH_IDS), default="minicpm-2b")
-    l.add_argument("--algo", choices=["easgd", "ma", "bmuf"], default="easgd")
+    l.add_argument("--algo", choices=list(algorithms.names()), default="easgd")
     l.add_argument("--replicas", type=int, default=2)
     l.add_argument("--batch-size", type=int, default=8)
     l.add_argument("--seq-len", type=int, default=128)

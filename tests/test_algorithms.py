@@ -1,0 +1,406 @@
+"""Pluggable SyncAlgorithm API (core/algorithms.py): registry semantics, a
+toy algorithm registered in-test running end-to-end on every substrate with
+ZERO runner edits, the gossip algorithm family, and the BMUF threaded-shadow
+regression (the pre-registry runner silently ran MA for algo="bmuf")."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.core import algorithms, spmd
+from repro.core import sync as S
+from repro.core.runners import HogwildSim, ThreadedShadowRunner
+from repro.core.sync import SyncConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = dlrm_ctr.tiny()
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"easgd", "ma", "bmuf", "gossip"} <= set(algorithms.names())
+
+    def test_get_unknown_raises(self):
+        with pytest.raises(KeyError, match="unknown sync algorithm"):
+            algorithms.get("nope")
+
+    def test_register_requires_name(self):
+        class NoName(algorithms.SyncAlgorithm):
+            pass
+
+        with pytest.raises(ValueError, match="non-empty"):
+            algorithms.register(NoName())
+
+    def test_register_duplicate_raises_unless_override(self):
+        class Dup(algorithms.SyncAlgorithm):
+            name = "ma"
+
+        with pytest.raises(ValueError, match="already registered"):
+            algorithms.register(Dup())
+        original = algorithms.get("ma")
+        try:
+            algorithms.register(Dup(), override=True)
+            assert isinstance(algorithms.get("ma"), Dup)
+        finally:
+            algorithms.register(original, override=True)
+
+    def test_sync_config_validates_against_registry(self):
+        with pytest.raises(ValueError, match="unknown sync algo"):
+            SyncConfig(algo="nope").validate()
+        for name in algorithms.names():
+            assert SyncConfig(algo=name).validate().algo == name
+
+    def test_centralized_metadata_drives_config(self):
+        assert SyncConfig(algo="easgd").centralized()
+        assert not SyncConfig(algo="ma").centralized()
+        assert not SyncConfig(algo="gossip").centralized()
+
+
+# ---------------------------------------------------------------------------
+# Genericity: a toy algorithm defined HERE runs on every substrate
+# ---------------------------------------------------------------------------
+
+class ScaledMA(algorithms.SyncAlgorithm):
+    """Pull every replica toward a damped replica mean. Implements ONLY the
+    pytree oracle — the flat engine, the threaded shadow round, and the SPMD
+    sync step all come from the base-class fallbacks."""
+
+    name = "scaled_ma"
+    beta = 0.95
+
+    def land(self, stack, state, snap, mask, cfg):
+        src = stack if snap is None else snap
+        mean = S.replica_mean(src)
+        target = jax.tree.map(
+            lambda g, x: jnp.broadcast_to((self.beta * g).astype(x.dtype), x.shape),
+            mean, stack)
+        return S.lerp(stack, target, cfg.alpha), state
+
+
+@pytest.fixture
+def scaled_ma():
+    algo = ScaledMA()
+    algorithms.register(algo)
+    try:
+        yield algo
+    finally:
+        algorithms.unregister("scaled_ma")
+
+
+def _run_sim(algo, engine, iters=10, mode="shadow", gap=4):
+    sim = HogwildSim(
+        CFG, SyncConfig(algo=algo, mode=mode, gap=gap, alpha=0.5, delay=1,
+                        engine=engine),
+        n_trainers=3, n_threads=2, batch_size=32,
+        optimizer=optim.adagrad(0.02), seed=0)
+    out = sim.run(iters)
+    return out
+
+
+class TestToyAlgorithmEndToEnd:
+    def test_hogwild_both_engines_parity(self, scaled_ma):
+        """The in-test algorithm trains in HogwildSim on BOTH engines and the
+        generic flat fallback matches the pytree oracle exactly."""
+        out_f = _run_sim("scaled_ma", "flat")
+        out_p = _run_sim("scaled_ma", "pytree")
+        assert out_f["sync_count"] == out_p["sync_count"] > 0
+        assert all(np.isfinite(l) for l in out_f["train_loss"])
+        np.testing.assert_allclose(out_f["train_loss"], out_p["train_loss"], **TOL)
+
+    def test_hogwild_fixed_rate(self, scaled_ma):
+        out_f = _run_sim("scaled_ma", "flat", mode="fixed_rate")
+        out_p = _run_sim("scaled_ma", "pytree", mode="fixed_rate")
+        np.testing.assert_allclose(out_f["train_loss"], out_p["train_loss"], **TOL)
+
+    def test_threaded_runner(self, scaled_ma):
+        r = ThreadedShadowRunner(
+            CFG, SyncConfig(algo="scaled_ma", alpha=0.5), n_trainers=2,
+            batch_size=32, optimizer=optim.adagrad(0.02), sync_sleep_s=0.002)
+        out = r.run(8)
+        assert out["sync_count"] > 0
+        assert all(np.isfinite(l) for l in out["train_loss"])
+
+    def test_spmd_sync_step(self, scaled_ma):
+        sc = SyncConfig(algo="scaled_ma", alpha=1.0)
+        step = jax.jit(spmd.make_sync_step(None, sc))
+        stack = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 6))}
+        state = algorithms.get("scaled_ma").init_state({"w": stack["w"][0]}, sc)
+        new, _ = step(stack, state)
+        np.testing.assert_allclose(
+            np.asarray(new["w"]),
+            np.broadcast_to(0.95 * np.asarray(stack["w"]).mean(0), (4, 6)),
+            rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gossip: pairing, oracle semantics, kernel parity, substrates
+# ---------------------------------------------------------------------------
+
+class TestGossipPairing:
+    def test_all_ids_pair_and_rotate(self):
+        p0 = np.asarray(algorithms._ring_partner(4, jnp.int32(0)))
+        np.testing.assert_array_equal(p0, [1, 0, 3, 2])
+        p1 = np.asarray(algorithms._ring_partner(4, jnp.int32(1)))
+        assert not np.array_equal(p0, p1)
+        # every matching is an involution: partner[partner[i]] == i
+        for p in (p0, p1):
+            np.testing.assert_array_equal(p[p], np.arange(4))
+        # the union of pair edges over rounds connects the ring
+        edges = {frozenset((i, int(p[i]))) for p in (p0, p1)
+                 for i in range(4) if p[i] != i}
+        assert len(edges) == 4
+
+    def test_odd_count_sits_one_out(self):
+        sat_out = set()
+        for shift in range(5):
+            p = np.asarray(algorithms._ring_partner(5, jnp.int32(shift)))
+            np.testing.assert_array_equal(p[p], np.arange(5))
+            selfs = np.flatnonzero(p == np.arange(5))
+            assert selfs.size == 1  # exactly one replica sits out
+            sat_out.add(int(selfs[0]))
+        assert len(sat_out) > 1  # the sit-out rotates across rounds
+
+    def test_singleton_fire_still_syncs(self):
+        """Regression: a round where ONE shadow clock fired must still land a
+        pair — the initiator pulls in its passive ring partner (ADPSGD). The
+        staggered HogwildSim schedule fires exactly one replica per round
+        whenever R <= gap, so rank-pairing of same-round firers would make
+        gossip a silent no-op there."""
+        mask = np.asarray([False, False, True, False])
+        rows, self_pos, partner_pos = algorithms._gossip_participants_np(
+            mask, 4, 0)
+        assert rows == [2, 3]  # initiator 2 + passive partner 3
+        assert [rows[p] for p in partner_pos] == [3, 2]
+
+    def test_inactive_pairs_cost_nothing(self):
+        mask = np.asarray([False, False, True, True, False, False])
+        rows, _, _ = algorithms._gossip_participants_np(mask, 6, 0)
+        assert rows == [2, 3]  # pair (0,1) and (4,5) never gathered
+
+    def test_host_mirror_matches_jnp(self):
+        for R, shift in [(4, 0), (4, 3), (5, 2), (7, 11), (8, 5)]:
+            pj = np.asarray(algorithms._ring_partner(R, jnp.int32(shift)))
+            pn = algorithms._ring_partner_np(R, shift)
+            np.testing.assert_array_equal(pj, pn)
+            rng = np.random.RandomState(R * 31 + shift)
+            mask = rng.rand(R) > 0.4
+            mask[rng.randint(R)] = True
+            rows, self_pos, partner_pos = algorithms._gossip_participants_np(
+                mask, R, shift)
+            # rows == exactly the members of active pairs, in id order
+            expect = sorted(i for i in range(R)
+                            if pn[i] != i and (mask[i] or mask[pn[i]]))
+            assert rows == expect
+            for k, rid in enumerate(rows):
+                assert self_pos[k] == k
+                assert rows[partner_pos[k]] == pn[rid]
+
+
+class TestGossipOracle:
+    def test_pair_becomes_mean_at_alpha_one(self):
+        algo = algorithms.get("gossip")
+        stack = {"w": jnp.asarray([[2.0], [4.0]])}
+        cfg = SyncConfig(algo="gossip", alpha=1.0)
+        new, state = algo.land(stack, jnp.int32(0), None, None, cfg)
+        np.testing.assert_allclose(np.asarray(new["w"]), [[3.0], [3.0]])
+        assert int(state) == 1
+
+    def test_landing_uses_snapshot_mix_on_current(self):
+        """Pair mix comes from the LAUNCH snapshot; the elastic pull-back
+        lands on the current (moved-on) replicas — paper §3.3."""
+        algo = algorithms.get("gossip")
+        stack = {"w": jnp.asarray([[10.0], [20.0]])}
+        snap = {"w": jnp.asarray([[0.0], [2.0]])}
+        cfg = SyncConfig(algo="gossip", alpha=0.5)
+        new, _ = algo.land(stack, jnp.int32(0), snap, None, cfg)
+        # mix = 1.0 for both; w0' = 0.5*10 + 0.5*1 = 5.5 ; w1' = 10.5
+        np.testing.assert_allclose(np.asarray(new["w"]), [[5.5], [10.5]])
+
+    def test_inactive_pair_untouched_passive_partner_lands(self):
+        algo = algorithms.get("gossip")
+        key = jax.random.PRNGKey(0)
+        stack = {"w": jax.random.normal(key, (4, 3))}
+        # shift 0 pairs (0,1) and (2,3); only replica 2 fired
+        mask = jnp.asarray([False, False, True, False])
+        cfg = SyncConfig(algo="gossip", alpha=0.7)
+        new, _ = algo.land(stack, jnp.int32(0), None, mask, cfg)
+        for i in (0, 1):  # inactive pair: bit-identical
+            np.testing.assert_array_equal(np.asarray(new["w"][i]),
+                                          np.asarray(stack["w"][i]))
+        for i in (2, 3):  # initiator AND its passive partner both moved
+            assert float(jnp.abs(new["w"][i] - stack["w"][i]).max()) > 1e-6
+
+    def test_preserves_pair_mean(self):
+        """Pairwise elastic averaging never moves the global replica mean when
+        every replica lands (even R, all fired)."""
+        stack = {"w": jax.random.normal(jax.random.PRNGKey(3), (6, 5))}
+        algo = algorithms.get("gossip")
+        cfg = SyncConfig(algo="gossip", alpha=0.6)
+        new, _ = algo.land(stack, jnp.int32(2), None, None, cfg)
+        np.testing.assert_allclose(np.asarray(new["w"].mean(0)),
+                                   np.asarray(stack["w"].mean(0)), atol=1e-5)
+
+
+class TestGossipKernelParity:
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    @pytest.mark.parametrize("fired", [(0, 1, 2, 3), (0, 2, 3), (1,), (2,)])
+    def test_round_op_vs_oracle(self, fired, use_pallas):
+        from repro.core.flatspace import LANE
+        from repro.kernels.gossip_update.ops import gossip_round_op
+
+        key = jax.random.PRNGKey(9)
+        stack = jax.random.normal(key, (4, 256, LANE), jnp.float32)
+        snap_full = jax.random.normal(jax.random.fold_in(key, 1),
+                                      (4, 256, LANE), jnp.float32)
+        mask = np.asarray([i in fired for i in range(4)])
+        shift = 1
+        rows, self_pos, partner_pos = algorithms._gossip_participants_np(
+            mask, 4, shift)
+        new = gossip_round_op(
+            stack.copy(),  # the op donates stack
+            snap_full[np.asarray(rows)], jnp.asarray(rows, jnp.int32),
+            jnp.asarray(self_pos, jnp.int32), jnp.asarray(partner_pos, jnp.int32),
+            0.3, use_pallas=use_pallas)
+        oracle, _ = algorithms.get("gossip").land(
+            {"w": stack}, jnp.int32(shift), {"w": snap_full},
+            jnp.asarray(mask), SyncConfig(algo="gossip", alpha=0.3))
+        np.testing.assert_allclose(np.asarray(new), np.asarray(oracle["w"]),
+                                   rtol=1e-5, atol=1e-6)
+        for i in range(4):
+            if i not in rows:
+                assert np.array_equal(np.asarray(new[i]), np.asarray(stack[i]))
+
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    def test_pair_op_symmetric(self, use_pallas):
+        from repro.core.flatspace import LANE
+        from repro.kernels.gossip_update.ops import gossip_pair_flat_op
+
+        key = jax.random.PRNGKey(4)
+        a = jax.random.normal(key, (256, LANE), jnp.float32)
+        b = jax.random.normal(jax.random.fold_in(key, 1), (256, LANE), jnp.float32)
+        na, nb = gossip_pair_flat_op(a, b, 1.0, use_pallas=use_pallas)
+        np.testing.assert_allclose(np.asarray(na), np.asarray(nb), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(na), np.asarray(0.5 * (a + b)),
+                                   rtol=1e-6)
+
+
+class TestGossipSubstrates:
+    def test_shadow_mode_actually_syncs_when_r_below_gap(self):
+        """Regression: with R <= gap the staggered shadow schedule fires ONE
+        replica per round; gossip landings must still move weights (vs a
+        never-syncing run) — pairing only same-round firers silently no-ops
+        here while sync_count keeps climbing."""
+        out_sync = _run_sim("gossip", "flat", iters=14)
+        out_none = _run_sim("gossip", "flat", iters=14, gap=10 ** 9)
+        assert out_sync["sync_count"] > 0
+        w_sync = np.asarray(out_sync["state"].w_stack)
+        w_none = np.asarray(out_none["state"].w_stack)
+        assert float(np.abs(w_sync - w_none).max()) > 1e-6
+
+    def test_threaded_runner(self):
+        r = ThreadedShadowRunner(
+            CFG, SyncConfig(algo="gossip", alpha=0.5), n_trainers=2,
+            batch_size=32, optimizer=optim.adagrad(0.02), sync_sleep_s=0.002)
+        out = r.run(10)
+        assert out["sync_count"] > 0
+        assert all(np.isfinite(l) for l in out["train_loss"])
+
+    def test_spmd_sync_step_mixes_replicas(self):
+        sc = SyncConfig(algo="gossip", alpha=1.0)
+        step = jax.jit(spmd.make_sync_step(None, sc))
+        stack = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 8, 16))}
+        state = algorithms.get("gossip").init_state(None, sc)
+
+        def disp(s):
+            x = s["w"]
+            return float(((x - x.mean(0)) ** 2).sum())
+
+        d0 = disp(stack)
+        for _ in range(6):
+            stack, state = step(stack, state)
+        assert int(state) == 6
+        assert disp(stack) < 0.2 * d0  # rotation connects the gossip graph
+
+
+# ---------------------------------------------------------------------------
+# BMUF threaded-shadow regression: real block momentum in the background
+# ---------------------------------------------------------------------------
+
+class TestBMUFThreadedRegression:
+    """The pre-registry ThreadedShadowRunner ran MA for algo="bmuf" on the
+    flat path ("bmuf analogous, ma used here"). The registry port must land
+    BMUF with the real block-momentum global step, on both engines."""
+
+    @pytest.mark.parametrize("engine", ["flat", "pytree"])
+    def test_shadow_round_matches_bmuf_oracle(self, engine):
+        from repro.models import dlrm
+
+        sc = SyncConfig(algo="bmuf", alpha=0.5, eta=0.9, block_momentum=0.8,
+                        engine=engine)
+        r = ThreadedShadowRunner(CFG, sc, n_trainers=3, batch_size=16,
+                                 optimizer=optim.adagrad(0.02))
+        keys = jax.random.split(jax.random.PRNGKey(7), 3)
+        trees = [dlrm.init_dense(CFG, k) for k in keys]
+        if engine == "flat":
+            ws = [r.flat.pack(t) for t in trees]
+            state = r.algo.init_state_flat(r.flat.pack(trees[0]), sc, r.flat)
+        else:
+            ws = [jax.tree.map(jnp.copy, t) for t in trees]
+            state = r.algo.init_state(trees[0], sc)
+        # oracle: two BMUF rounds over the same stack (no concurrent training,
+        # so the threaded round == bmuf_round against the current stack)
+        o_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        o_state = S.BMUFState.init(trees[0])
+        for _ in range(2):
+            state, n = r._shadow_round(ws, state)
+            assert n == 1
+            o_stack, o_state = S.bmuf_round(o_stack, o_state, sc.alpha,
+                                            eta=sc.eta,
+                                            block_momentum=sc.block_momentum)
+        got = [r.flat.unpack(p) for p in ws] if engine == "flat" else ws
+        for i in range(3):
+            for a, b in zip(jax.tree.leaves(got[i]),
+                            jax.tree.leaves(S.tree_slice(o_stack, i))):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+        # momentum state actually accumulated
+        vel_norm = sum(float(jnp.abs(v).sum())
+                       for v in jax.tree.leaves(state.velocity))
+        assert vel_norm > 0
+
+    def test_block_momentum_changes_landing(self):
+        """With momentum, round 2 must differ from the momentum-free landing —
+        the regression (MA instead of BMUF) would make these identical."""
+        from repro.models import dlrm
+
+        def two_rounds(bm):
+            sc = SyncConfig(algo="bmuf", alpha=0.5, eta=1.0, block_momentum=bm,
+                            engine="flat")
+            r = ThreadedShadowRunner(CFG, sc, n_trainers=2, batch_size=16,
+                                     optimizer=optim.adagrad(0.02))
+            keys = jax.random.split(jax.random.PRNGKey(3), 2)
+            ws = [r.flat.pack(dlrm.init_dense(CFG, k)) for k in keys]
+            state = r.algo.init_state_flat(ws[0], sc, r.flat)
+            for _ in range(2):
+                state, _ = r._shadow_round(ws, state)
+            return ws[0]
+
+        p_no = two_rounds(0.0)
+        p_bm = two_rounds(0.9)
+        assert float(jnp.abs(p_no - p_bm).max()) > 1e-5
+
+    def test_threaded_runner_bmuf_end_to_end(self):
+        r = ThreadedShadowRunner(
+            CFG, SyncConfig(algo="bmuf", alpha=0.5, block_momentum=0.5),
+            n_trainers=2, batch_size=32, optimizer=optim.adagrad(0.02),
+            sync_sleep_s=0.002)
+        out = r.run(10)
+        assert out["sync_count"] > 0
+        assert all(np.isfinite(l) for l in out["train_loss"])

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import algorithms
 from repro.core import sync as S
 from repro.core.flatspace import LANE, FlatSpace
 from repro.kernels.bmuf_update.ops import bmuf_sync_op
@@ -91,6 +92,14 @@ class TestRoundTrip:
         plane = fs.pack(tree)
         assert fs.total == 130 and fs.slots >= 130
         np.testing.assert_array_equal(np.asarray(plane.reshape(-1)[130:]), 0.0)
+
+    def test_unpackable_dtypes_rejected(self):
+        """fp32 round-tripping silently corrupts int/f64 leaves (e.g. int32
+        16777217 -> 16777216), so from_tree must refuse them up front."""
+        with pytest.raises(TypeError, match="lossless"):
+            FlatSpace.from_tree({"w": jnp.ones((4,)), "step": jnp.int32(7)})
+        with pytest.raises(TypeError, match="lossless"):
+            FlatSpace.from_tree({"ids": jnp.zeros((3,), jnp.int64)})
 
 
 # ---------------------------------------------------------------------------
@@ -212,7 +221,9 @@ def _run_engine(algo, engine, mode="shadow", delay=1, iters=12):
     return tuple(out["train_loss"]), ev, out["sync_count"]
 
 
-@pytest.mark.parametrize("algo", ["easgd", "ma", "bmuf"])
+# Parameterized over the REGISTRY: a newly registered algorithm (e.g.
+# gossip) gets flat-vs-pytree parity coverage for free.
+@pytest.mark.parametrize("algo", algorithms.names())
 def test_sim_flat_matches_pytree_shadow(algo):
     """mode="shadow" exercises the masked + launch-snapshot/delay paths; the
     two engines must produce numerically equivalent training (fp32 tol)."""
@@ -223,7 +234,7 @@ def test_sim_flat_matches_pytree_shadow(algo):
     np.testing.assert_allclose(ev_f, ev_p, rtol=1e-4, atol=1e-5)
 
 
-@pytest.mark.parametrize("algo", ["easgd", "ma"])
+@pytest.mark.parametrize("algo", algorithms.names())
 def test_sim_flat_matches_pytree_fixed_rate(algo):
     loss_f, ev_f, _ = _run_engine(algo, "flat", mode="fixed_rate")
     loss_p, ev_p, _ = _run_engine(algo, "pytree", mode="fixed_rate")
@@ -253,7 +264,7 @@ class TestStreamAccounting:
             MIN_STREAM_RATIO, flat_sync_bytes, pytree_sync_bytes)
 
         n = 512 * 1024
-        for algo in ("easgd", "ma", "bmuf"):
+        for algo in algorithms.names():
             ratio = pytree_sync_bytes(algo, r, n) / flat_sync_bytes(algo, r, n)
             assert ratio >= MIN_STREAM_RATIO[algo], (algo, r, ratio)
 

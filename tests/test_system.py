@@ -8,6 +8,7 @@ import pytest
 
 from repro import optim
 from repro.configs import dlrm_ctr
+from repro.core import algorithms
 from repro.core.elp import PAPER_TABLE1, elp
 from repro.core.runners import HogwildSim, ThreadedShadowRunner
 from repro.core.sync import SyncConfig
@@ -31,10 +32,11 @@ def run_cached(algo, mode, gap=5, trainers=4, threads=2, seed=0, iters=ITERS, de
     }
 
 
-@pytest.mark.parametrize("algo", ["easgd", "ma", "bmuf"])
+@pytest.mark.parametrize("algo", algorithms.names())
 @pytest.mark.parametrize("mode", ["shadow", "fixed_rate"])
 def test_training_converges(algo, mode):
-    """One-pass CTR training converges for every (algo, shadow/FR) combination."""
+    """One-pass CTR training converges for every registered algorithm in both
+    shadow and fixed-rate mode (gossip rides in via the registry)."""
     out = run_cached(algo, mode)
     assert out["end"] < out["start"] - 0.05, (algo, mode, out)
     assert np.isfinite(out["eval"])

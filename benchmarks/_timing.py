@@ -1,0 +1,15 @@
+"""Shared wall-clock helper for the benchmark modules: compile once (first
+call, blocked), then average ``iters`` blocked calls, in microseconds."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, iters: int = 5) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6

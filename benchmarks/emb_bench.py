@@ -1,0 +1,156 @@
+"""Embedding substrate benchmark: dense-take vs fused kernels vs plan-sharded.
+
+One full embedding cycle (sum-pooled lookup forward + row-sparse Adagrad
+backward) through the three paths the runners can take (DESIGN.md §7):
+
+* ``dense_take``  — the pure-jnp oracle: ``jnp.take`` + sum forward, scatter
+  chain backward (materializes the (n_items, d) per-occurrence gradient
+  broadcast and the (B, F, m, d) gathered vectors).
+* ``fused``       — the Pallas ops (``kernels/embedding_bag`` +
+  ``kernels/sparse_adagrad``): one launch each way, nothing materialized.
+  Wall time is labeled with how the kernel actually ran (compiled on TPU,
+  interpreter elsewhere — interpreter wall is NOT a perf claim, mirroring
+  kernel_bench.py; the analytic stream model is the portable number).
+* ``plan_sharded`` — the ``EmbeddingShards`` engine: LPT bin-packed per-PS
+  tables, one fused launch per shard each way (the ThreadedShadowRunner
+  path, where per-shard independence also de-serializes Hogwild writes).
+
+The analytic HBM stream model is op-level fp32 accounting like DESIGN.md §3.3
+(each op reads its inputs and writes its outputs once; I = bag*hot occurrence
+count, G = bag count, U <= I distinct rows touched, d = embedding dim):
+
+* forward  dense-take: gather I + write/read vecs 2I + write pool G = 3I+G;
+  fused: stream I rows in, pool G out = I+G.
+* backward dense-take: bcast G+I, square 2I, acc scatter 3I, acc gather 2I,
+  scale 2I, mul 3I, table scatter 3I = 16I+G floats (xd);
+  fused: g blocks I, table rows 2U, acc rows 2U = I+4U.
+
+`--json` writes BENCH_emb.json (the per-PR sparse-path trajectory);
+`--tiny` shrinks shapes for the CI smoke.
+
+  PYTHONPATH=src python -m benchmarks.emb_bench [--json] [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._timing import time_call as _time
+
+N_SHARDS = 4
+
+
+def dense_take_bytes(n_items: int, n_bags: int, d: int) -> int:
+    return 4 * d * ((3 * n_items + n_bags) + (16 * n_items + n_bags))
+
+
+def fused_bytes(n_items: int, n_bags: int, d: int, unique_rows: int) -> int:
+    return 4 * d * ((n_items + n_bags) + (n_items + 4 * unique_rows))
+
+
+def bench_emb(json_path: Optional[str] = None,
+              tiny: bool = False) -> List[Tuple[str, float, str]]:
+    from repro.configs import dlrm_ctr
+    from repro.embeddings import shards
+    from repro.embeddings import table as emb
+    from repro.kernels.backend import on_tpu
+
+    cfg = dlrm_ctr.tiny(embedding_dim=16 if tiny else 64)
+    spec = emb.spec_from_config(cfg)
+    B = 64 if tiny else 512
+    F, m, d = cfg.n_sparse_features, cfg.multi_hot, cfg.embedding_dim
+    n_bags, n_items = B * F, B * F * m
+
+    key = jax.random.PRNGKey(0)
+    state = emb.init_tables(spec, key)
+    idx = jax.random.randint(
+        jax.random.fold_in(key, 1), (B, F, m), 0, 1 << 30
+    ) % jnp.asarray(spec.sizes)[None, :, None]
+    g = jax.random.normal(jax.random.fold_in(key, 2), (B, F, d))
+    rows = np.asarray(emb.global_row_ids(spec, idx)).reshape(-1)
+    unique_rows = int(len(np.unique(rows)))
+    lr = 0.05
+
+    plan = shards.plan_shards(spec, N_SHARDS, B)
+    sh = shards.EmbeddingShards.init(plan, key)
+
+    mode = "compiled" if on_tpu() else "interpret"
+    print(f"\n== Embedding cycle: dense-take vs fused[{mode}] vs plan-sharded "
+          f"(B={B}, F={F}, m={m}, d={d}, {unique_rows}/{n_items} distinct rows) ==")
+
+    def cyc_dense(state, idx, g):
+        pooled = emb.lookup(state, spec, idx, use_pallas=False)
+        return pooled, emb.sparse_adagrad_update(state, spec, idx, g, lr)
+
+    def cyc_fused(state, idx, g):
+        pooled = emb.lookup(state, spec, idx)
+        return pooled, emb.sparse_adagrad_update_fused(state, spec, idx, g, lr)
+
+    def cyc_sharded(states, idx, g):
+        pooled = shards.shard_lookup(
+            plan, tuple(st["table"] for st in states), idx)
+        new = [shards.shard_update(plan, s, states[s], idx, g, lr)
+               for s in range(plan.n_shards)]
+        return pooled, new
+
+    b_dense = dense_take_bytes(n_items, n_bags, d)
+    b_fused = fused_bytes(n_items, n_bags, d, unique_rows)
+    ratio = b_dense / b_fused
+
+    rows_out: List[Tuple[str, float, str]] = []
+    us_dense = _time(jax.jit(cyc_dense), state, idx, g)
+    rows_out.append(("emb/dense_take", us_dense, f"{b_dense / 1e6:.1f} MB/cycle"))
+    us_fused = _time(jax.jit(cyc_fused), state, idx, g)
+    rows_out.append((f"emb/fused[{mode}]", us_fused,
+                     f"{b_fused / 1e6:.1f} MB/cycle ({ratio:.2f}x fewer streams)"))
+    us_shard = _time(jax.jit(cyc_sharded), sh.states, idx, g)
+    rows_out.append((f"emb/plan_sharded[{mode}]", us_shard,
+                     f"{plan.n_shards} PSs, fused per shard, "
+                     f"independent Hogwild writes"))
+    for name, us, derived in rows_out:
+        print(f"  {name:26s} {us:12.1f} us/cycle   {derived}")
+
+    if json_path:
+        results: Dict[str, Dict] = {
+            "dense_take": {"wall_us": us_dense, "bytes": b_dense},
+            "fused": {"wall_us": us_fused, "bytes": b_fused,
+                      "stream_ratio": ratio, "mode": mode},
+            "plan_sharded": {"wall_us": us_shard, "bytes": b_fused,
+                             "n_shards": plan.n_shards, "mode": mode,
+                             "bins": [list(b) for b in plan.bins]},
+        }
+        payload = {
+            "bench": "emb_bench",
+            "config": {"B": B, "F": F, "m": m, "d": d,
+                       "n_items": n_items, "n_bags": n_bags,
+                       "unique_rows": unique_rows, "lr": lr,
+                       "table_rows": spec.total_rows, "tiny": tiny},
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {json_path}")
+    return rows_out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_emb.json next to the cwd")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-smoke shapes (small batch/dim)")
+    args = ap.parse_args()
+    rows = bench_emb(json_path="BENCH_emb.json" if args.json else None,
+                     tiny=args.tiny)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Prints human-readable tables followed by a ``name,us_per_call,derived`` CSV
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run --only fig5 # one table/figure
   PYTHONPATH=src python -m benchmarks.run --only sync --json  # + BENCH_sync.json
+  PYTHONPATH=src python -m benchmarks.run --only emb --json   # + BENCH_emb.json
 """
 from __future__ import annotations
 
@@ -15,11 +16,12 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|sync|roofline")
+                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|sync|emb|roofline")
     ap.add_argument("--json", action="store_true",
-                    help="write BENCH_sync.json (sync bench results) to the cwd")
+                    help="write BENCH_sync.json / BENCH_emb.json to the cwd")
     args = ap.parse_args()
 
+    from benchmarks.emb_bench import bench_emb
     from benchmarks.kernel_bench import bench_kernels
     from benchmarks.paper_tables import (
         bench_fig5_scaling, bench_fig6_bmuf_ma, bench_fig7_shadow_algos,
@@ -38,6 +40,8 @@ def main() -> None:
         ("kernel", bench_kernels),
         ("sync", lambda: bench_sync(
             json_path="BENCH_sync.json" if args.json else None)),
+        ("emb", lambda: bench_emb(
+            json_path="BENCH_emb.json" if args.json else None)),
         ("roofline", bench_roofline),
     ]
     rows = []

@@ -23,12 +23,12 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks._timing import time_call as _time
 from repro.core import algorithms
 
 R = 8  # trainers
@@ -60,16 +60,9 @@ def stream_ratio(algo: str, r: int, n: int) -> float:
 
 
 # ---------------------------------------------------------------------------
-# Wall-time measurement (jitted oracle paths, full-size DLRM dense replicas)
+# Wall-time measurement (jitted oracle paths, full-size DLRM dense replicas;
+# timer shared with the other benches via benchmarks/_timing.py)
 # ---------------------------------------------------------------------------
-
-def _time(fn, *args, iters: int = 5) -> float:
-    jax.block_until_ready(fn(*args))  # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
-
 
 def bench_sync(json_path: Optional[str] = None) -> List[Tuple[str, float, str]]:
     from repro.configs import dlrm_ctr

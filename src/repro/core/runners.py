@@ -20,6 +20,17 @@ live in a persistent ``(R, n_rows, 128)`` fp32 buffer (core/flatspace.py) and
 every background sync is one fused Pallas launch. ``SyncConfig(engine=
 "pytree")`` selects the pure jax.tree.map oracle path.
 
+Both runners also default to the fused SPARSE substrate (DESIGN.md §7):
+embedding forward is the fused lookup+pool kernel and the backward is the
+fused scatter-Adagrad kernel (``kernels/embedding_bag`` /
+``kernels/sparse_adagrad``; compiled on TPU, interpreter elsewhere).
+``HogwildSim`` keeps one packed table (the deterministic-sim semantics);
+``ThreadedShadowRunner`` realizes the paper's embedding PSs: the LPT
+bin-pack plan (``embeddings/shards.py``) splits the collection into
+``n_emb_shards`` independent per-PS Hogwild states, lookups route by the
+plan, and trainer writes to different PSs no longer serialize through one
+jitted scatter.
+
 Neither runner knows any algorithm by name: the whole sync lifecycle —
 state init, launch snapshot, landing, the threaded shadow round — is owned
 by the ``SyncAlgorithm`` fetched from ``core.algorithms`` (DESIGN.md §6),
@@ -40,6 +51,7 @@ from repro.core import algorithms
 from repro.core import sync as S
 from repro.core.flatspace import FlatSpace
 from repro.data import ctr
+from repro.embeddings import shards as emb_shards
 from repro.embeddings import table as emb
 from repro.models import dlrm
 from repro.optim import Optimizer
@@ -127,10 +139,12 @@ class HogwildSim:
                 state_w, state_opt, batch["dense"], pooled, batch["labels"]
             )
             # Hogwild on the single embedding copy: every trainer/thread applies
-            # immediately; one fused scatter implements the accumulate.
+            # immediately; one fused scatter-Adagrad kernel launch implements
+            # the duplicate-row accumulate.
             flat_idx = idx.reshape(-1, cfg.n_sparse_features, cfg.multi_hot)
             flat_g = g_pooled.reshape(-1, cfg.n_sparse_features, cfg.embedding_dim)
-            emb2 = emb.sparse_adagrad_update(emb_state, spec, flat_idx, flat_g, self.emb_lr)
+            emb2 = emb.sparse_adagrad_update_fused(
+                emb_state, spec, flat_idx, flat_g, self.emb_lr)
             return w2, opt2, emb2, jnp.mean(loss)
 
         sc = self.sync_cfg
@@ -236,8 +250,22 @@ class HogwildSim:
                 if pending is None:
                     mask = self._shadow_schedule(t + 1)
                     if mask.any():
-                        pending = (t + 1 + sc.delay,
-                                   self._launch_snapshot(st, mask), mask)
+                        if sc.delay == 0:
+                            # Zero in-flight iterations: the sync launched at
+                            # iteration t lands at iteration t, not t+1 (the
+                            # landing check above has already run this round).
+                            # No training step intervenes and the pytree
+                            # landing doesn't donate, so skip the defensive
+                            # deep copy; the flat engine still builds its
+                            # compact launch form (the fused landing consumes
+                            # exactly that shape).
+                            snap = (self._launch_snapshot(st, mask)
+                                    if self.engine == "flat" else st.w_stack)
+                            st = self._apply_sync(st, snap, mask)
+                            sync_count += int(mask.sum())
+                        else:
+                            pending = (t + 1 + sc.delay,
+                                       self._launch_snapshot(st, mask), mask)
             st.step = t + 1
             if on_iter:
                 on_iter(t, losses[-1])
@@ -299,6 +327,14 @@ class ThreadedShadowRunner:
     trainers can lose updates — that is the point). Dense replicas are owned by
     their trainer; the shadow thread interpolates them in the background.
 
+    The embedding collection is plan-sharded (``embeddings/shards.py``): the
+    LPT bin-pack plan splits the packed tables into ``n_emb_shards``
+    independent per-PS Hogwild states. Lookups route by the plan (one fused
+    lookup+pool kernel launch per shard) and each trainer's backward is one
+    fused scatter-Adagrad launch per shard — writes to different PSs are
+    independent jitted calls on independent arrays, so they no longer
+    serialize through a single scatter over one packed table.
+
     Flat engine: each replica is one contiguous (n_rows, 128) fp32 plane and
     the shadow thread's exchange is a handful of fused kernel launches per
     round. The round itself is built by the SyncAlgorithm
@@ -309,7 +345,8 @@ class ThreadedShadowRunner:
 
     def __init__(self, cfg, sync_cfg: S.SyncConfig, *, n_trainers: int,
                  batch_size: int, optimizer: Optimizer, emb_lr: float = 0.05,
-                 seed: int = 0, sync_sleep_s: float = 0.0):
+                 seed: int = 0, sync_sleep_s: float = 0.0,
+                 n_emb_shards: Optional[int] = None):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
@@ -321,19 +358,28 @@ class ThreadedShadowRunner:
         self.spec = emb.spec_from_config(cfg)
         self.teacher = ctr.make_teacher(cfg, seed=seed + 777)
         self.flat = _dense_flatspace(cfg) if self.engine == "flat" else None
-        spec = self.spec
+        if n_emb_shards is None:
+            n_emb_shards = min(4, cfg.n_sparse_features)
+        # The LPT bin_pack plan assigns tables to embedding PSs (paper §3.1);
+        # lookups and sparse updates route by it below.
+        self.plan = emb_shards.plan_shards(self.spec, n_emb_shards, batch_size)
+        self.n_emb_shards = self.plan.n_shards
+        plan = self.plan
 
-        def train_one(w, opt_state, emb_table, batch):
-            pooled = emb.lookup({"table": emb_table}, spec, batch["sparse"])
+        def train_one(w, opt_state, shard_tables, batch):
+            pooled = emb_shards.shard_lookup(plan, shard_tables, batch["sparse"])
             loss, g_w, g_pooled = dlrm.dense_loss_and_grads(
                 w, batch["dense"], pooled, batch["labels"]
             )
             w, opt_state = optimizer.update(w, opt_state, g_w)
             return w, opt_state, loss, g_pooled
 
-        self._emb_update = jax.jit(
-            lambda st, idx, g: emb.sparse_adagrad_update(st, spec, idx, g, emb_lr)
-        )
+        def _make_shard_update(s: int):
+            return jax.jit(lambda st, idx, g: emb_shards.shard_update(
+                plan, s, st, idx, g, emb_lr))
+
+        self._emb_updates = [_make_shard_update(s)
+                             for s in range(self.n_emb_shards)]
 
         if self.engine == "flat":
             fs = self.flat
@@ -364,7 +410,8 @@ class ThreadedShadowRunner:
             self.w = [jax.tree.map(lambda x: x.copy(), w0) for _ in range(self.R)]
             self.algo_state = self.algo.init_state(w0, self.sync_cfg)
         self.opt_states = [self.opt.init(w0) for _ in range(self.R)]
-        self.emb_state = emb.init_tables(self.spec, ke)
+        # Per-PS Hogwild states, seed-identical to the packed single table.
+        self.emb = emb_shards.EmbeddingShards.init(self.plan, ke)
         self.done = False
         self.examples = 0
         self.sync_count = 0
@@ -377,13 +424,17 @@ class ThreadedShadowRunner:
                 batch = ctr.gen_batch(
                     self.cfg, self.teacher, self.seed + i, it, self.B
                 )
-                # Lock-free read of the shared embedding table (Hogwild).
+                # Lock-free read of the shared per-PS tables (Hogwild).
                 w, opt_state, loss, g_pooled = self._train_one(
-                    self.w[i], self.opt_states[i], self.emb_state["table"], batch
+                    self.w[i], self.opt_states[i], self.emb.tables(), batch
                 )
                 self.w[i], self.opt_states[i] = w, opt_state
-                # Lock-free read-modify-write: concurrent writers can interleave.
-                self.emb_state = self._emb_update(self.emb_state, batch["sparse"], g_pooled)
+                # Lock-free read-modify-write PER SHARD: concurrent writers to
+                # different PSs proceed independently; writers to the same PS
+                # can interleave and lose updates (the Hogwild property).
+                for s in range(self.n_emb_shards):
+                    self.emb.states[s] = self._emb_updates[s](
+                        self.emb.states[s], batch["sparse"], g_pooled)
                 losses[i].append(float(loss))
                 self.iter_count[i] = it + 1
                 with ex_lock:
@@ -422,5 +473,6 @@ class ThreadedShadowRunner:
             "sync_count": self.sync_count,
             "avg_sync_gap": total_iters / max(self.sync_count, 1),
             "w": w_out,
-            "emb_state": self.emb_state,
+            # Engine-independent packed view of the per-PS states.
+            "emb_state": self.emb.to_packed(),
         }

@@ -195,4 +195,18 @@ class SyncConfig:
                              f"registered: {list(algorithms.names())}")
         if self.engine not in ("flat", "pytree"):
             raise ValueError(f"unknown sync engine: {self.engine!r}")
+        if self.mode not in ("shadow", "fixed_rate"):
+            raise ValueError(f"unknown sync mode: {self.mode!r}")
+        if self.gap < 1:
+            raise ValueError(
+                f"gap must be >= 1 (iterations between shadow-clock fires), "
+                f"got {self.gap}")
+        if self.delay < 0:
+            raise ValueError(
+                f"delay must be >= 0 (in-flight iterations of a background "
+                f"sync; 0 lands same-iteration), got {self.delay}")
+        if not 0.0 <= self.alpha <= 1.0:
+            raise ValueError(
+                f"alpha must be in [0, 1] (elastic interpolation weight), "
+                f"got {self.alpha}")
         return self

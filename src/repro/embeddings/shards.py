@@ -1,0 +1,176 @@
+"""Plan-sharded embedding engine: the paper's embedding parameter servers.
+
+``plan_shards`` runs the greedy LPT planner (``table.bin_pack`` over
+``table.lookup_costs``) to assign whole categorical tables to ``n_shards``
+embedding PSs — the paper's load balancing (§3.1). ``ShardPlan`` freezes that
+assignment plus the derived routing arrays; the packed (total_rows, dim)
+collection splits into one contiguous (shard_rows, dim) array per PS, each with
+its co-located Adagrad accumulator.
+
+Lookups route by the plan: each shard answers one fused lookup+pool kernel
+launch over its own features, and the pooled planes reassemble in feature
+order. Backward routes the same way through the fused sparse-Adagrad scatter
+kernel — one launch per shard, touching only that PS's rows.
+
+``EmbeddingShards`` is the stateful host-side holder ``ThreadedShadowRunner``
+uses: ``states[s]`` are genuinely independent per-PS Hogwild states, so
+concurrent trainers writing to different PSs no longer serialize through one
+jitted scatter over a single packed array (DESIGN.md §7)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embeddings.table import (
+    TableSpec,
+    bin_pack,
+    init_tables,
+    lookup_costs,
+)
+from repro.kernels.embedding_bag.ops import embedding_bag_op
+from repro.kernels.sparse_adagrad.ops import sparse_adagrad_op
+from repro.models.layers import Params
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """A frozen table->PS assignment plus the derived routing arrays."""
+    spec: TableSpec
+    bins: Tuple[Tuple[int, ...], ...]  # feature/table ids per shard (LPT order)
+    feature_shard: Tuple[int, ...]  # (F,) shard owning each feature
+    feature_local_offset: Tuple[int, ...]  # (F,) row offset inside its shard
+    shard_rows: Tuple[int, ...]  # packed rows per shard
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.bins)
+
+    @property
+    def feature_order(self) -> Tuple[int, ...]:
+        """Features in shard-concatenation order (bins flattened)."""
+        return tuple(f for feats in self.bins for f in feats)
+
+
+def plan_shards(spec: TableSpec, n_shards: int, batch_size: int) -> ShardPlan:
+    """LPT bin-pack the tables' profiled lookup costs across the PSs."""
+    n_shards = max(1, min(n_shards, len(spec.sizes)))
+    bins = tuple(
+        tuple(b) for b in bin_pack(lookup_costs(spec, batch_size), n_shards)
+    )
+    feature_shard = [0] * len(spec.sizes)
+    feature_local_offset = [0] * len(spec.sizes)
+    shard_rows = []
+    for s, feats in enumerate(bins):
+        off = 0
+        for f in feats:
+            feature_shard[f] = s
+            feature_local_offset[f] = off
+            off += spec.sizes[f]
+        shard_rows.append(off)
+    return ShardPlan(spec, bins, tuple(feature_shard),
+                     tuple(feature_local_offset), tuple(shard_rows))
+
+
+def shard_states(plan: ShardPlan, state: Params) -> List[Params]:
+    """Split a packed {"table", "acc"} state into per-shard states (each shard
+    concatenates its tables' global row ranges in bin order)."""
+    goff = plan.spec.offsets
+    out = []
+    for feats in plan.bins:
+        parts = [(int(goff[f]), int(goff[f]) + plan.spec.sizes[f]) for f in feats]
+        out.append({
+            k: jnp.concatenate([state[k][a:b] for a, b in parts])
+            for k in state
+        })
+    return out
+
+
+def packed_state(plan: ShardPlan, states: List[Params]) -> Params:
+    """Inverse of ``shard_states``: reassemble the global packed state."""
+    parts = {k: [None] * len(plan.spec.sizes) for k in states[0]}
+    for f in range(len(plan.spec.sizes)):
+        s, loff = plan.feature_shard[f], plan.feature_local_offset[f]
+        for k in parts:
+            parts[k][f] = states[s][k][loff:loff + plan.spec.sizes[f]]
+    return {k: jnp.concatenate(v) for k, v in parts.items()}
+
+
+def _route(plan: ShardPlan, s: int, idx: jnp.ndarray) -> jnp.ndarray:
+    """Shard s's slice of a (B, F, m) index batch, in LOCAL row ids."""
+    feats = plan.bins[s]
+    loc = jnp.take(idx, jnp.asarray(feats), axis=1)
+    offs = jnp.asarray([plan.feature_local_offset[f] for f in feats], jnp.int32)
+    return loc + offs[None, :, None]
+
+
+def shard_lookup(
+    plan: ShardPlan,
+    tables: Tuple[jnp.ndarray, ...],
+    idx: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Plan-routed sum-pooled lookup. idx: (B, F, m) LOCAL-per-feature ids
+    (as produced by the data pipeline) -> (B, F, dim). One fused kernel
+    launch per shard."""
+    outs = [
+        embedding_bag_op(tables[s], _route(plan, s, idx),
+                         use_pallas=use_pallas, interpret=interpret)
+        for s in range(plan.n_shards)
+    ]
+    pooled = jnp.concatenate(outs, axis=1)  # features in bins order
+    inv = np.argsort(np.asarray(plan.feature_order))
+    return jnp.take(pooled, jnp.asarray(inv), axis=1)
+
+
+def shard_update(
+    plan: ShardPlan,
+    s: int,
+    state_s: Params,
+    idx: jnp.ndarray,
+    g_pooled: jnp.ndarray,
+    lr: float,
+    eps: float = 1e-8,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> Params:
+    """Fused sparse-Adagrad backward for ONE shard: touches only this PS's
+    rows, so per-shard updates are independent Hogwild writes."""
+    m, d = idx.shape[-1], g_pooled.shape[-1]
+    loc = _route(plan, s, idx).reshape(-1, m)
+    g = jnp.take(g_pooled, jnp.asarray(plan.bins[s]), axis=1).reshape(-1, d)
+    table, acc = sparse_adagrad_op(
+        state_s["table"], state_s["acc"], loc, g, lr=lr, eps=eps,
+        use_pallas=use_pallas, interpret=interpret)
+    return {"table": table, "acc": acc}
+
+
+class EmbeddingShards:
+    """Host-side holder of the per-PS Hogwild states (ThreadedShadowRunner's
+    embedding substrate). ``states[s]`` is replaced wholesale per update —
+    concurrent trainers can interleave per shard (lost updates included:
+    that is the preserved Hogwild property, DESIGN.md §2)."""
+
+    def __init__(self, plan: ShardPlan, states: List[Params]):
+        self.plan = plan
+        self.states = states
+
+    @classmethod
+    def init(cls, plan: ShardPlan, key: jax.Array) -> "EmbeddingShards":
+        # Seed-identical to the single-table engine: init the packed
+        # collection once, then split by the plan.
+        return cls(plan, shard_states(plan, init_tables(plan.spec, key)))
+
+    def tables(self) -> Tuple[jnp.ndarray, ...]:
+        """Lock-free snapshot of the per-shard tables (Hogwild read)."""
+        return tuple(st["table"] for st in self.states)
+
+    def to_packed(self) -> Params:
+        """The engine-independent packed {"table", "acc"} view."""
+        return packed_state(self.plan, self.states)

@@ -7,19 +7,29 @@ accumulators are co-located with the rows (paper §3.2). Updates are immediate
 scatter-adds per trainer with no cross-replica gradient averaging: the preserved
 Hogwild property (see DESIGN.md §2).
 
+Forward (``lookup``) and backward (``sparse_adagrad_update_fused``) dispatch to
+the fused Pallas kernels by default (``kernels/embedding_bag`` lookup+pool,
+``kernels/sparse_adagrad`` scatter-Adagrad; compiled on TPU, interpreter
+elsewhere — DESIGN.md §7). ``lookup_ref`` / ``sparse_adagrad_update`` are the
+pure-jnp oracles the kernels are tested against.
+
 The greedy LPT bin-packing planner mirrors the paper's load-balancing of tables
-across embedding PSs; the SPMD path uses uniform row sharding, while the
-host-thread runner uses the plan directly.
+across embedding PSs; the SPMD path uses uniform row sharding, while
+``embeddings/shards.py`` consumes the plan directly: ``ThreadedShadowRunner``
+splits the packed table into per-PS shards with genuinely independent Hogwild
+state and routes lookups by the plan.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.embedding_bag.ops import embedding_bag_op
+from repro.kernels.sparse_adagrad.ops import sparse_adagrad_op
 from repro.models.layers import Params
 
 
@@ -56,11 +66,23 @@ def global_row_ids(spec: TableSpec, idx: jnp.ndarray) -> jnp.ndarray:
     return idx + offsets[None, :, None]
 
 
-def lookup(state: Params, spec: TableSpec, idx: jnp.ndarray) -> jnp.ndarray:
-    """Sum-pooled lookup. idx: (B, F, m) -> (B, F, dim)."""
+def lookup_ref(state: Params, spec: TableSpec, idx: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle for ``lookup``: dense take + sum-pool (materializes the
+    (B, F, m, d) gathered vectors the fused kernel never forms)."""
     rows = global_row_ids(spec, idx)
     vecs = jnp.take(state["table"], rows, axis=0)  # (B, F, m, d)
     return jnp.sum(vecs, axis=2)
+
+
+def lookup(state: Params, spec: TableSpec, idx: jnp.ndarray, *,
+           use_pallas: bool = True,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Sum-pooled lookup. idx: (B, F, m) -> (B, F, dim). One fused
+    lookup+pool kernel launch by default; ``use_pallas=False`` is the oracle."""
+    if not use_pallas:
+        return lookup_ref(state, spec, idx)
+    rows = global_row_ids(spec, idx)
+    return embedding_bag_op(state["table"], rows, interpret=interpret)
 
 
 def sparse_adagrad_update(
@@ -81,6 +103,30 @@ def sparse_adagrad_update(
     acc = state["acc"].at[rows].add(g * g)
     scale = lr * jax.lax.rsqrt(acc.at[rows].get() + eps)
     table = state["table"].at[rows].add((-scale * g).astype(state["table"].dtype))
+    return {"table": table, "acc": acc}
+
+
+def sparse_adagrad_update_fused(
+    state: Params,
+    spec: TableSpec,
+    idx: jnp.ndarray,
+    g_pooled: jnp.ndarray,
+    lr: float,
+    eps: float = 1e-8,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> Params:
+    """``sparse_adagrad_update`` through the fused scatter kernel: acc update +
+    rsqrt-scaled row add in one launch, duplicate-row accumulate semantics
+    identical to the oracle (tested in tests/test_embedding_substrate.py)."""
+    if not use_pallas:
+        return sparse_adagrad_update(state, spec, idx, g_pooled, lr, eps)
+    bags = global_row_ids(spec, idx).reshape(-1, idx.shape[-1])  # (B*F, m)
+    g = g_pooled.reshape(-1, g_pooled.shape[-1])
+    table, acc = sparse_adagrad_op(
+        state["table"], state["acc"], bags, g, lr=lr, eps=eps,
+        interpret=interpret)
     return {"table": table, "acc": acc}
 
 

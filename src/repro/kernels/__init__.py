@@ -2,8 +2,10 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 #
-# Packages: easgd_update / ma_update / bmuf_update (the flat sync
-# engine's fused per-algorithm launches, DESIGN.md 3), embedding_bag,
+# Packages: easgd_update / ma_update / bmuf_update / gossip_update
+# (the flat sync engine's fused per-algorithm launches, DESIGN.md 3),
+# embedding_bag + sparse_adagrad (the sparse embedding substrate's
+# fused lookup+pool forward and scatter-Adagrad backward, DESIGN.md 7),
 # interaction, flash_attention. `backend.py` resolves interpret-vs-
 # compiled once per process (compiled Pallas on TPU, interpreter
 # elsewhere); wrappers take `interpret=None` to use it.

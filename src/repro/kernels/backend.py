@@ -21,3 +21,17 @@ def on_tpu() -> bool:
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     """None -> compiled Pallas on TPU, interpreter elsewhere."""
     return (not on_tpu()) if interpret is None else bool(interpret)
+
+
+def resolve_strategy(strategy: Optional[str], *, tpu: str, fallback: str) -> str:
+    """Pick a kernel grid strategy per backend: ``tpu`` names the
+    fine-grid streaming kernel compiled on TPU, ``fallback`` the
+    coarse-grid variant that stays fast through the interpreter (its
+    per-grid-step cost is a buffer copy). Explicit ``strategy`` wins."""
+    if strategy is None:
+        return tpu if on_tpu() else fallback
+    if strategy not in (tpu, fallback):
+        raise ValueError(
+            f"unknown kernel strategy {strategy!r}; expected {tpu!r} or "
+            f"{fallback!r}")
+    return strategy

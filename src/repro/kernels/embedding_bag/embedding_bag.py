@@ -1,11 +1,20 @@
-"""Pallas TPU kernel: fused embedding-bag (gather + sum-pool).
+"""Pallas TPU kernels: fused embedding-bag (gather + sum-pool).
 
 The paper's embedding PSs spend their cycles on exactly this op (lookup + partial
-pooling, §3.1). TPU adaptation: instead of CPU random-access RAM reads, we
-scalar-prefetch the row ids and let the BlockSpec index_map stream one table row
-per grid step HBM->VMEM, accumulating the pool in the revisited output block.
-Grid = (n_bags, multi_hot); the output block for bag ``n`` is revisited across the
-``m`` axis (sequential TPU grid), so accumulation needs no scratch.
+pooling, §3.1). Two grid strategies over the same semantics (DESIGN.md §7):
+
+* ``embedding_bag`` — row-streaming. Scalar-prefetch the row ids and let the
+  BlockSpec index_map stream one table row per grid step HBM->VMEM, accumulating
+  the pool in the revisited output block. Grid = (n_bags, multi_hot); the output
+  block for bag ``n`` is revisited across the ``m`` axis (sequential TPU grid),
+  so accumulation needs no scratch. The table never has to fit in VMEM — this is
+  the production-scale path, compiled on TPU.
+
+* ``embedding_bag_blocked`` — bag-blocked. Grid = (n_bags / block_bags,); the
+  table is a single VMEM-resident block and each grid step gathers + pools a
+  whole block of bags in-body. Requires the (shard's) table to fit in VMEM, and
+  is the off-TPU interpret path: the Pallas interpreter's per-grid-step cost is
+  a buffer copy, so the coarse grid keeps the fused op fast everywhere.
 """
 from __future__ import annotations
 
@@ -48,3 +57,43 @@ def embedding_bag(table: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = Fal
         out_shape=jax.ShapeDtypeStruct((n_bags, d), jnp.float32),
         interpret=interpret,
     )(idx, table)
+
+
+def _blocked_kernel(idx_ref, table_ref, out_ref):
+    b = pl.program_id(0)
+    ids = idx_ref[b]  # (block_bags, m) row ids from SMEM
+    block_bags, m = ids.shape
+    vecs = jnp.take(table_ref[...], ids.reshape(-1), axis=0)
+    vecs = vecs.reshape(block_bags, m, -1).astype(jnp.float32)
+    out_ref[...] = jnp.sum(vecs, axis=1)
+
+
+def embedding_bag_blocked(
+    table: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    block_bags: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """table: (rows, d); idx: (n_bags, m) int32 -> (n_bags, d) sums.
+
+    n_bags must be a multiple of ``block_bags`` (the ops.py wrapper pads); the
+    whole table is one resident block, so rows * d must fit in VMEM — fine for
+    plan-sharded tables and for the interpreter, not for a monolithic
+    production table (use ``embedding_bag`` there)."""
+    n_bags, m = idx.shape
+    rows, d = table.shape
+    assert n_bags % block_bags == 0, (n_bags, block_bags)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_bags // block_bags,),
+        in_specs=[pl.BlockSpec((rows, d), lambda b, idx_ref: (0, 0))],
+        out_specs=pl.BlockSpec((block_bags, d), lambda b, idx_ref: (b, 0)),
+    )
+    return pl.pallas_call(
+        _blocked_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), jnp.float32),
+        interpret=interpret,
+    )(idx.reshape(n_bags // block_bags, block_bags, m), table)

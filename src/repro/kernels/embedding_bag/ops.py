@@ -1,5 +1,16 @@
-"""Jitted public wrapper for the embedding-bag kernel (pads d to the TPU lane
-width, flattens arbitrary bag batch dims, falls back to the oracle off-TPU)."""
+"""Jitted public wrapper for the embedding-bag kernels.
+
+Flattens arbitrary bag batch dims and picks the grid strategy per backend: the
+row-streaming kernel compiled on TPU (the table never has to fit in VMEM), the
+bag-blocked kernel through the interpreter elsewhere (coarse grid — the
+interpreter's cost is per grid step). Both are the same fused lookup+pool
+launch; ``strategy`` forces one explicitly and ``use_pallas=False`` falls back
+to the pure-jnp oracle.
+
+d is padded to the TPU lane width ONLY on the compiled path — the interpreter
+has no lane constraint, and the pad/slice would copy the whole table per call.
+Compiled TPU deployments should size d to a multiple of 128 so the per-call
+pad vanishes there too."""
 from __future__ import annotations
 
 import functools
@@ -7,31 +18,49 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.backend import resolve_interpret
-from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.backend import resolve_interpret, resolve_strategy
+from repro.kernels.embedding_bag.embedding_bag import (
+    embedding_bag,
+    embedding_bag_blocked,
+)
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
 LANE = 128
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("use_pallas", "interpret", "strategy", "block_bags")
+)
 def embedding_bag_op(
     table: jnp.ndarray,
     idx: jnp.ndarray,
     *,
     use_pallas: bool = True,
     interpret: bool | None = None,
+    strategy: str | None = None,
+    block_bags: int = 512,
 ) -> jnp.ndarray:
     """table: (rows, d); idx: (..., m) -> (..., d) sum-pooled lookups."""
     if not use_pallas:
         out = embedding_bag_ref(table, idx.reshape(-1, idx.shape[-1]))
         return out.reshape(*idx.shape[:-1], table.shape[-1])
     d = table.shape[-1]
-    pad = (-d) % LANE
+    interp = resolve_interpret(interpret)
+    pad = 0 if interp else (-d) % LANE
     if pad:
         table = jnp.pad(table, ((0, 0), (0, pad)))
     flat_idx = idx.reshape(-1, idx.shape[-1]).astype(jnp.int32)
-    out = embedding_bag(table, flat_idx, interpret=resolve_interpret(interpret))
+    if resolve_strategy(strategy, tpu="stream", fallback="block") == "stream":
+        out = embedding_bag(table, flat_idx, interpret=interp)
+    else:
+        n_bags = flat_idx.shape[0]
+        bb = min(block_bags, n_bags)
+        bag_pad = (-n_bags) % bb
+        if bag_pad:  # padded bags look up row 0 and are sliced off below
+            flat_idx = jnp.pad(flat_idx, ((0, bag_pad), (0, 0)))
+        out = embedding_bag_blocked(
+            table, flat_idx, block_bags=bb, interpret=interp
+        )[:n_bags]
     if pad:
         out = out[:, :d]
     return out.reshape(*idx.shape[:-1], d)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused sparse-Adagrad kernels.
+
+Array-level mirror of ``embeddings.table.sparse_adagrad_update``: duplicate
+rows scatter-ADD into the accumulator, and every occurrence's row step is
+scaled by the FINAL accumulator (scatter-add first, gather after)."""
+import jax
+import jax.numpy as jnp
+
+
+def sparse_adagrad_ref(
+    table: jnp.ndarray,
+    acc: jnp.ndarray,
+    idx: jnp.ndarray,
+    g_pooled: jnp.ndarray,
+    lr: float,
+    eps: float = 1e-8,
+):
+    """table: (n_rows, d); acc: (n_rows, d) fp32; idx: (n_bags, m) row ids;
+    g_pooled: (n_bags, d). Returns (new_table, new_acc)."""
+    n_bags, m = idx.shape
+    rows = idx.reshape(-1)  # (n_bags * m,) occurrence order: bag-major
+    g = jnp.repeat(g_pooled.astype(jnp.float32), m, axis=0)
+    acc = acc.at[rows].add(g * g)
+    scale = lr * jax.lax.rsqrt(acc.at[rows].get() + eps)
+    table = table.at[rows].add((-scale * g).astype(table.dtype))
+    return table, acc

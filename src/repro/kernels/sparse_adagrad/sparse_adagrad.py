@@ -1,0 +1,168 @@
+"""Pallas TPU kernels: fused row-sparse Adagrad scatter (the embedding backward).
+
+One launch applies the whole backward for a batch of multi-hot bags: the
+accumulator update ``acc[r] += g^2`` and the rsqrt-scaled row add
+``table[r] -= lr * rsqrt(acc_final[r] + eps) * g`` — with duplicate-row
+ACCUMULATE semantics matching the pytree oracle exactly: every occurrence's
+``g^2`` lands in the accumulator first, and the row step is scaled by that
+FINAL accumulator (``embeddings.table.sparse_adagrad_update`` computes the
+same thing via scatter-add + gather). The pooled gradient of a bag is read
+straight from ``g_pooled`` — the (n_items, d) per-occurrence broadcast the
+unfused path materializes never exists.
+
+Two grid strategies over the same semantics (DESIGN.md §7):
+
+* ``sparse_adagrad_rows`` — row-streaming. Occurrences arrive SORTED BY ROW
+  (the ops.py wrapper sorts), so duplicates form consecutive grid steps and
+  the revisited table/acc output blocks stay VMEM-resident across a run. A
+  VMEM scratch accumulates the run's gradient sum; every step rewrites the
+  resident table block with the current partial step, so the final (correct)
+  write is the one flushed to HBM. Tables stay in HBM — one (1, d) row block
+  moves per grid step. Aliased in/out: untouched rows are never streamed.
+  This is the production-scale path, compiled on TPU.
+
+* ``sparse_adagrad_blocked`` — occurrence-blocked. Grid = (n_items / block,);
+  table, acc, and g_pooled are VMEM-resident blocks, each step scatter-adds a
+  block of occurrences in-body, and the last step applies the fused row
+  update for the whole table at once. Requires the (shard's) table to fit in
+  VMEM; this is the off-TPU interpret path (the interpreter's per-grid-step
+  cost is a buffer copy, so the coarse grid keeps it fast).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rows_kernel(rows_ref, bags_ref, g_ref, table_ref, acc_ref,
+                 out_table_ref, out_acc_ref, sum_ref, *, lr: float, eps: float):
+    i = pl.program_id(0)
+    # First occurrence of a row's (sorted, hence consecutive) run: seed the
+    # resident acc block from HBM and zero the run's gradient-sum scratch.
+    first = (i == 0) | (rows_ref[i] != rows_ref[jnp.maximum(i - 1, 0)])
+    g = g_ref[...].astype(jnp.float32)  # (1, d) pooled grad of this bag
+
+    @pl.when(first)
+    def _():
+        out_acc_ref[...] = acc_ref[...]
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+
+    out_acc_ref[...] += g * g
+    sum_ref[...] += g
+    # Rewritten every step of the run; only the last (full-sum, final-acc)
+    # write survives the flush — exactly the oracle's final-acc scaling.
+    scale = lr * jax.lax.rsqrt(out_acc_ref[...] + eps)
+    out_table_ref[...] = (
+        table_ref[...].astype(jnp.float32) - scale * sum_ref[...]
+    ).astype(out_table_ref.dtype)
+
+
+def sparse_adagrad_rows(
+    table: jnp.ndarray,
+    acc: jnp.ndarray,
+    rows: jnp.ndarray,
+    bags: jnp.ndarray,
+    g_pooled: jnp.ndarray,
+    *,
+    lr: float,
+    eps: float = 1e-8,
+    interpret: bool = False,
+):
+    """table: (n_rows, d); acc: (n_rows, d) fp32; rows/bags: (n_items,) int32
+    sorted by row; g_pooled: (n_bags, d). Returns (new_table, new_acc);
+    rows not referenced are bit-identical (aliased in/out)."""
+    n_items = rows.shape[0]
+    _, d = table.shape
+    row_spec = pl.BlockSpec((1, d), lambda i, rows_ref, bags_ref: (rows_ref[i], 0))
+    bag_spec = pl.BlockSpec((1, d), lambda i, rows_ref, bags_ref: (bags_ref[i], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_items,),
+        in_specs=[bag_spec, row_spec, row_spec],
+        out_specs=[row_spec, row_spec],
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_rows_kernel, lr=lr, eps=eps),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(table.shape, table.dtype),
+            jax.ShapeDtypeStruct(acc.shape, jnp.float32),
+        ],
+        # operand order incl. scalar prefetch: (rows, bags, g, table, acc)
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(rows, bags, g_pooled, table, acc)
+
+
+def _blocked_kernel(rows_ref, bags_ref, g_ref, table_ref, acc_ref,
+                    out_table_ref, out_acc_ref, sum_ref,
+                    *, lr: float, eps: float, n_blocks: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        out_acc_ref[...] = acc_ref[...]
+        out_table_ref[...] = table_ref[...]
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+
+    ids = rows_ref[i]  # (block_items,) row ids of this occurrence block
+    g = jnp.take(g_ref[...], bags_ref[i], axis=0).astype(jnp.float32)
+    out_acc_ref[...] = out_acc_ref[...].at[ids].add(g * g)
+    sum_ref[...] = sum_ref[...].at[ids].add(g)
+
+    @pl.when(i == n_blocks - 1)
+    def _():
+        # All g^2 landed: one vectorized final-acc-scaled step for every row
+        # (untouched rows have sum 0 — their step is exactly zero).
+        scale = lr * jax.lax.rsqrt(out_acc_ref[...] + eps)
+        out_table_ref[...] = (
+            table_ref[...].astype(jnp.float32) - scale * sum_ref[...]
+        ).astype(out_table_ref.dtype)
+
+
+def sparse_adagrad_blocked(
+    table: jnp.ndarray,
+    acc: jnp.ndarray,
+    rows: jnp.ndarray,
+    bags: jnp.ndarray,
+    g_pooled: jnp.ndarray,
+    *,
+    lr: float,
+    eps: float = 1e-8,
+    block_items: int = 1024,
+    interpret: bool = False,
+):
+    """Same contract as ``sparse_adagrad_rows`` but rows/bags need not be
+    sorted; n_items must be a multiple of ``block_items`` (the ops.py wrapper
+    pads with zero-gradient occurrences)."""
+    n_items = rows.shape[0]
+    n_rows, d = table.shape
+    n_bags = g_pooled.shape[0]
+    assert n_items % block_items == 0, (n_items, block_items)
+    n_blocks = n_items // block_items
+    table_spec = pl.BlockSpec((n_rows, d), lambda i, rows_ref, bags_ref: (0, 0))
+    g_spec = pl.BlockSpec((n_bags, d), lambda i, rows_ref, bags_ref: (0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_blocks,),
+        in_specs=[g_spec, table_spec, table_spec],
+        out_specs=[table_spec, table_spec],
+        scratch_shapes=[pltpu.VMEM((n_rows, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_blocked_kernel, lr=lr, eps=eps, n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(table.shape, table.dtype),
+            jax.ShapeDtypeStruct(acc.shape, jnp.float32),
+        ],
+        # operand order incl. scalar prefetch: (rows, bags, g, table, acc)
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(rows.reshape(n_blocks, block_items), bags.reshape(n_blocks, block_items),
+      g_pooled, table, acc)

@@ -1,0 +1,141 @@
+"""EPS under faults: background ShadowSync vs foreground fixed-rate sync.
+
+The paper's Fig-5 contrast, restated as fault tolerance (paper §1, §3.3 and
+DESIGN.md §8.4): with synchronization decoupled from training, a degraded or
+dead trainer cannot block the others — the shadow thread just skips dead
+slots and the survivors keep their pace. Foreground fixed-rate sync is the
+baseline failure mode: every trainer blocks at the sync point, so one
+straggler drags the whole cohort to its speed and a crash only "helps"
+because the barrier shrinks.
+
+Three scenarios per mode on the real-thread runner (tiny DLRM, R=3):
+
+* ``no_fault``   — healthy cohort (the reference pace).
+* ``straggler``  — trainer R-1 sleeps an extra ``STRAGGLER_SLEEP_S`` per
+  iteration (a degraded host; NestPipe's observation that at scale SOME
+  worker is always degraded).
+* ``crash``      — trainer R-1 dies a third of the way in; the run must
+  complete and the survivors' windowed EPS should hold.
+
+Per scenario we record total EPS, the trailing-window EPS (the survivors'
+pace after a crash — ``EPSMeter``), per-trainer EPS, and wall time.
+
+`--json` writes BENCH_elastic.json so the elasticity trajectory is recorded
+per PR; `--tiny` shrinks iterations for the CI smoke.
+
+  PYTHONPATH=src python -m benchmarks.elastic_bench [--json] [--tiny]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional, Tuple
+
+R = 3  # trainers (slot R-1 takes the fault)
+ALGO = "easgd"
+GAP = 3
+STRAGGLER_SLEEP_S = 0.03
+BATCH = 64
+
+
+def _scenarios(iters: int):
+    from repro.core.membership import FaultSpec
+
+    return {
+        "no_fault": None,
+        "straggler": FaultSpec(straggler_sleep_s={R - 1: STRAGGLER_SLEEP_S}),
+        "crash": FaultSpec(crash_at={R - 1: max(iters // 3, 1)}),
+    }
+
+
+def bench_elastic(json_path: Optional[str] = None,
+                  tiny: bool = False) -> List[Tuple[str, float, str]]:
+    import jax
+
+    from repro import optim
+    from repro.configs import dlrm_ctr
+    from repro.core.runners import ThreadedShadowRunner
+    from repro.core.sync import SyncConfig
+
+    cfg = dlrm_ctr.tiny()
+    iters = 8 if tiny else 40
+    print(f"\n== Elastic EPS: shadow vs fixed_rate under faults "
+          f"(R={R}, {iters} iters/trainer, algo={ALGO}, "
+          f"straggler +{STRAGGLER_SLEEP_S * 1e3:.0f} ms/iter) ==")
+    # warm the jit caches so the first measured scenario does not pay
+    # compilation (both modes compile distinct programs)
+    for mode in ("shadow", "fixed_rate"):
+        ThreadedShadowRunner(
+            cfg, SyncConfig(algo=ALGO, mode=mode, gap=GAP, alpha=0.5),
+            n_trainers=R, batch_size=BATCH, optimizer=optim.adagrad(0.02),
+            sync_sleep_s=0.01).run(2)
+    rows: List[Tuple[str, float, str]] = []
+    results: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for mode in ("shadow", "fixed_rate"):
+        results[mode] = {}
+        for name, fault in _scenarios(iters).items():
+            runner = ThreadedShadowRunner(
+                cfg, SyncConfig(algo=ALGO, mode=mode, gap=GAP, alpha=0.5),
+                n_trainers=R, batch_size=BATCH, optimizer=optim.adagrad(0.02),
+                sync_sleep_s=0.01, fault_spec=fault, eps_window_s=2.0)
+            out = runner.run(iters)
+            crashed = set((fault.crash_at if fault else {}).keys())
+            survivors = [out["per_trainer_eps"][i]
+                         for i in range(R) if i not in crashed]
+            surv_eps = sum(survivors) / max(len(survivors), 1)
+            res = {
+                "eps": out["eps"],
+                "eps_window": out["eps_window"],
+                "survivor_eps": surv_eps,
+                "per_trainer_eps": out["per_trainer_eps"],
+                "wall_s": out["wall_s"],
+                "sync_count": out["sync_count"],
+                "iter_count": out["iter_count"],
+            }
+            results[mode][name] = res
+            rows.append((f"elastic/{mode}_{name}", out["wall_s"] * 1e6,
+                         f"{out['eps']:.0f} EPS "
+                         f"(survivors {surv_eps:.0f}/trainer)"))
+            print(f"  {mode:10s} {name:9s}  EPS {out['eps']:7.0f}  "
+                  f"window {out['eps_window']:7.0f}  "
+                  f"survivor/trainer {surv_eps:7.0f}  "
+                  f"wall {out['wall_s']:5.2f}s  syncs {out['sync_count']}")
+
+    sh, fr = results["shadow"], results["fixed_rate"]
+    if fr["straggler"]["survivor_eps"] > 0:
+        print(f"  straggler contrast: shadow survivors keep "
+              f"{sh['straggler']['survivor_eps'] / max(sh['no_fault']['survivor_eps'], 1e-9):.0%}"
+              f" of no-fault pace; fixed_rate holds everyone to "
+              f"{fr['straggler']['survivor_eps'] / max(fr['no_fault']['survivor_eps'], 1e-9):.0%}")
+
+    if json_path:
+        payload = {
+            "bench": "elastic_bench",
+            "config": {"R": R, "iters_per_trainer": iters, "algo": ALGO,
+                       "gap": GAP, "batch_size": BATCH,
+                       "straggler_sleep_s": STRAGGLER_SLEEP_S,
+                       "crash_at": max(iters // 3, 1), "tiny": tiny},
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {json_path}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_elastic.json to the cwd")
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-test iteration count (CI)")
+    args = ap.parse_args()
+    rows = bench_elastic(json_path="BENCH_elastic.json" if args.json else None,
+                         tiny=args.tiny)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,21 @@
 """Checkpointing: pytree save/restore on npz + a JSON manifest.
 
 Supports the full training state (dense replicas, embedding shards, optimizer
-state, sync-PS copy, step counter) so a ShadowSync run can resume mid-stream —
-the one-pass constraint makes resumability a hard requirement in production.
+state, opaque sync-algorithm state, step counter) so a ShadowSync run can
+resume mid-stream — the one-pass constraint makes resumability a hard
+requirement in production.
+
+Elastic restore (DESIGN.md §8.5): ``restore_elastic`` resizes leaves whose
+shapes differ ONLY in the leading (replica) axis, so a run saved at ``R=4``
+can resume at ``R=6`` — the runner then bootstraps each genuinely new slot
+through ``SyncAlgorithm.on_join`` (see ``HogwildSim.load_state``); the
+mean-fill here is only the placeholder those hooks overwrite.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,8 +61,32 @@ def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None) -> None:
         )
 
 
+def read_metadata(path: str) -> Dict[str, Any]:
+    """The manifest metadata alone — cheap pre-flight checks (engine/algo
+    compatibility) before any array is loaded."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["metadata"]
+
+
+def _load_leaf(data, manifest, key: str, path: str) -> np.ndarray:
+    if key not in data.files:
+        have = ", ".join(sorted(data.files)[:8])
+        raise ValueError(
+            f"checkpoint at {path!r} has no leaf {key!r} required by the "
+            f"restore template (checkpoint leaves include: {have}"
+            f"{', ...' if len(data.files) > 8 else ''})")
+    arr = data[key]
+    if manifest["dtypes"].get(key) == "bfloat16":
+        arr = arr.view(jnp.bfloat16)
+    return arr
+
+
 def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
-    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    """Restore into the structure of ``like`` (shapes/dtypes must match).
+
+    Raises ``ValueError`` naming the offending leaf when a leaf is missing
+    from the checkpoint or its shape disagrees with the template.
+    """
     data = np.load(os.path.join(path, "arrays.npz"))
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -63,9 +94,66 @@ def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
     leaves = []
     for pathk, leaf in flat_like:
         key = _SEP.join(_key_str(p) for p in pathk)
-        arr = data[key]
-        if manifest["dtypes"].get(key) == "bfloat16":
-            arr = arr.view(jnp.bfloat16)
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        arr = _load_leaf(data, manifest, key, path)
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch restoring leaf {key!r} from {path!r}: "
+                f"checkpoint has {tuple(arr.shape)}, template expects "
+                f"{tuple(leaf.shape)} (use restore_elastic for replica-axis "
+                f"resizes)")
         leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
+
+
+def _resize_leading(arr: np.ndarray, target: int) -> np.ndarray:
+    """Truncate or mean-fill the leading axis to ``target`` rows. The fill is
+    a bootstrap placeholder — callers re-initialize genuinely new replica
+    slots through ``SyncAlgorithm.on_join``."""
+    if target <= arr.shape[0]:
+        return arr[:target]
+    mean = np.asarray(arr, np.float32).mean(axis=0, keepdims=True)
+    fill = np.broadcast_to(mean, (target - arr.shape[0],) + arr.shape[1:])
+    return np.concatenate([arr, fill.astype(arr.dtype)], axis=0)
+
+
+def restore_elastic(path: str, like: Any, *,
+                    may_resize: Optional[Callable[[str], bool]] = None
+                    ) -> Tuple[Any, Dict[str, Any], Dict[str, Tuple]]:
+    """Like ``restore``, but leaves whose shapes differ ONLY in the leading
+    (replica) axis are elastically resized: shrink truncates, growth fills
+    the new rows with the mean of the saved replicas. Any other shape
+    mismatch still raises ``ValueError``. Returns
+    ``(tree, metadata, resized)`` where ``resized`` maps each resized leaf
+    key to ``(saved_shape, restored_shape)``.
+
+    ``may_resize(key)`` restricts WHICH leaves are allowed to resize —
+    callers that know where the replica axis lives should pass it so a
+    leading-axis mismatch on a non-replica leaf (e.g. an embedding table
+    whose row count changed between configs) raises instead of being
+    silently mean-filled (see ``HogwildSim.load_state``). ``None`` permits
+    every leaf.
+    """
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves, resized = [], {}
+    for pathk, leaf in flat_like:
+        key = _SEP.join(_key_str(p) for p in pathk)
+        arr = _load_leaf(data, manifest, key, path)
+        want = tuple(leaf.shape)
+        if arr.shape != want:
+            allowed = may_resize is None or may_resize(key)
+            elastic_ok = (allowed and arr.ndim == len(want) and arr.ndim >= 1
+                          and arr.shape[1:] == want[1:])
+            if not elastic_ok:
+                raise ValueError(
+                    f"shape mismatch restoring leaf {key!r} from {path!r}: "
+                    f"checkpoint has {tuple(arr.shape)}, template expects "
+                    f"{want}; only the leading (replica) axis of a "
+                    f"replica-stacked leaf may differ")
+            resized[key] = (tuple(arr.shape), want)
+            arr = _resize_leading(arr, want[0])
+        leaves.append(jnp.asarray(arr))
+    return (jax.tree_util.tree_unflatten(treedef, leaves),
+            manifest["metadata"], resized)

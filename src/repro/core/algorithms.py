@@ -35,6 +35,23 @@ Lifecycle hooks (state is OPAQUE to every caller — ``SimState.algo_state``):
 * ``pytree_sync_bytes`` / ``flat_sync_bytes`` / ``min_stream_ratio`` /
   ``flat_ref_fns`` — the analytic HBM-stream model and CPU-timeable oracle
   callables consumed by ``benchmarks/sync_bench.py``.
+
+Elastic membership (DESIGN.md §8): every hook that lands or launches a sync
+accepts an ``active`` mask (host numpy, from ``core.membership.Membership``)
+and two lifecycle hooks dispatch through the registry so all algorithms get
+elasticity for free:
+
+* ``on_join`` / ``on_join_flat`` — bootstrap a joining replica slot from the
+  live cohort (default: the live replica mean; EASGD: the sync-PS copy).
+* ``on_leave`` / ``on_leave_flat`` — drop a departing slot from algorithm
+  state (default: nothing to drop — no built-in keeps per-replica state).
+* ``land_elastic`` — the membership-aware pytree landing: the mean built-ins
+  divide by the LIVE count and skip dead slots; gossip draws its rotating
+  matching over the active set only; the generic default intersects the
+  fired mask with ``active`` and delegates to ``land``.
+
+On the flat engine the active row ids flow into the fused kernels via scalar
+prefetch, so dead slots contribute zero HBM traffic at launch and landing.
 """
 from __future__ import annotations
 
@@ -63,6 +80,27 @@ _gather = jax.jit(lambda buf, idx: buf[idx])
 
 def _fired_ids(mask, R: int) -> np.ndarray:
     return np.arange(R) if mask is None else np.flatnonzero(np.asarray(mask))
+
+
+def _intersect(mask, active):
+    """Host-level AND of two optional (R,) bool masks (None == all-true)."""
+    if active is None:
+        return mask
+    if mask is None:
+        return np.asarray(active, bool)
+    return np.asarray(mask, bool) & np.asarray(active, bool)
+
+
+def _active_rows(active) -> jnp.ndarray:
+    """(A,) int32 live row ids for the scalar-prefetch kernels."""
+    return jnp.asarray(np.flatnonzero(np.asarray(active)), jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _land_jit(algo: "SyncAlgorithm", cfg) -> Callable:
+    """Cached jit of an algorithm's pytree oracle (mask traced)."""
+    return jax.jit(lambda stack, state, snap, mask:
+                   algo.land(stack, state, snap, mask, cfg))
 
 
 def _stack_planes(ws: List[jnp.ndarray]) -> jnp.ndarray:
@@ -98,24 +136,80 @@ class SyncAlgorithm:
              mask: Optional[jnp.ndarray], cfg: "S.SyncConfig") -> Tuple[Pytree, Any]:
         raise NotImplementedError
 
+    def land_elastic(self, stack: Pytree, state: Any, snap: Optional[Pytree],
+                     mask, active, cfg: "S.SyncConfig",
+                     launch_active=None) -> Tuple[Pytree, Any]:
+        """Membership-aware pytree landing (host-level hook, not jitted).
+
+        ``mask`` is the fired mask, ``active`` the CURRENT membership mask,
+        ``launch_active`` the membership mask when the sync launched (both
+        host numpy or None; None == all slots). Default: intersect fired with
+        both masks and delegate to the jitted ``land`` oracle — correct for
+        algorithms that respect ``mask``. The mean built-ins override this to
+        divide by the live count and land only on live rows; gossip draws its
+        matching over the launch-time active set.
+        """
+        eff = _intersect(_intersect(mask, launch_active), active)
+        eff_arr = None if eff is None else jnp.asarray(eff)
+        return _land_jit(self, cfg)(stack, state, snap, eff_arr)
+
+    # -- elastic membership lifecycle (DESIGN.md §8) --------------------------
+    def on_join(self, stack: Pytree, slot: int, state: Any, active,
+                cfg: "S.SyncConfig") -> Tuple[Pytree, Any]:
+        """Bootstrap a joining replica slot from the live cohort (pytree
+        engine). ``active`` is the membership mask BEFORE the join — the new
+        slot is not yet in it. Default: the live replica mean."""
+        mean = S.masked_replica_mean(stack, jnp.asarray(active))
+        return S.tree_set(stack, slot, mean), state
+
+    def on_join_flat(self, buf: jnp.ndarray, slot: int, state: Any, active,
+                     cfg: "S.SyncConfig", fs: FlatSpace
+                     ) -> Tuple[jnp.ndarray, Any]:
+        """Flat-engine join bootstrap. Default: fused live-mean kernel into
+        the joining slot's plane — one launch, dead rows never streamed."""
+        mean = ma_ops.replica_mean_rows_op(buf, _active_rows(active),
+                                           block=fs.block)
+        return buf.at[slot].set(mean), state
+
+    def on_leave(self, state: Any, slot: int, cfg: "S.SyncConfig") -> Any:
+        """Drop a departing/failed slot from algorithm state. No built-in
+        keeps per-replica state, so the default keeps ``state`` unchanged;
+        algorithms that shard state by replica must override."""
+        return state
+
+    def on_leave_flat(self, state: Any, slot: int, cfg: "S.SyncConfig",
+                      fs: FlatSpace) -> Any:
+        return self.on_leave(state, slot, cfg)
+
     # -- flat engine ----------------------------------------------------------
     def init_state_flat(self, plane0: jnp.ndarray, cfg: "S.SyncConfig",
                         fs: FlatSpace) -> Any:
         return self.init_state(fs.unpack(plane0), cfg)
 
     def launch_snapshot_flat(self, buf: jnp.ndarray, mask, cfg: "S.SyncConfig",
-                             fs: FlatSpace, state: Any = None) -> jnp.ndarray:
+                             fs: FlatSpace, state: Any = None,
+                             active=None) -> jnp.ndarray:
         """Fallback: one contiguous copy of the whole replica buffer.
         ``state`` is the algorithm's opaque state at launch time (gossip uses
-        it to pick the round's participant rows)."""
+        it to pick the round's participant rows); ``active`` the membership
+        mask at launch."""
         return flatspace.snapshot(buf)
 
     def land_flat(self, buf: jnp.ndarray, state: Any, snap, mask,
-                  cfg: "S.SyncConfig", fs: FlatSpace) -> Tuple[jnp.ndarray, Any]:
+                  cfg: "S.SyncConfig", fs: FlatSpace,
+                  active=None) -> Tuple[jnp.ndarray, Any]:
         """Fallback: unpack -> pytree oracle -> repack, inside one jit."""
-        fn = _flat_fallback(self, cfg, fs)
-        mask_arr = None if mask is None else jnp.asarray(mask)
-        return fn(buf, state, snap, mask_arr)
+        if active is None:
+            fn = _flat_fallback(self, cfg, fs)
+            mask_arr = None if mask is None else jnp.asarray(mask)
+            return fn(buf, state, snap, mask_arr)
+        # elastic fallback: route through the membership-aware pytree hook
+        # (host-level; fused-kernel algorithms override for zero dead-slot
+        # traffic)
+        stack = fs.unpack_stack(buf)
+        snap_t = fs.unpack_stack(snap) if snap is not None else None
+        new, state = self.land_elastic(stack, state, snap_t, mask, active, cfg)
+        return fs.pack_stack(new), state
 
     # -- ThreadedShadowRunner background round --------------------------------
     def make_shadow_round(self, cfg: "S.SyncConfig", fs: Optional[FlatSpace]
@@ -242,20 +336,42 @@ class EASGD(SyncAlgorithm):
     def init_state_flat(self, plane0, cfg, fs):
         return jnp.copy(plane0)  # (n_rows, 128) fp32 PS plane
 
-    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None):
-        fired = _fired_ids(mask, buf.shape[0])
-        return _gather(buf, jnp.asarray(fired, jnp.int32))
+    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None, active=None):
+        """Self-describing snapshot: a compact gather of the fired live rows
+        PLUS their ids, so a slot that dies while the sync is in flight can
+        be dropped at landing without disturbing positional alignment."""
+        fired = _fired_ids(_intersect(mask, active), buf.shape[0])
+        return _gather(buf, jnp.asarray(fired, jnp.int32)), tuple(int(i) for i in fired)
 
-    def land_flat(self, buf, state, snap, mask, cfg, fs):
-        fired = _fired_ids(mask, buf.shape[0])
-        if fired.size == 0:
-            return buf, state
-        fired = jnp.asarray(fired, jnp.int32)
+    def land_flat(self, buf, state, snap, mask, cfg, fs, active=None):
         if snap is None:  # fixed-rate: gather from the current buffer — the
             # round op donates ``buf``, so the snapshot must be separate
-            snap = _gather(buf, fired)
-        return easgd_ops.easgd_round_op(buf, state, snap, fired, cfg.alpha,
+            fired = _fired_ids(_intersect(mask, active), buf.shape[0])
+            if fired.size == 0:
+                return buf, state
+            fired = jnp.asarray(fired, jnp.int32)
+            return easgd_ops.easgd_round_op(buf, state, _gather(buf, fired),
+                                            fired, cfg.alpha, block=fs.block)
+        snap_rows, ids = snap
+        ids = np.asarray(ids, np.int64)
+        # a slot that died mid-flight neither moves the PS nor lands
+        keep = np.ones(ids.shape, bool) if active is None else np.asarray(active)[ids]
+        if not keep.any():
+            return buf, state
+        if not keep.all():
+            snap_rows = _gather(snap_rows,
+                                jnp.asarray(np.flatnonzero(keep), jnp.int32))
+            ids = ids[keep]
+        return easgd_ops.easgd_round_op(buf, state, snap_rows,
+                                        jnp.asarray(ids, jnp.int32), cfg.alpha,
                                         block=fs.block)
+
+    def on_join(self, stack, slot, state, active, cfg):
+        # a joiner adopts the sync-PS copy — the centralized consensus point
+        return S.tree_set(stack, slot, state), state
+
+    def on_join_flat(self, buf, slot, state, active, cfg, fs):
+        return buf.at[slot].set(state), state
 
     def make_shadow_round(self, cfg, fs):
         if fs is not None:
@@ -296,6 +412,13 @@ class EASGD(SyncAlgorithm):
 # Model Averaging (decentralized; paper Algorithm 3)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _ma_elastic_jit(algo: "MA", cfg) -> Callable:
+    return jax.jit(lambda stack, state, snap, active, launch_active: (
+        S.ma_round(stack, cfg.alpha, snapshot=snap, active=launch_active,
+                   land_active=active), state))
+
+
 @register
 class MA(SyncAlgorithm):
     name = "ma"
@@ -305,12 +428,35 @@ class MA(SyncAlgorithm):
     def land(self, stack, state, snap, mask, cfg):
         return S.ma_round(stack, cfg.alpha, snapshot=snap), state
 
-    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None):
-        return ma_ops.replica_mean_op(buf, block=fs.block)
+    def land_elastic(self, stack, state, snap, mask, active, cfg,
+                     launch_active=None):
+        if active is None and launch_active is None:
+            return super().land_elastic(stack, state, snap, mask, active, cfg)
+        # mean over the LAUNCH-time live set (that is what the background
+        # AllReduce saw); the pull-back lands on the CURRENT live rows.
+        if launch_active is None:
+            launch_active = active
+        return _ma_elastic_jit(self, cfg)(
+            stack, state, snap,
+            None if active is None else jnp.asarray(active),
+            jnp.asarray(launch_active))
 
-    def land_flat(self, buf, state, snap, mask, cfg, fs):
-        mean = snap if snap is not None else ma_ops.replica_mean_op(buf, block=fs.block)
-        return ma_ops.ma_sync_op(buf, mean, cfg.alpha, block=fs.block), state
+    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None, active=None):
+        if active is None:
+            return ma_ops.replica_mean_op(buf, block=fs.block)
+        return ma_ops.replica_mean_rows_op(buf, _active_rows(active),
+                                           block=fs.block)
+
+    def land_flat(self, buf, state, snap, mask, cfg, fs, active=None):
+        if active is None:
+            mean = snap if snap is not None else ma_ops.replica_mean_op(
+                buf, block=fs.block)
+            return ma_ops.ma_sync_op(buf, mean, cfg.alpha, block=fs.block), state
+        rows = _active_rows(active)
+        mean = snap if snap is not None else ma_ops.replica_mean_rows_op(
+            buf, rows, block=fs.block)
+        return ma_ops.ma_sync_rows_op(buf, mean, rows, cfg.alpha,
+                                      block=fs.block), state
 
     def make_shadow_round(self, cfg, fs):
         if fs is not None:
@@ -358,6 +504,15 @@ class MA(SyncAlgorithm):
 # BMUF (decentralized; paper Algorithm 4)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _bmuf_elastic_jit(algo: "BMUF", cfg) -> Callable:
+    return jax.jit(lambda stack, state, snap, active, launch_active:
+                   S.bmuf_round(stack, state, cfg.alpha, eta=cfg.eta,
+                                block_momentum=cfg.block_momentum,
+                                nesterov=cfg.nesterov, snapshot=snap,
+                                active=launch_active, land_active=active))
+
+
 def _bmuf_plane_step(mean, wg, vel, cfg):
     """N-sized BMUF global step on flat planes; returns (look, wg', vel')."""
     desc = mean - wg
@@ -385,15 +540,39 @@ class BMUF(SyncAlgorithm):
         return S.BMUFState(w_global=jnp.copy(plane0),
                            velocity=jnp.zeros((fs.n_rows, LANE), jnp.float32))
 
-    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None):
-        return ma_ops.replica_mean_op(buf, block=fs.block)
+    def land_elastic(self, stack, state, snap, mask, active, cfg,
+                     launch_active=None):
+        if active is None and launch_active is None:
+            return super().land_elastic(stack, state, snap, mask, active, cfg)
+        if launch_active is None:
+            launch_active = active
+        return _bmuf_elastic_jit(self, cfg)(
+            stack, state, snap,
+            None if active is None else jnp.asarray(active),
+            jnp.asarray(launch_active))
 
-    def land_flat(self, buf, state, snap, mask, cfg, fs):
-        mean = snap if snap is not None else ma_ops.replica_mean_op(buf, block=fs.block)
-        new, wg, vel = bmuf_ops.bmuf_sync_op(
-            buf, mean, state.w_global, state.velocity, cfg.alpha, eta=cfg.eta,
-            block_momentum=cfg.block_momentum, nesterov=cfg.nesterov,
-            block=fs.block)
+    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None, active=None):
+        if active is None:
+            return ma_ops.replica_mean_op(buf, block=fs.block)
+        return ma_ops.replica_mean_rows_op(buf, _active_rows(active),
+                                           block=fs.block)
+
+    def land_flat(self, buf, state, snap, mask, cfg, fs, active=None):
+        if active is None:
+            mean = snap if snap is not None else ma_ops.replica_mean_op(
+                buf, block=fs.block)
+            new, wg, vel = bmuf_ops.bmuf_sync_op(
+                buf, mean, state.w_global, state.velocity, cfg.alpha,
+                eta=cfg.eta, block_momentum=cfg.block_momentum,
+                nesterov=cfg.nesterov, block=fs.block)
+            return new, S.BMUFState(w_global=wg, velocity=vel)
+        rows = _active_rows(active)
+        mean = snap if snap is not None else ma_ops.replica_mean_rows_op(
+            buf, rows, block=fs.block)
+        new, wg, vel = bmuf_ops.bmuf_sync_rows_op(
+            buf, mean, state.w_global, state.velocity, rows, cfg.alpha,
+            eta=cfg.eta, block_momentum=cfg.block_momentum,
+            nesterov=cfg.nesterov, block=fs.block)
         return new, S.BMUFState(w_global=wg, velocity=vel)
 
     def make_shadow_round(self, cfg, fs):
@@ -480,24 +659,71 @@ def _ring_partner_np(R: int, shift: int) -> List[int]:
     return partner
 
 
-def _gossip_participants_np(mask: Optional[np.ndarray], R: int, shift: int):
+def _ring_partner_active_np(active: np.ndarray, shift: int) -> List[int]:
+    """Rotating matching drawn over the ACTIVE slots only (elastic
+    membership): the ring is formed on the live ids, then mapped back to
+    global slot numbers. Dead slots are their own partner (never paired)."""
+    active = np.asarray(active, bool)
+    R = active.shape[0]
+    ids = np.flatnonzero(active)
+    partner = list(range(R))
+    sub = _ring_partner_np(len(ids), shift)
+    for k, g in enumerate(ids):
+        partner[int(g)] = int(ids[sub[k]])
+    return partner
+
+
+def _gossip_participants_np(mask: Optional[np.ndarray], R: int, shift: int,
+                            active: Optional[np.ndarray] = None):
     """Participant rows of a gossip round, host-side (flat-engine operands).
 
     A ring pair is ACTIVE when either member's shadow clock fired — the
     initiator pulls its passive partner into the exchange (ADPSGD), so even
-    a round with a single fired replica synchronizes. Returns
+    a round with a single fired replica synchronizes. Under elastic
+    membership (``active`` given) the ring is drawn over the live slots only
+    and dead slots can neither fire nor be pulled in. Returns
     (rows, self_pos, partner_pos): the sorted replica ids of all active-pair
     members (== the rows the launch snapshot gathers, and the rows that
     land), plus each one's own/partner position inside that snapshot.
     """
-    partner = _ring_partner_np(R, shift)
-    m = np.ones((R,), bool) if mask is None else np.asarray(mask).astype(bool)
+    if active is None:
+        partner = _ring_partner_np(R, shift)
+        m = np.ones((R,), bool) if mask is None else np.asarray(mask).astype(bool)
+    else:
+        partner = _ring_partner_active_np(active, shift)
+        m = (np.ones((R,), bool) if mask is None
+             else np.asarray(mask).astype(bool)) & np.asarray(active, bool)
     rows = [i for i in range(R)
             if partner[i] != i and (m[i] or m[partner[i]])]
     pos = {rid: k for k, rid in enumerate(rows)}
     self_pos = [pos[i] for i in rows]
     partner_pos = [pos[partner[i]] for i in rows]
     return rows, self_pos, partner_pos
+
+
+@functools.lru_cache(maxsize=None)
+def _gossip_elastic_jit(algo: "Gossip", cfg) -> Callable:
+    def run(stack, snap, mask, partner, active):
+        R = jax.tree.leaves(stack)[0].shape[0]
+        src = snap if snap is not None else stack
+        ids = jnp.arange(R, dtype=jnp.int32)
+        # a pair forms when either member fired at LAUNCH; the landing then
+        # only touches rows that are STILL live (a slot that died mid-flight
+        # is skipped, its partner still lands from the snapshot mix)
+        pair_live = (partner != ids) & (mask | mask[partner])
+        if active is not None:
+            pair_live = pair_live & active
+
+        def land_leaf(x, x_snap):
+            xs = x_snap.astype(jnp.float32)
+            mix = 0.5 * (xs + xs[partner])
+            new = (1.0 - cfg.alpha) * x.astype(jnp.float32) + cfg.alpha * mix
+            keep = pair_live.reshape((R,) + (1,) * (x.ndim - 1))
+            return jnp.where(keep, new, x.astype(jnp.float32)).astype(x.dtype)
+
+        return jax.tree.map(land_leaf, stack, src)
+
+    return jax.jit(run)
 
 
 @register
@@ -532,23 +758,50 @@ class Gossip(SyncAlgorithm):
 
         return jax.tree.map(land_leaf, stack, src), state + 1
 
-    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None):
+    def land_elastic(self, stack, state, snap, mask, active, cfg,
+                     launch_active=None):
+        if active is None and launch_active is None:
+            return super().land_elastic(stack, state, snap, mask, active, cfg)
+        if launch_active is None:
+            launch_active = active
+        R = jax.tree.leaves(stack)[0].shape[0]
+        # the matching was drawn at LAUNCH, over the then-live slots
+        partner = _ring_partner_active_np(launch_active, int(state))
+        mask_arr = (jnp.asarray(np.asarray(launch_active, bool)) if mask is None
+                    else jnp.asarray(np.asarray(mask, bool)))
+        new = _gossip_elastic_jit(self, cfg)(
+            stack, snap, mask_arr, jnp.asarray(partner, jnp.int32),
+            None if active is None else jnp.asarray(active))
+        return new, state + 1
+
+    def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None, active=None):
         # Self-describing snapshot: a compact gather of exactly the
         # active-pair members' rows PLUS the pairing that produced it, so the
         # landing never has to re-derive the participant set from state that
         # may have moved while the sync was in flight (ADPSGD: the initiator
-        # picks its partner at launch).
+        # picks its partner at launch). Under elastic membership the ring is
+        # drawn over the live slots only.
         rows, self_pos, partner_pos = _gossip_participants_np(
-            mask, buf.shape[0], 0 if state is None else int(state))
+            mask, buf.shape[0], 0 if state is None else int(state),
+            active=active)
         return (_gather(buf, jnp.asarray(rows, jnp.int32)),
                 rows, self_pos, partner_pos)
 
-    def land_flat(self, buf, state, snap, mask, cfg, fs):
+    def land_flat(self, buf, state, snap, mask, cfg, fs, active=None):
         if snap is None:  # fixed-rate: pair and gather at landing time (the
             # round op donates ``buf``, so the snapshot must be separate)
-            snap = self.launch_snapshot_flat(buf, mask, cfg, fs, state)
+            snap = self.launch_snapshot_flat(buf, mask, cfg, fs, state,
+                                             active=active)
         snap_rows, rows, self_pos, partner_pos = snap
         new_state = state + 1
+        if active is not None and rows:
+            # a slot that died mid-flight is skipped; its live partner still
+            # lands from the snapshot mix gathered at launch
+            act = np.asarray(active, bool)
+            kept = [k for k, rid in enumerate(rows) if act[rid]]
+            rows = [rows[k] for k in kept]
+            self_pos = [self_pos[k] for k in kept]
+            partner_pos = [partner_pos[k] for k in kept]
         if not rows:
             return buf, new_state
         new = gossip_ops.gossip_round_op(

@@ -2,8 +2,9 @@
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 
 def elp(batch_size: int, n_hogwild: int, n_replicas: int) -> int:
@@ -14,18 +15,46 @@ def elp(batch_size: int, n_hogwild: int, n_replicas: int) -> int:
 
 @dataclass
 class EPSMeter:
-    """Examples Per Second over a sliding window."""
+    """Examples Per Second over a true sliding window.
 
-    _t0: float = field(default_factory=time.perf_counter)
-    _examples: int = 0
+    ``add(n)`` records a bucket of ``n`` examples at the current clock time;
+    ``eps`` is the rate over the trailing ``window_s`` seconds (buckets older
+    than the window are evicted). Before a full window has elapsed the rate
+    is over the time since construction, so early readings are not inflated.
+    This matters for elasticity measurements: after a trainer crashes, the
+    windowed rate converges to the SURVIVORS' pace instead of being diluted
+    forever by the dead trainer's early contribution (a cumulative
+    examples-since-construction rate — the previous implementation — never
+    recovers). ``clock`` is injectable for deterministic tests.
+    """
+
+    window_s: float = 5.0
+    clock: Callable[[], float] = time.perf_counter
+    _t0: float = field(init=False)
+    _buckets: Deque[Tuple[float, int]] = field(init=False)
+
+    def __post_init__(self) -> None:
+        self._t0 = self.clock()
+        self._buckets = deque()
+
+    def _evict(self, now: float) -> None:
+        cutoff = now - self.window_s
+        while self._buckets and self._buckets[0][0] < cutoff:
+            self._buckets.popleft()
 
     def add(self, n: int) -> None:
-        self._examples += n
+        now = self.clock()
+        self._buckets.append((now, n))
+        self._evict(now)
 
     @property
     def eps(self) -> float:
-        dt = time.perf_counter() - self._t0
-        return self._examples / dt if dt > 0 else 0.0
+        now = self.clock()
+        self._evict(now)
+        span = min(now - self._t0, self.window_s)
+        if span <= 0:
+            return 0.0
+        return sum(n for _, n in self._buckets) / span
 
 
 # Paper Table 1 — ELP of prior art (batch, #hogwild, #replicas as reported).

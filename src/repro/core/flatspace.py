@@ -18,6 +18,13 @@ Packing casts every leaf to fp32 (the sync algorithms do their math in fp32
 anyway); unpacking restores each leaf's dtype and shape. The round trip is
 lossless for float32/bfloat16/float16 leaves because fp32 is a superset of
 both half formats.
+
+Elastic membership (DESIGN.md §8): the replica axis is CAPACITY-padded. A
+runner allocates its buffer once at ``(R_max, n_rows, 128)`` — ``R_max`` from
+``core.membership.Membership`` — and join/leave/fail only flip bits in the
+active-slot mask: no reallocation, no retrace of the training step, and dead
+rows cost zero HBM traffic in the fused sync kernels (their ids are simply
+absent from the scalar-prefetch row sets).
 """
 from __future__ import annotations
 

@@ -35,21 +35,35 @@ Neither runner knows any algorithm by name: the whole sync lifecycle —
 state init, launch snapshot, landing, the threaded shadow round — is owned
 by the ``SyncAlgorithm`` fetched from ``core.algorithms`` (DESIGN.md §6),
 so a newly registered algorithm runs here without touching this file.
+
+Elastic membership (DESIGN.md §8): both runners consume a mutable
+``core.membership.Membership`` instead of a frozen ``R``. Buffers are
+capacity-padded at ``R_max`` so join/leave/fail never reallocate or retrace;
+``HogwildSim`` takes a deterministic ``MembershipSchedule`` for reproducible
+elasticity experiments, ``ThreadedShadowRunner`` a ``FaultSpec`` harness
+(straggler slowdown, crash-at-iteration, join-at-iteration) where the shadow
+thread reads membership each round and simply skips dead slots — training
+never blocks on a fault. ``mode="fixed_rate"`` in the threaded runner is the
+foreground contrast: every trainer blocks at the sync point, so one
+straggler drags the whole cohort to its pace.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, replace
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as ckpt
 from repro.core import algorithms
 from repro.core import sync as S
+from repro.core.elp import EPSMeter
 from repro.core.flatspace import FlatSpace
+from repro.core.membership import FaultSpec, Membership, MembershipSchedule
 from repro.data import ctr
 from repro.embeddings import shards as emb_shards
 from repro.embeddings import table as emb
@@ -96,12 +110,32 @@ class HogwildSim:
         optimizer: Optimizer,
         emb_lr: float = 0.05,
         seed: int = 0,
+        membership: Optional[Membership] = None,
+        schedule: Optional[Union[MembershipSchedule,
+                                 Sequence[Tuple[int, str, int]]]] = None,
     ):
         self.cfg = cfg
         self.sync_cfg = sync_cfg.validate()
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
-        self.R, self.M, self.B = n_trainers, n_threads, batch_size
+        # Elastic membership: buffers are CAPACITY-padded at R_max; join/
+        # leave/fail only flip the active mask — no reallocation, no retrace.
+        # Without an explicit membership/schedule the sim runs the exact
+        # legacy fixed-R path (bit-identical trajectories).
+        self._elastic = membership is not None or schedule is not None
+        if schedule is not None and not isinstance(schedule, MembershipSchedule):
+            schedule = MembershipSchedule(schedule)
+        self.schedule = schedule
+        if membership is None:
+            cap = n_trainers
+            if schedule is not None:
+                cap = max(cap, schedule.max_slot() + 1)
+            membership = Membership(n_trainers, R_max=cap)
+        if membership.R_max < n_trainers:
+            raise ValueError(f"membership capacity {membership.R_max} < "
+                             f"n_trainers {n_trainers}")
+        self.membership = membership
+        self.R, self.M, self.B = membership.R_max, n_threads, batch_size
         self.opt = optimizer
         self.emb_lr = emb_lr
         self.seed = seed
@@ -128,7 +162,7 @@ class HogwildSim:
             (w, opt_state), _ = jax.lax.scan(apply_one, (w, opt_state), g_w)
             return w, opt_state, jnp.mean(loss), g_pooled
 
-        def train_core(state_w, state_opt, emb_state, batch):
+        def train_core(state_w, state_opt, emb_state, batch, active=None):
             # batch leaves: (R, M, B, ...)
             idx = batch["sparse"]
             pooled = emb.lookup(
@@ -138,6 +172,20 @@ class HogwildSim:
             w2, opt2, loss, g_pooled = jax.vmap(one_trainer)(
                 state_w, state_opt, batch["dense"], pooled, batch["labels"]
             )
+            if active is not None:
+                # Elastic membership: dead slots are computed (shape-stable —
+                # no retrace on join/leave) but contribute NOTHING: their
+                # dense/optimizer updates are discarded and their embedding
+                # gradients zeroed (a zero-gradient Adagrad row update is an
+                # exact no-op: acc += 0, row += 0).
+                def keep(new, old):
+                    k = active.reshape((R,) + (1,) * (old.ndim - 1))
+                    return jnp.where(k, new, old)
+
+                w2 = jax.tree.map(keep, w2, state_w)
+                opt2 = jax.tree.map(keep, opt2, state_opt)
+                g_pooled = jnp.where(
+                    active.reshape((R, 1, 1, 1, 1)), g_pooled, 0.0)
             # Hogwild on the single embedding copy: every trainer/thread applies
             # immediately; one fused scatter-Adagrad kernel launch implements
             # the duplicate-row accumulate.
@@ -145,7 +193,10 @@ class HogwildSim:
             flat_g = g_pooled.reshape(-1, cfg.n_sparse_features, cfg.embedding_dim)
             emb2 = emb.sparse_adagrad_update_fused(
                 emb_state, spec, flat_idx, flat_g, self.emb_lr)
-            return w2, opt2, emb2, jnp.mean(loss)
+            # elastic callers get the per-replica loss vector (the host masks
+            # dead slots out of the reported mean and the join tests read it)
+            return w2, opt2, emb2, (loss if active is not None
+                                    else jnp.mean(loss))
 
         sc = self.sync_cfg
         if self.engine == "flat":
@@ -160,17 +211,33 @@ class HogwildSim:
                 )
                 return fs.pack_stack(w2), opt2, emb2, loss
 
+            def train_iter_elastic(w_buf, state_opt, emb_state, active, batch):
+                w2, opt2, emb2, loss = train_core(
+                    fs.unpack_stack(w_buf), state_opt, emb_state, batch,
+                    active=active
+                )
+                return fs.pack_stack(w2), opt2, emb2, loss
+
             # Sync launches/landings are owned by the algorithm (host hooks
             # dispatching fused Pallas kernels) — nothing to build here.
         else:
             train_iter = train_core
+
+            def train_iter_elastic(state_w, state_opt, emb_state, active, batch):
+                return train_core(state_w, state_opt, emb_state, batch,
+                                  active=active)
+
             # pytree landing: one jit over the algorithm's oracle (retraces
-            # only per snap/mask None-ness — a handful of structures).
+            # only per snap/mask None-ness — a handful of structures). The
+            # elastic path dispatches the algorithm's membership-aware
+            # ``land_elastic`` host hook instead.
             self._land_py = jax.jit(
                 lambda ws, st, snap, mask: self.algo.land(ws, st, snap, mask, sc)
             )
 
         self._train_iter = jax.jit(train_iter, donate_argnums=(0, 1, 2))
+        self._train_iter_elastic = jax.jit(
+            train_iter_elastic, donate_argnums=(0, 1, 2))
 
         def eval_batch(w, emb_state, batch):
             pooled = emb.lookup(emb_state, spec, batch["sparse"])
@@ -186,10 +253,11 @@ class HogwildSim:
         w0 = dlrm.init_dense(self.cfg, kw)
         emb_state = emb.init_tables(self.spec, ke)
         opt0 = self.opt.init(w0)
+        self._opt0 = opt0  # fresh-slot template for join bootstraps
         opt_stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (self.R,) + x.shape).copy(), opt0)
         if self.engine == "flat":
             fs = self.flat
-            w_stack = fs.broadcast(w0, self.R)  # packed ONCE here
+            w_stack = fs.broadcast(w0, self.R)  # packed ONCE, at capacity R_max
             algo_state = self.algo.init_state_flat(fs.pack(w0), self.sync_cfg, fs)
         else:
             w_stack = jax.tree.map(lambda x: jnp.broadcast_to(x, (self.R,) + x.shape).copy(), w0)
@@ -211,44 +279,112 @@ class HogwildSim:
         offs = (np.arange(self.R) * gap) // max(self.R, 1)
         return ((t + offs) % gap) == 0
 
-    def _launch_snapshot(self, st: SimState, mask: np.ndarray) -> Pytree:
+    def _launch_snapshot(self, st: SimState, mask: np.ndarray,
+                         active: Optional[np.ndarray] = None) -> Pytree:
         """State captured when a background sync launches (lands `delay` later).
 
         Flat engine: the algorithm picks its own compact form — a fired-rows
         gather (EASGD/gossip), a replica-mean plane (MA/BMUF), or a full
-        buffer copy (the generic fallback).
+        buffer copy (the generic fallback). ``active`` is the membership mask
+        at launch: a dead slot is never snapshotted and the decentralized
+        mean divides by the live count.
         """
         if self.engine == "flat":
             return self.algo.launch_snapshot_flat(
-                st.w_stack, mask, self.sync_cfg, self.flat, st.algo_state)
+                st.w_stack, mask, self.sync_cfg, self.flat, st.algo_state,
+                active=active)
         # pytree: real deep copy (train_iter donates its buffers)
         return jax.tree.map(jnp.copy, st.w_stack)
 
+    def _apply_membership_event(self, st: SimState, kind: str, slot: int) -> SimState:
+        """One schedule transition, at an iteration boundary. Joins bootstrap
+        through the algorithm's ``on_join`` hook (live mean / PS copy) with a
+        fresh optimizer slot; leaves/fails dispatch ``on_leave``. Nothing
+        reallocates — the capacity-padded buffers just flip a mask bit."""
+        sc, fs = self.sync_cfg, self.flat
+        if kind in ("fail", "leave"):
+            getattr(self.membership, kind)(slot)
+            if self.engine == "flat":
+                st.algo_state = self.algo.on_leave_flat(st.algo_state, slot, sc, fs)
+            else:
+                st.algo_state = self.algo.on_leave(st.algo_state, slot, sc)
+            return st
+        if kind != "join":
+            raise ValueError(f"unknown membership event kind {kind!r}")
+        donors = self.membership.active_mask()  # before the join
+        self.membership.join(slot)
+        if donors.any():  # no live donors -> keep the slot's current weights
+            if self.engine == "flat":
+                st.w_stack, st.algo_state = self.algo.on_join_flat(
+                    st.w_stack, slot, st.algo_state, donors, sc, fs)
+            else:
+                st.w_stack, st.algo_state = self.algo.on_join(
+                    st.w_stack, slot, st.algo_state, jnp.asarray(donors), sc)
+        st.opt_stack = S.tree_set(st.opt_stack, slot, self._opt0)
+        self.membership.activate(slot)
+        return st
+
     def run(self, n_iters: int, *, log_every: int = 0,
-            on_iter: Optional[Callable[[int, float], None]] = None) -> Dict[str, Any]:
-        st = self.init_state()
+            on_iter: Optional[Callable[[int, float], None]] = None,
+            state: Optional[SimState] = None) -> Dict[str, Any]:
+        """Train ``n_iters`` iterations. ``state`` resumes a prior run (e.g.
+        an elastic ``load_state``): iteration numbering — and therefore the
+        one-pass batch stream, the shadow-clock offsets, and the membership
+        schedule — continues from ``state.step`` instead of replaying from
+        zero."""
+        st = self.init_state() if state is None else state
         sc = self.sync_cfg
+        elastic = self._elastic
         losses: List[float] = []
+        replica_losses: List[np.ndarray] = []
         sync_count = 0
-        pending: Optional[Tuple[int, Pytree, np.ndarray]] = None  # (land_t, snapshot, mask)
-        for t in range(n_iters):
+        examples = 0
+        start = int(st.step)
+        # (land_t, snapshot, fired_mask, launch_active)
+        pending: Optional[Tuple[int, Pytree, np.ndarray, Optional[np.ndarray]]] = None
+        for t in range(start, start + n_iters):
+            if elastic and self.schedule is not None:
+                for kind, slot in self.schedule.events_at(t):
+                    st = self._apply_membership_event(st, kind, slot)
+            active = self.membership.active_mask() if elastic else None
             batch = self.make_batch(t)
-            st.w_stack, st.opt_stack, st.emb_state, loss = self._train_iter(
-                st.w_stack, st.opt_stack, st.emb_state, batch
-            )
-            losses.append(float(loss))
+            if elastic:
+                st.w_stack, st.opt_stack, st.emb_state, loss_vec = (
+                    self._train_iter_elastic(st.w_stack, st.opt_stack,
+                                             st.emb_state, jnp.asarray(active),
+                                             batch))
+                lv = np.asarray(loss_vec)
+                replica_losses.append(lv)
+                # an all-dead cohort trains nothing: nan, not a mean of []
+                losses.append(float(lv[active].mean()) if active.any()
+                              else float("nan"))
+                examples += int(active.sum()) * self.M * self.B
+            else:
+                st.w_stack, st.opt_stack, st.emb_state, loss = self._train_iter(
+                    st.w_stack, st.opt_stack, st.emb_state, batch
+                )
+                losses.append(float(loss))
+                examples += self.R * self.M * self.B
             if sc.mode == "fixed_rate":
-                if (t + 1) % sc.gap == 0:
-                    st = self._apply_sync(st, None, None)
-                    sync_count += self.R  # every replica synced this round
+                if (t + 1) % sc.gap == 0 and (active is None or active.any()):
+                    st = self._apply_sync(st, None, None, active=active)
+                    sync_count += self.R if active is None else int(active.sum())
             else:  # shadow
                 if pending is not None and t + 1 >= pending[0]:
-                    _, snap, mask = pending
-                    st = self._apply_sync(st, snap, mask)
-                    sync_count += int(mask.sum()) if mask is not None else self.R
+                    _, snap, mask, launch_active = pending
+                    # landing reads the CURRENT membership — a slot that died
+                    # while the sync was in flight is simply skipped (an
+                    # all-dead cohort drops the landing entirely)
+                    if active is None or active.any():
+                        st = self._apply_sync(st, snap, mask, active=active,
+                                              launch_active=launch_active)
+                        sync_count += (int(mask.sum()) if mask is not None
+                                       else self.R)
                     pending = None
                 if pending is None:
                     mask = self._shadow_schedule(t + 1)
+                    if elastic:
+                        mask = mask & active  # a dead slot's clock never fires
                     if mask.any():
                         if sc.delay == 0:
                             # Zero in-flight iterations: the sync launched at
@@ -259,37 +395,55 @@ class HogwildSim:
                             # deep copy; the flat engine still builds its
                             # compact launch form (the fused landing consumes
                             # exactly that shape).
-                            snap = (self._launch_snapshot(st, mask)
+                            snap = (self._launch_snapshot(st, mask, active)
                                     if self.engine == "flat" else st.w_stack)
-                            st = self._apply_sync(st, snap, mask)
+                            st = self._apply_sync(st, snap, mask, active=active,
+                                                  launch_active=active)
                             sync_count += int(mask.sum())
                         else:
                             pending = (t + 1 + sc.delay,
-                                       self._launch_snapshot(st, mask), mask)
+                                       self._launch_snapshot(st, mask, active),
+                                       mask, active)
             st.step = t + 1
             if on_iter:
                 on_iter(t, losses[-1])
             if log_every and (t + 1) % log_every == 0:
                 print(f"iter {t+1}: loss {np.mean(losses[-log_every:]):.5f}")
-        return {
+        # replica-iterations actually trained (dead slots don't count):
+        # identical to n_iters * R when membership never changes
+        replica_iters = examples // (self.M * self.B)
+        out = {
             "state": st,
             "train_loss": losses,
             "sync_count": sync_count,
-            "avg_sync_gap": (n_iters * self.R / max(sync_count, 1)),
+            "avg_sync_gap": (replica_iters / max(sync_count, 1)),
+            "examples": examples,
         }
+        if elastic:
+            out["replica_losses"] = np.stack(replica_losses)
+            out["membership_events"] = list(self.membership.events)
+        return out
 
-    def _apply_sync(self, st: SimState, snap, mask) -> SimState:
+    def _apply_sync(self, st: SimState, snap, mask, active=None,
+                    launch_active=None) -> SimState:
         """Land one background sync: the algorithm owns the semantics (one
         fused kernel launch on the flat engine; the jitted pytree oracle
         otherwise). ``snap=None`` means fixed-rate — sync against the current
-        state; ``mask=None`` means every replica fired."""
+        state; ``mask=None`` means every replica fired; ``active`` /
+        ``launch_active`` are the membership masks at landing / launch time
+        (None == not elastic)."""
         if self.engine == "flat":
             st.w_stack, st.algo_state = self.algo.land_flat(
-                st.w_stack, st.algo_state, snap, mask, self.sync_cfg, self.flat)
-        else:
+                st.w_stack, st.algo_state, snap, mask, self.sync_cfg, self.flat,
+                active=active)
+        elif active is None:
             mask_arr = None if mask is None else jnp.asarray(mask)
             st.w_stack, st.algo_state = self._land_py(
                 st.w_stack, st.algo_state, snap, mask_arr)
+        else:
+            st.w_stack, st.algo_state = self.algo.land_elastic(
+                st.w_stack, st.algo_state, snap, mask, active, self.sync_cfg,
+                launch_active=launch_active)
         return st
 
     def replica_params(self, st: SimState, i: int) -> Pytree:
@@ -304,6 +458,75 @@ class HogwildSim:
         if self.engine == "flat":
             return self.flat.unpack_stack(st.w_stack)
         return st.w_stack
+
+    # -- elastic checkpointing (DESIGN.md §8.5) ------------------------------
+    def _state_tree(self, st: SimState) -> Dict[str, Any]:
+        """Engine-independent on-disk form: dense replicas as the named
+        pytree stack, embedding + optimizer + opaque algorithm state."""
+        return {"w": self.dense_stack(st), "opt": st.opt_stack,
+                "emb": st.emb_state, "algo": st.algo_state}
+
+    def save_state(self, path: str, st: SimState,
+                   metadata: Optional[Dict[str, Any]] = None) -> None:
+        meta = {"step": st.step, "algo": self.sync_cfg.algo,
+                "engine": self.engine, "R": self.R,
+                "active_mask": [bool(b) for b in self.membership.active_mask()]}
+        meta.update(metadata or {})
+        ckpt.save(path, self._state_tree(st), metadata=meta)
+
+    def load_state(self, path: str) -> SimState:
+        """Elastic restore: the checkpoint's replica count may differ from
+        this sim's capacity. Shrink truncates the replica axis; every slot
+        that is active NOW but was not live at save time — grown slots AND
+        slots that were dead when saved (their rows are stale) — is
+        bootstrapped through the algorithm's ``on_join`` hook (live mean /
+        PS copy) with a fresh optimizer state, so resuming a run saved at
+        R=4 with R=6 just works and a dead-at-save slot is never silently
+        resurrected from stale weights."""
+        meta0 = ckpt.read_metadata(path)
+        for field in ("engine", "algo"):
+            want = getattr(self, field) if field == "engine" else self.sync_cfg.algo
+            if field in meta0 and meta0[field] != want:
+                raise ValueError(
+                    f"checkpoint at {path!r} was saved with {field}="
+                    f"{meta0[field]!r} but this sim runs {field}={want!r}; "
+                    f"construct the sim to match (the algo_state layout is "
+                    f"{field}-specific)")
+        template = self.init_state()
+        like = self._state_tree(template)
+        # only the replica-stacked trees may resize; a mismatch anywhere
+        # else (e.g. embedding rows from a different config) must raise
+        replica_stacked = lambda k: k == "w" or k.startswith("w/") \
+            or k == "opt" or k.startswith("opt/")
+        tree, meta, resized = ckpt.restore_elastic(path, like,
+                                                   may_resize=replica_stacked)
+        w_stack = (self.flat.pack_stack(tree["w"]) if self.engine == "flat"
+                   else tree["w"])
+        st = SimState(w_stack, tree["opt"], tree["emb"], tree["algo"],
+                      int(meta.get("step", 0)))
+        saved_R = int(meta.get("R", self.R))
+        # donors = the restored cohort: rows live at SAVE time (and present
+        # after any truncation)
+        donors = np.zeros((self.R,), bool)
+        k = min(saved_R, self.R)
+        saved_active = meta.get("active_mask")
+        if saved_active is None:
+            donors[:k] = True
+        else:
+            donors[:k] = np.asarray(saved_active, bool)[:k]
+        need = self.membership.active_mask() & ~donors
+        sc, fs = self.sync_cfg, self.flat
+        for slot in np.flatnonzero(need):
+            slot = int(slot)
+            if donors.any():
+                if self.engine == "flat":
+                    st.w_stack, st.algo_state = self.algo.on_join_flat(
+                        st.w_stack, slot, st.algo_state, donors, sc, fs)
+                else:
+                    st.w_stack, st.algo_state = self.algo.on_join(
+                        st.w_stack, slot, st.algo_state, jnp.asarray(donors), sc)
+            st.opt_stack = S.tree_set(st.opt_stack, slot, self._opt0)
+        return st
 
     def evaluate(self, st: SimState, n_batches: int = 20, batch_size: int = 4096,
                  replica: int = 0) -> float:
@@ -346,7 +569,10 @@ class ThreadedShadowRunner:
     def __init__(self, cfg, sync_cfg: S.SyncConfig, *, n_trainers: int,
                  batch_size: int, optimizer: Optimizer, emb_lr: float = 0.05,
                  seed: int = 0, sync_sleep_s: float = 0.0,
-                 n_emb_shards: Optional[int] = None):
+                 n_emb_shards: Optional[int] = None,
+                 fault_spec: Optional[FaultSpec] = None,
+                 membership: Optional[Membership] = None,
+                 eps_window_s: float = 2.0):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
@@ -355,6 +581,17 @@ class ThreadedShadowRunner:
         self.emb_lr = emb_lr
         self.seed = seed
         self.sync_sleep_s = sync_sleep_s
+        # Fault-injection harness + elastic membership (DESIGN.md §8.4):
+        # slots with a join_at schedule start dead and bootstrap mid-run.
+        self.fault = (fault_spec or FaultSpec()).validate(n_trainers)
+        if membership is None:
+            membership = Membership.from_mask(
+                [i not in self.fault.join_at for i in range(n_trainers)])
+        if membership.R_max != n_trainers:
+            raise ValueError(f"membership capacity {membership.R_max} != "
+                             f"n_trainers {n_trainers}")
+        self.membership = membership
+        self.eps_window_s = eps_window_s
         self.spec = emb.spec_from_config(cfg)
         self.teacher = ctr.make_teacher(cfg, seed=seed + 777)
         self.flat = _dense_flatspace(cfg) if self.engine == "flat" else None
@@ -397,10 +634,39 @@ class ThreadedShadowRunner:
         # mutates the per-trainer planes/pytrees in place (Algorithm 1).
         self._shadow_round = self.algo.make_shadow_round(self.sync_cfg, self.flat)
 
+    def _bootstrap_join(self, i: int) -> None:
+        """Bootstrap a joining slot through the algorithm's ``on_join`` hook
+        (live mean / PS copy) with a fresh optimizer state. Called between
+        ``membership.join`` and ``membership.activate`` — the joiner is not
+        yet in the active mask, so the donors are exactly the live cohort.
+        The hook sees a COMPACT stack of [donor planes..., joiner plane]
+        (joiner last) rather than a copy of the whole replica space — this
+        runs under ``_state_lock``, so the copy is kept to the data a donor
+        mean actually needs."""
+        donor_ids = [int(j) for j in self.membership.active_ids()]
+        if not donor_ids:  # no live donors: keep the slot's current weights
+            self.opt_states[i] = self.opt.init(self._w0)
+            return
+        slot = len(donor_ids)  # joiner's position in the compact stack
+        active = np.asarray([True] * slot + [False])
+        if self.engine == "flat":
+            buf = jnp.stack([self.w[j] for j in donor_ids] + [self.w[i]])
+            buf, self.algo_state = self.algo.on_join_flat(
+                buf, slot, self.algo_state, active, self.sync_cfg, self.flat)
+            self.w[i] = buf[slot]
+        else:
+            trees = [self.w[j] for j in donor_ids] + [self.w[i]]
+            stack = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+            stack, self.algo_state = self.algo.on_join(
+                stack, slot, self.algo_state, jnp.asarray(active), self.sync_cfg)
+            self.w[i] = S.tree_slice(stack, slot)
+        self.opt_states[i] = self.opt.init(self._w0)
+
     def run(self, iters_per_trainer: int) -> Dict[str, Any]:
         key = jax.random.PRNGKey(self.seed)
         kw, ke = jax.random.split(key)
         w0 = dlrm.init_dense(self.cfg, kw)
+        self._w0 = w0
         if self.engine == "flat":
             plane0 = self.flat.pack(w0)
             self.w: List[Pytree] = [plane0.copy() for _ in range(self.R)]
@@ -412,15 +678,120 @@ class ThreadedShadowRunner:
         self.opt_states = [self.opt.init(w0) for _ in range(self.R)]
         # Per-PS Hogwild states, seed-identical to the packed single table.
         self.emb = emb_shards.EmbeddingShards.init(self.plan, ke)
-        self.done = False
+        self.done = threading.Event()
         self.examples = 0
         self.sync_count = 0
+        self._sync_lock = threading.Lock()  # shadow/trainer threads both add
+        # serializes algo_state transitions: the shadow round vs the rare
+        # crash/join handlers (an unguarded read-modify-write could revert a
+        # round's PS/consensus update with a stale copy)
+        self._state_lock = threading.Lock()
+        self.eps_meter = EPSMeter(window_s=self.eps_window_s)
         self.iter_count = [0] * self.R
+        trainer_wall = [0.0] * self.R
         losses: List[List[float]] = [[] for _ in range(self.R)]
         ex_lock = threading.Lock()
+        fr = self.sync_cfg.mode == "fixed_rate"
+        if fr:
+            # Foreground sync point: a Condition-based barrier whose party
+            # count tracks membership, so a crash shrinks it instead of
+            # deadlocking — but a straggler still drags EVERYONE (the paper's
+            # fixed-rate failure mode, restated as fault tolerance).
+            self._fr_cond = threading.Condition()
+            self._fr_parties = int(self.membership.n_active)
+            self._fr_arrived = 0
+            self._fr_gen = 0
+        initial_active = set(int(j) for j in self.membership.active_ids())
+        self._initial_running = len(initial_active)
+
+        def _progress() -> int:
+            return max((self.iter_count[j] for j in initial_active),
+                       default=iters_per_trainer)
+
+        def _add_syncs(n: int) -> None:
+            with self._sync_lock:
+                self.sync_count += n
+
+        def _round_over_active() -> int:
+            # The round runs over the LIVE planes only: the matching/mean/PS
+            # exchange is drawn over membership.active_ids() — dead slots are
+            # simply skipped, training never blocks on them.
+            with self._state_lock:
+                ids = self.membership.active_ids()
+                if ids.size == 0:
+                    return 0
+                sub = [self.w[j] for j in ids]
+                self.algo_state, n = self._shadow_round(sub, self.algo_state)
+                for k, j in enumerate(ids):
+                    self.w[j] = sub[k]
+                return n
+
+        def _fr_deregister() -> None:
+            with self._fr_cond:
+                self._fr_parties -= 1
+                self._fr_cond.notify_all()
+
+        def _fr_sync_point() -> None:
+            with self._fr_cond:
+                gen = self._fr_gen
+                self._fr_arrived += 1
+                # wait until every live party arrived (a crash shrinks
+                # _fr_parties and notifies, so the barrier re-evaluates)
+                while self._fr_gen == gen and self._fr_arrived < self._fr_parties:
+                    self._fr_cond.wait(timeout=0.05)
+                if self._fr_gen == gen:
+                    # last to arrive runs the foreground round for everyone
+                    n = _round_over_active()
+                    if n:
+                        _add_syncs(n)
+                    self._fr_arrived = 0
+                    self._fr_gen += 1
+                    self._fr_cond.notify_all()
 
         def trainer(i: int):
-            for it in range(iters_per_trainer):
+            try:
+                _trainer_body(i)
+            finally:
+                if i in initial_active:
+                    with ex_lock:
+                        self._initial_running -= 1
+
+        def _trainer_body(i: int):
+            n_iters = iters_per_trainer
+            if i in self.fault.join_at:
+                target = self.fault.join_at[i]
+                while _progress() < target:
+                    if (_progress() >= iters_per_trainer
+                            or self._initial_running == 0):
+                        return  # cohort finished (or all crashed) before the
+                        # join point — never block run() on an unreachable join
+                    time.sleep(0.001)
+                with self._state_lock:
+                    self.membership.join(i)
+                    self._bootstrap_join(i)
+                    self.membership.activate(i)
+                if fr:
+                    with self._fr_cond:
+                        self._fr_parties += 1
+                n_iters = max(iters_per_trainer - target, 1)
+            t_start = time.perf_counter()
+            sleep_s = self.fault.straggler_sleep_s.get(i, 0.0)
+            crash = self.fault.crash_at.get(i)
+            for it in range(n_iters):
+                if crash is not None and it >= crash:
+                    with self._state_lock:
+                        self.membership.fail(i)
+                        if self.engine == "flat":
+                            self.algo_state = self.algo.on_leave_flat(
+                                self.algo_state, i, self.sync_cfg, self.flat)
+                        else:
+                            self.algo_state = self.algo.on_leave(
+                                self.algo_state, i, self.sync_cfg)
+                    if fr:
+                        _fr_deregister()
+                    break
+                if sleep_s:
+                    time.sleep(sleep_s)  # injected degradation
                 batch = ctr.gen_batch(
                     self.cfg, self.teacher, self.seed + i, it, self.B
                 )
@@ -439,27 +810,39 @@ class ThreadedShadowRunner:
                 self.iter_count[i] = it + 1
                 with ex_lock:
                     self.examples += self.B
+                    self.eps_meter.add(self.B)
+                if fr and (it + 1) % self.sync_cfg.gap == 0:
+                    _fr_sync_point()
+            else:
+                if fr:
+                    _fr_deregister()
+            trainer_wall[i] = time.perf_counter() - t_start
 
         def shadow():
-            while not self.done:
+            while not self.done.is_set():
                 # One algorithm-owned background round over the live replica
                 # planes — landings interpolate into the CURRENT state while
                 # trainers keep moving (paper §3.3).
-                self.algo_state, n = self._shadow_round(self.w, self.algo_state)
-                self.sync_count += n
+                n = _round_over_active()
+                if n:
+                    _add_syncs(n)
+                else:
+                    time.sleep(0.001)
                 if self.sync_sleep_s:
                     time.sleep(self.sync_sleep_s)
 
         threads = [threading.Thread(target=trainer, args=(i,)) for i in range(self.R)]
-        shadow_t = threading.Thread(target=shadow, daemon=True)
+        shadow_t = None if fr else threading.Thread(target=shadow, daemon=True)
         t0 = time.perf_counter()
         for t in threads:
             t.start()
-        shadow_t.start()
+        if shadow_t is not None:
+            shadow_t.start()
         for t in threads:
             t.join()
-        self.done = True
-        shadow_t.join(timeout=5.0)
+        self.done.set()
+        if shadow_t is not None:
+            shadow_t.join(timeout=5.0)
         wall = time.perf_counter() - t0
         total_iters = sum(self.iter_count)
         if self.engine == "flat":
@@ -468,10 +851,20 @@ class ThreadedShadowRunner:
             w_out = self.w
         return {
             "eps": self.examples / wall,
+            # rate over the trailing window — after a crash this is the
+            # SURVIVORS' pace, not an average diluted by the dead trainer
+            "eps_window": self.eps_meter.eps,
             "wall_s": wall,
-            "train_loss": [float(np.mean(l[-50:])) for l in losses],
+            "train_loss": [float(np.mean(l[-50:])) if l else float("nan")
+                           for l in losses],
             "sync_count": self.sync_count,
             "avg_sync_gap": total_iters / max(self.sync_count, 1),
+            "per_trainer_eps": [
+                self.B * self.iter_count[i] / trainer_wall[i]
+                if trainer_wall[i] > 0 and self.iter_count[i] > 0 else 0.0
+                for i in range(self.R)],
+            "iter_count": list(self.iter_count),
+            "membership_events": list(self.membership.events),
             "w": w_out,
             # Engine-independent packed view of the per-PS states.
             "emb_state": self.emb.to_packed(),

@@ -36,6 +36,24 @@ def replica_mean(stack: Pytree) -> Pytree:
     return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0), stack)
 
 
+def _bc_mask(mask: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a (R,) mask over a leaf with leading replica dim."""
+    return mask.reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+def masked_replica_mean(stack: Pytree, active: jnp.ndarray) -> Pytree:
+    """Mean over only the ACTIVE replicas — the elastic-membership
+    denominator (dead slots contribute nothing, the mean divides by the
+    live count). ``active``: (R,) bool."""
+    cnt = jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
+    return jax.tree.map(
+        lambda x: jnp.sum(
+            jnp.where(_bc_mask(active, x), x.astype(jnp.float32), 0.0), axis=0
+        ) / cnt,
+        stack,
+    )
+
+
 def tree_slice(stack: Pytree, i) -> Pytree:
     return jax.tree.map(lambda x: x[i], stack)
 
@@ -88,16 +106,34 @@ def easgd_round(w_stack: Pytree, w_ps: Pytree, alpha: float,
 # ---------------------------------------------------------------------------
 
 def ma_round(w_stack: Pytree, alpha: float,
-             snapshot: Optional[Pytree] = None) -> Pytree:
+             snapshot: Optional[Pytree] = None,
+             active: Optional[jnp.ndarray] = None,
+             land_active: Optional[jnp.ndarray] = None) -> Pytree:
     """AllReduce-average the replicas, then elastically pull each replica toward
     the average. ``snapshot`` (if given) is the replica stack at sync-launch time —
     the average is computed from it while the pull-back lands on the current stack,
-    modeling training that continued during the background AllReduce."""
-    w_global = replica_mean(snapshot if snapshot is not None else w_stack)
+    modeling training that continued during the background AllReduce.
+
+    Elastic membership: ``active`` ((R,) bool) restricts the MEAN to the
+    replicas live at launch (divide by the live count); ``land_active``
+    restricts the pull-back to the replicas live at landing (defaults to
+    ``active`` — dead slots are untouched either way)."""
+    src = snapshot if snapshot is not None else w_stack
+    if active is None:
+        w_global = replica_mean(src)
+    else:
+        w_global = masked_replica_mean(src, active)
     bcast = jax.tree.map(
         lambda g, x: jnp.broadcast_to(g.astype(x.dtype), x.shape), w_global, w_stack
     )
-    return lerp(w_stack, bcast, alpha)
+    new = lerp(w_stack, bcast, alpha)
+    if land_active is None:
+        land_active = active
+    if land_active is None:
+        return new
+    return jax.tree.map(
+        lambda n, x: jnp.where(_bc_mask(land_active, x), n, x), new, w_stack
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -132,9 +168,16 @@ def bmuf_round(
     nesterov: bool = False,
     step_scale_n: bool = False,
     snapshot: Optional[Pytree] = None,
+    active: Optional[jnp.ndarray] = None,
+    land_active: Optional[jnp.ndarray] = None,
 ) -> Tuple[Pytree, BMUFState]:
     """Algorithm 4. AllReduce-average -> descent direction vs w_global -> (optional
     block-momentum / Nesterov) global step -> elastic pull-back into each replica.
+    Elastic membership: ``active`` ((R,) bool) restricts the mean to the
+    replicas live at launch (divide by the live count); ``land_active``
+    restricts the pull-back to the replicas live at landing (defaults to
+    ``active``); the global (w_global, velocity) step is
+    membership-independent.
 
     ``step_scale_n=True`` reproduces the paper's line 9 literally
     (w_global += n * w_desc). With the elastic pull-back (alpha < 1) the replicas
@@ -142,7 +185,9 @@ def bmuf_round(
     small sync gaps — we default to the classic BMUF block step (scale 1) and
     expose the paper's variant; see EXPERIMENTS.md §Paper-validation notes."""
     R = jax.tree.leaves(w_stack)[0].shape[0]
-    w_copy = replica_mean(snapshot if snapshot is not None else w_stack)
+    src = snapshot if snapshot is not None else w_stack
+    w_copy = (replica_mean(src) if active is None
+              else masked_replica_mean(src, active))
     desc = jax.tree.map(lambda c, g: c - g, w_copy, state.w_global)
     scale = float(R) if step_scale_n else 1.0
     vel = jax.tree.map(
@@ -156,7 +201,14 @@ def bmuf_round(
     bcast = jax.tree.map(
         lambda g, x: jnp.broadcast_to(g.astype(x.dtype), x.shape), look, w_stack
     )
-    return lerp(w_stack, bcast, alpha), BMUFState(w_global=w_global, velocity=vel)
+    new = lerp(w_stack, bcast, alpha)
+    if land_active is None:
+        land_active = active
+    if land_active is not None:
+        new = jax.tree.map(
+            lambda n, x: jnp.where(_bc_mask(land_active, x), n, x), new, w_stack
+        )
+    return new, BMUFState(w_global=w_global, velocity=vel)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,12 @@ replica streams by exactly once for the elastic pull-back:
 
 The replica mean itself is computed at sync-launch time by
 ``ma_update.replica_mean`` (it IS the decentralized launch snapshot).
+
+Elastic membership (DESIGN.md §8): ``bmuf_update_rows`` lands only on the
+LIVE replica rows — their ids arrive via scalar prefetch and drive the stack
+index maps, so dead slots move zero HBM bytes and keep their buffer contents
+bit-identical; the N-sized global step is membership-independent (w_global
+and velocity have no replica axis).
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.flatspace import LANE
 
@@ -88,3 +95,77 @@ def bmuf_update(
         input_output_aliases={0: 0},
         interpret=interpret,
     )(stack, mean, w_global, velocity)
+
+
+def _bmuf_rows_kernel(rows_ref, stack_ref, mean_ref, wg_ref, vel_ref,
+                      out_stack_ref, out_wg_ref, out_vel_ref, *,
+                      alpha: float, eta: float, block_momentum: float,
+                      nesterov: bool, scale: float):
+    del rows_ref  # consumed by the index maps
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _():
+        desc = mean_ref[...] - wg_ref[...]
+        vel = block_momentum * vel_ref[...] + eta * scale * desc
+        out_vel_ref[...] = vel
+        out_wg_ref[...] = wg_ref[...] + vel
+
+    vel = out_vel_ref[...]
+    wg = out_wg_ref[...]
+    look = wg + block_momentum * vel if nesterov else wg
+    wi = stack_ref[0].astype(jnp.float32)
+    out_stack_ref[0] = ((1.0 - alpha) * wi + alpha * look).astype(out_stack_ref.dtype)
+
+
+def bmuf_update_rows(
+    stack: jnp.ndarray,
+    mean: jnp.ndarray,
+    w_global: jnp.ndarray,
+    velocity: jnp.ndarray,
+    rows: jnp.ndarray,
+    alpha: float,
+    *,
+    eta: float = 1.0,
+    block_momentum: float = 0.0,
+    nesterov: bool = False,
+    scale: float = 1.0,
+    block: int = 256,
+    interpret: bool = False,
+):
+    """One-launch BMUF landing restricted to the LIVE rows.
+
+    stack: (R, n, 128); mean, w_global, velocity: (n, 128) fp32;
+    rows: (A,) int32 active replica ids. Dead rows are never fetched or
+    written (the in/out aliasing keeps them bit-identical).
+    Returns (new_stack, new_w_global, new_velocity).
+    """
+    R, n, lanes = stack.shape
+    assert lanes == LANE and n % block == 0, (stack.shape, block)
+    A = rows.shape[0]
+    assert A >= 1, "bmuf_update_rows needs at least one live row"
+    stack_spec = pl.BlockSpec(
+        (1, block, LANE), lambda j, i, rows_ref: (rows_ref[i], j, 0)
+    )
+    plane_spec = pl.BlockSpec((block, LANE), lambda j, i, rows_ref: (j, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block, A),
+        in_specs=[stack_spec, plane_spec, plane_spec, plane_spec],
+        out_specs=[stack_spec, plane_spec, plane_spec],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _bmuf_rows_kernel, alpha=alpha, eta=eta,
+            block_momentum=block_momentum, nesterov=nesterov, scale=scale,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(stack.shape, stack.dtype),
+            jax.ShapeDtypeStruct(w_global.shape, jnp.float32),
+            jax.ShapeDtypeStruct(velocity.shape, jnp.float32),
+        ],
+        # operand order incl. scalar prefetch: (rows, stack, mean, wg, vel)
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(rows, stack, mean, w_global, velocity)

@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.backend import resolve_interpret
-from repro.kernels.bmuf_update.bmuf_update import bmuf_update
-from repro.kernels.bmuf_update.ref import bmuf_update_ref
+from repro.kernels.bmuf_update.bmuf_update import bmuf_update, bmuf_update_rows
+from repro.kernels.bmuf_update.ref import bmuf_update_ref, bmuf_update_rows_ref
 
 BLOCK = 256
 
@@ -34,3 +34,26 @@ def bmuf_sync_op(stack: jnp.ndarray, mean: jnp.ndarray, w_global: jnp.ndarray,
     return bmuf_update_ref(stack, mean, w_global, velocity, alpha, eta=eta,
                            block_momentum=block_momentum, nesterov=nesterov,
                            scale=scale)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 2, 3), static_argnames=(
+    "alpha", "eta", "block_momentum", "nesterov", "scale",
+    "use_pallas", "interpret", "block"))
+def bmuf_sync_rows_op(stack: jnp.ndarray, mean: jnp.ndarray,
+                      w_global: jnp.ndarray, velocity: jnp.ndarray,
+                      rows: jnp.ndarray, alpha: float, *, eta: float = 1.0,
+                      block_momentum: float = 0.0, nesterov: bool = False,
+                      scale: float = 1.0, use_pallas: bool = True,
+                      interpret: Optional[bool] = None, block: int = BLOCK,
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused Algorithm-4 landing restricted to the LIVE rows (elastic
+    membership): dead slots move zero HBM bytes and stay bit-identical.
+    Retraces per distinct live count only."""
+    if use_pallas:
+        return bmuf_update_rows(stack, mean, w_global, velocity, rows, alpha,
+                                eta=eta, block_momentum=block_momentum,
+                                nesterov=nesterov, scale=scale, block=block,
+                                interpret=resolve_interpret(interpret))
+    return bmuf_update_rows_ref(stack, mean, w_global, velocity, rows, alpha,
+                                eta=eta, block_momentum=block_momentum,
+                                nesterov=nesterov, scale=scale)

@@ -12,3 +12,17 @@ def bmuf_update_ref(stack, mean, w_global, velocity, alpha, *,
     wi = stack.astype(jnp.float32)
     new_stack = ((1.0 - alpha) * wi + alpha * look[None]).astype(stack.dtype)
     return new_stack, wg, vel
+
+
+def bmuf_update_rows_ref(stack, mean, w_global, velocity, rows, alpha, *,
+                         eta=1.0, block_momentum=0.0, nesterov=False,
+                         scale=1.0):
+    """Elastic-membership landing: the global step is unchanged, the elastic
+    pull-back touches only the live ``rows``."""
+    desc = mean.astype(jnp.float32) - w_global
+    vel = block_momentum * velocity + eta * scale * desc
+    wg = w_global + vel
+    look = wg + block_momentum * vel if nesterov else wg
+    sub = stack[rows].astype(jnp.float32)
+    new = ((1.0 - alpha) * sub + alpha * look[None]).astype(stack.dtype)
+    return stack.at[rows].set(new), wg, vel

@@ -16,6 +16,14 @@ Two kernels over flat replica space (core/flatspace.py):
   PS already moved by replica i), costing one HBM read + one write per
   block instead of one per replica. Stack and PS are aliased in/out, so
   un-fired rows keep their buffer contents and the launch updates in place.
+
+Elastic membership (DESIGN.md §8): the fired-ids design IS the active-mask
+mechanism — the host intersects fired ∩ membership.active (core/algorithms
+``EASGD.launch_snapshot_flat`` / ``land_flat``), so a dead slot's id simply
+never appears in ``fired``: zero HBM traffic, bit-identical rows, and the
+(F, n, 128) snapshot carries its own row ids so a slot that dies while the
+sync is in flight is dropped at landing without breaking positional
+alignment.
 """
 from __future__ import annotations
 

@@ -20,6 +20,14 @@ Two kernels:
 * ``gossip_pair_update`` — one symmetric pair exchange over two (n, 128)
   planes (the ThreadedShadowRunner's shadow-thread primitive): both mixes
   stream through VMEM in a single pass.
+
+Elastic membership (DESIGN.md §8): the participant-rows design IS the
+active-mask mechanism — the host draws the rotating matching over
+``membership.active_ids()`` only (core/algorithms
+``_ring_partner_active_np``), so a dead slot's row never enters ``land`` or
+the snapshot gather: zero HBM traffic. A slot that dies mid-flight is
+filtered out of ``land`` at landing; its surviving partner still lands from
+the snapshot mix gathered at launch.
 """
 from __future__ import annotations
 

@@ -15,6 +15,13 @@ Flat MA splits along the paper's launch/landing boundary instead:
 * ``ma_update`` (landing) — one grid pass applying the elastic pull-back:
   the mean plane stays VMEM-resident per block while every replica streams
   by once — read R*N + N, write R*N.
+
+Elastic membership (DESIGN.md §8): ``replica_mean_rows`` / ``ma_update_rows``
+are the active-mask variants. The live row ids arrive via scalar prefetch
+(PrefetchScalarGridSpec) and drive the stack block index maps, so a dead slot
+is never fetched and never written — zero HBM traffic — and the mean divides
+by the LIVE count. The landing aliases the stack in/out, so dead rows keep
+their buffer contents bit-identical.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.flatspace import LANE
 
@@ -57,6 +65,91 @@ def replica_mean(stack: jnp.ndarray, *, block: int = 256,
         out_shape=jax.ShapeDtypeStruct((n, LANE), jnp.float32),
         interpret=interpret,
     )(stack)
+
+
+def _mean_rows_kernel(rows_ref, stack_ref, out_ref):
+    del rows_ref  # consumed by the index maps
+    i = pl.program_id(1)
+    A = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += stack_ref[0].astype(jnp.float32)
+
+    @pl.when(i == A - 1)
+    def _():
+        out_ref[...] *= 1.0 / A
+
+
+def replica_mean_rows(stack: jnp.ndarray, rows: jnp.ndarray, *,
+                      block: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """Mean of the LIVE rows of a (R, n, 128) buffer, one launch.
+
+    ``rows``: (A,) int32 active replica ids. Dead rows are never fetched
+    (their blocks are not in any index map) and the mean divides by A, the
+    live count — the elastic-membership denominator.
+    """
+    R, n, lanes = stack.shape
+    assert lanes == LANE and n % block == 0, (stack.shape, block)
+    A = rows.shape[0]
+    assert A >= 1, "replica_mean_rows needs at least one live row"
+    stack_spec = pl.BlockSpec(
+        (1, block, LANE), lambda j, i, rows_ref: (rows_ref[i], j, 0)
+    )
+    out_spec = pl.BlockSpec((block, LANE), lambda j, i, rows_ref: (j, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block, A),
+        in_specs=[stack_spec],
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        _mean_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, LANE), jnp.float32),
+        interpret=interpret,
+    )(rows, stack)
+
+
+def _ma_rows_kernel(rows_ref, stack_ref, mean_ref, out_ref, *, alpha: float):
+    del rows_ref  # consumed by the index maps
+    wi = stack_ref[0].astype(jnp.float32)
+    g = mean_ref[...]
+    out_ref[0] = ((1.0 - alpha) * wi + alpha * g).astype(out_ref.dtype)
+
+
+def ma_update_rows(stack: jnp.ndarray, mean: jnp.ndarray, rows: jnp.ndarray,
+                   alpha: float, *, block: int = 256,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Elastic pull-back of only the LIVE rows toward ``mean``, one launch.
+
+    Rows not in ``rows`` are never fetched or written; the in/out aliasing
+    keeps them bit-identical in the returned buffer.
+    """
+    R, n, lanes = stack.shape
+    assert lanes == LANE and n % block == 0, (stack.shape, block)
+    A = rows.shape[0]
+    assert A >= 1, "ma_update_rows needs at least one live row"
+    stack_spec = pl.BlockSpec(
+        (1, block, LANE), lambda j, i, rows_ref: (rows_ref[i], j, 0)
+    )
+    mean_spec = pl.BlockSpec((block, LANE), lambda j, i, rows_ref: (j, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block, A),
+        in_specs=[stack_spec, mean_spec],
+        out_specs=stack_spec,
+    )
+    return pl.pallas_call(
+        functools.partial(_ma_rows_kernel, alpha=alpha),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(stack.shape, stack.dtype),
+        # operand order incl. scalar prefetch: (rows, stack, mean)
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(rows, stack, mean)
 
 
 def _ma_kernel(stack_ref, mean_ref, out_ref, *, alpha: float):

@@ -13,8 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.backend import resolve_interpret
-from repro.kernels.ma_update.ma_update import ma_update, replica_mean
-from repro.kernels.ma_update.ref import ma_update_ref, replica_mean_ref
+from repro.kernels.ma_update.ma_update import (
+    ma_update, ma_update_rows, replica_mean, replica_mean_rows)
+from repro.kernels.ma_update.ref import (
+    ma_update_ref, ma_update_rows_ref, replica_mean_ref,
+    replica_mean_rows_ref)
 
 BLOCK = 256
 
@@ -40,3 +43,32 @@ def ma_sync_op(stack: jnp.ndarray, mean: jnp.ndarray, alpha: float, *,
         return ma_update(stack, mean, alpha, block=block,
                          interpret=resolve_interpret(interpret))
     return ma_update_ref(stack, mean, alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "block"))
+def replica_mean_rows_op(stack: jnp.ndarray, rows: jnp.ndarray, *,
+                         use_pallas: bool = True,
+                         interpret: Optional[bool] = None,
+                         block: int = BLOCK) -> jnp.ndarray:
+    """Mean of only the LIVE rows of a (R, n, 128) buffer (elastic
+    membership): dead slots cost zero HBM traffic and the mean divides by
+    the live count. Retraces per distinct live count only."""
+    if use_pallas:
+        return replica_mean_rows(stack, rows, block=block,
+                                 interpret=resolve_interpret(interpret))
+    return replica_mean_rows_ref(stack, rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("alpha", "use_pallas", "interpret", "block"))
+def ma_sync_rows_op(stack: jnp.ndarray, mean: jnp.ndarray, rows: jnp.ndarray,
+                    alpha: float, *, use_pallas: bool = True,
+                    interpret: Optional[bool] = None,
+                    block: int = BLOCK) -> jnp.ndarray:
+    """Pull only the LIVE rows of a (R, n, 128) buffer toward ``mean``.
+    ``stack`` is donated: the landing is in place; dead rows stay
+    bit-identical and are never streamed."""
+    if use_pallas:
+        return ma_update_rows(stack, mean, rows, alpha, block=block,
+                              interpret=resolve_interpret(interpret))
+    return ma_update_rows_ref(stack, mean, rows, alpha)

@@ -11,3 +11,16 @@ def ma_update_ref(stack: jnp.ndarray, mean: jnp.ndarray, alpha: float) -> jnp.nd
     wi = stack.astype(jnp.float32)
     out = (1.0 - alpha) * wi + alpha * mean[None].astype(jnp.float32)
     return out.astype(stack.dtype)
+
+
+def replica_mean_rows_ref(stack: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Mean over the live rows only — the elastic-membership denominator."""
+    return jnp.mean(stack[rows].astype(jnp.float32), axis=0)
+
+
+def ma_update_rows_ref(stack: jnp.ndarray, mean: jnp.ndarray,
+                       rows: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """Pull only the live rows toward ``mean``; dead rows are untouched."""
+    sub = stack[rows].astype(jnp.float32)
+    new = (1.0 - alpha) * sub + alpha * mean[None].astype(jnp.float32)
+    return stack.at[rows].set(new.astype(stack.dtype))

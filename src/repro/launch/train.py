@@ -11,6 +11,10 @@ Two entry modes:
 Examples:
   PYTHONPATH=src python -m repro.launch.train dlrm --algo easgd --mode shadow \
       --trainers 4 --threads 4 --iters 300
+  PYTHONPATH=src python -m repro.launch.train dlrm --threaded --crash-at 2:50 \
+      --straggler 1:0.02 --iters 200          # fault-injection harness
+  PYTHONPATH=src python -m repro.launch.train dlrm --membership-schedule \
+      "fail@60:2,join@100:2" --iters 200      # deterministic elasticity
   PYTHONPATH=src python -m repro.launch.train lm --arch minicpm-2b --replicas 2 \
       --iters 100 --sync-gap 5
 """
@@ -29,9 +33,30 @@ from repro.configs import dlrm_ctr
 from repro.configs.base import ARCH_IDS, get_config, reduced
 from repro.core import algorithms, spmd
 from repro.core.elp import elp
+from repro.core.membership import FaultSpec
 from repro.core.runners import HogwildSim, ThreadedShadowRunner
 from repro.core.sync import SyncConfig
-from repro import checkpoint as ckpt
+
+
+def _parse_slot_map(spec, cast):
+    """"slot:value,slot:value" -> {int: cast}."""
+    out = {}
+    if spec:
+        for part in spec.split(","):
+            slot, val = part.split(":")
+            out[int(slot)] = cast(val)
+    return out
+
+
+def _parse_schedule(spec):
+    """"kind@iter:slot,..." -> [(iter, kind, slot)] (e.g. "fail@60:2")."""
+    events = []
+    if spec:
+        for part in spec.split(","):
+            kind, rest = part.split("@")
+            it, slot = rest.split(":")
+            events.append((int(it), kind, int(slot)))
+    return events or None
 
 
 def run_dlrm(args) -> dict:
@@ -43,30 +68,43 @@ def run_dlrm(args) -> dict:
           f"{cfg.n_embedding_rows:,} embedding rows; "
           f"ELP = {elp(args.batch_size, args.threads, args.trainers):,}")
     if args.threaded:
+        fault = FaultSpec(
+            straggler_sleep_s=_parse_slot_map(args.straggler, float),
+            crash_at=_parse_slot_map(args.crash_at, int),
+            join_at=_parse_slot_map(args.join_at, int))
         runner = ThreadedShadowRunner(
             cfg, sync_cfg, n_trainers=args.trainers, batch_size=args.batch_size,
-            optimizer=opt, seed=args.seed, sync_sleep_s=args.sync_sleep)
+            optimizer=opt, seed=args.seed, sync_sleep_s=args.sync_sleep,
+            fault_spec=fault)
         out = runner.run(args.iters)
-        print(f"EPS={out['eps']:.0f}  avg_sync_gap={out['avg_sync_gap']:.2f} "
+        print(f"EPS={out['eps']:.0f} (window {out['eps_window']:.0f})  "
+              f"avg_sync_gap={out['avg_sync_gap']:.2f} "
+              f"iters/trainer={out['iter_count']} "
               f"final train loss per trainer={[round(l,4) for l in out['train_loss']]}")
-        return {k: v for k, v in out.items() if k not in ("w", "emb_state")}
+        if out["membership_events"]:
+            print("membership:", [(e.kind, e.slot) for e in out["membership_events"]])
+        return {k: v for k, v in out.items()
+                if k not in ("w", "emb_state", "membership_events")}
     sim = HogwildSim(cfg, sync_cfg, n_trainers=args.trainers, n_threads=args.threads,
-                     batch_size=args.batch_size, optimizer=opt, seed=args.seed)
+                     batch_size=args.batch_size, optimizer=opt, seed=args.seed,
+                     schedule=_parse_schedule(args.membership_schedule))
+    st0 = None
+    if args.restore:
+        st0 = sim.load_state(args.restore)
+        print(f"elastic restore <- {args.restore} (step {st0.step}, "
+              f"now R={sim.R})")
     t0 = time.perf_counter()
-    out = sim.run(args.iters, log_every=args.log_every)
+    out = sim.run(args.iters, log_every=args.log_every, state=st0)
     wall = time.perf_counter() - t0
     ev = sim.evaluate(out["state"], n_batches=args.eval_batches)
-    examples = args.iters * args.trainers * args.threads * args.batch_size
+    examples = out["examples"]
     print(f"train loss {np.mean(out['train_loss'][:10]):.5f} -> "
           f"{np.mean(out['train_loss'][-10:]):.5f}; eval {ev:.5f}; "
           f"avg_sync_gap {out['avg_sync_gap']:.2f}; EPS(sim wall) {examples/wall:.0f}")
     if args.save:
-        st = out["state"]
-        # engine-independent checkpoint: dense replicas as the named pytree,
-        # not the flat engine's packed buffer
-        ckpt.save(args.save, {"w": sim.dense_stack(st), "opt": st.opt_stack,
-                              "emb": st.emb_state},
-                  metadata={"step": st.step, "algo": args.algo})
+        # engine-independent elastic checkpoint: dense replicas as the named
+        # pytree (not the flat engine's packed buffer) + opaque algo state
+        sim.save_state(args.save, out["state"])
         print(f"checkpoint -> {args.save}")
     return {"final_train": float(np.mean(out["train_loss"][-10:])), "eval": ev,
             "avg_sync_gap": out["avg_sync_gap"]}
@@ -134,6 +172,16 @@ def main():
     d.add_argument("--log-every", type=int, default=50)
     d.add_argument("--seed", type=int, default=0)
     d.add_argument("--save", default=None)
+    d.add_argument("--restore", default=None,
+                   help="elastic restore: checkpoint R may differ from --trainers")
+    d.add_argument("--membership-schedule", default=None,
+                   help='deterministic elasticity (sim): "fail@60:2,join@100:2"')
+    d.add_argument("--crash-at", default=None,
+                   help='threaded fault injection: "slot:iter,..."')
+    d.add_argument("--join-at", default=None,
+                   help='threaded mid-run join: "slot:iter,..."')
+    d.add_argument("--straggler", default=None,
+                   help='threaded straggler sleep seconds: "slot:0.02,..."')
 
     l = sub.add_parser("lm")
     l.add_argument("--arch", choices=list(ARCH_IDS), default="minicpm-2b")

@@ -1,0 +1,552 @@
+"""Elastic replica membership (DESIGN.md §8): the membership table, the
+windowed EPS meter, active-mask kernel semantics, flat-vs-pytree parity under
+membership schedules, join bootstrap/convergence, elastic checkpointing, and
+the ThreadedShadowRunner fault-injection harness."""
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.core import algorithms
+from repro.core import sync as S
+from repro.core.elp import EPSMeter
+from repro.core.flatspace import LANE
+from repro.core.membership import (
+    FaultSpec, Membership, MembershipSchedule)
+from repro.core.runners import HogwildSim, ThreadedShadowRunner
+from repro.core.sync import SyncConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = dlrm_ctr.tiny()
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Membership table
+# ---------------------------------------------------------------------------
+
+class TestMembershipTable:
+    def test_initial_state_and_capacity(self):
+        m = Membership(3, R_max=5)
+        np.testing.assert_array_equal(m.active_mask(),
+                                      [True, True, True, False, False])
+        assert m.n_active == 3 and m.R_max == 5 and m.epoch == 0
+        assert m.status(0) == "active" and m.status(4) == "dead"
+
+    def test_join_lifecycle_and_epoch(self):
+        m = Membership(2, R_max=3)
+        m.join(2)
+        assert m.status(2) == "joining"
+        # a joining slot is NOT yet in the active mask (bootstrap in flight)
+        np.testing.assert_array_equal(m.active_mask(), [True, True, False])
+        m.activate(2)
+        assert m.status(2) == "active" and m.n_active == 3
+        assert m.epoch == 2
+        assert [(e.kind, e.slot) for e in m.events] == [("join", 2),
+                                                        ("activate", 2)]
+
+    def test_fail_and_leave(self):
+        m = Membership(3)
+        m.fail(1)
+        assert m.status(1) == "dead" and m.n_active == 2
+        m.leave(2)
+        assert m.n_active == 1
+        np.testing.assert_array_equal(m.active_ids(), [0])
+
+    def test_invalid_transitions_raise(self):
+        m = Membership(2, R_max=3)
+        with pytest.raises(ValueError, match="cannot join"):
+            m.join(0)  # already active
+        with pytest.raises(ValueError, match="cannot activate"):
+            m.activate(2)  # dead, not joining
+        with pytest.raises(ValueError, match="cannot fail"):
+            m.fail(2)  # already dead
+        with pytest.raises(ValueError, match="out of range"):
+            m.fail(7)
+
+    def test_from_mask_arbitrary_pattern(self):
+        m = Membership.from_mask([True, False, True, False])
+        np.testing.assert_array_equal(m.active_ids(), [0, 2])
+        with pytest.raises(ValueError, match="at least one"):
+            Membership.from_mask([False, False])
+
+    def test_mask_is_a_copy(self):
+        m = Membership(2)
+        a = m.active_mask()
+        a[0] = False
+        assert m.n_active == 2
+
+    def test_schedule_validation_and_lookup(self):
+        s = MembershipSchedule([(6, "fail", 2), (10, "join", 2), (6, "leave", 0)])
+        assert s.events_at(6) == [("fail", 2), ("leave", 0)]
+        assert s.events_at(7) == []
+        assert s.max_slot() == 2
+        with pytest.raises(ValueError, match="unknown schedule event"):
+            MembershipSchedule([(1, "explode", 0)])
+
+    def test_fault_spec_validation(self):
+        FaultSpec(crash_at={1: 5}, straggler_sleep_s={0: 0.1}).validate(3)
+        with pytest.raises(ValueError, match="out of range"):
+            FaultSpec(crash_at={4: 5}).validate(3)
+
+
+# ---------------------------------------------------------------------------
+# EPSMeter: a real sliding window (satellite — the old meter was cumulative)
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestEPSMeter:
+    def test_steady_rate(self):
+        clk = FakeClock()
+        m = EPSMeter(window_s=5.0, clock=clk)
+        for _ in range(10):
+            clk.t += 0.5
+            m.add(50)  # 100 eps
+        assert m.eps == pytest.approx(100.0)
+
+    def test_old_buckets_evicted(self):
+        """A cumulative meter never forgets; the window must. After a burst
+        followed by silence, the rate decays to zero."""
+        clk = FakeClock()
+        m = EPSMeter(window_s=2.0, clock=clk)
+        clk.t += 0.1
+        m.add(1000)
+        clk.t += 10.0
+        assert m.eps == 0.0
+
+    def test_rate_recovers_to_survivor_pace(self):
+        """The elasticity use case: 2 trainers at 100 eps each, one dies;
+        the windowed rate converges to 100, not the diluted cumulative."""
+        clk = FakeClock()
+        m = EPSMeter(window_s=2.0, clock=clk)
+        for _ in range(20):  # both alive: 200 eps
+            clk.t += 0.1
+            m.add(10)
+            m.add(10)
+        assert m.eps == pytest.approx(200.0, rel=0.1)
+        for _ in range(40):  # one crashed: 100 eps
+            clk.t += 0.1
+            m.add(10)
+        assert m.eps == pytest.approx(100.0, rel=0.1)
+
+    def test_partial_window_uses_elapsed_time(self):
+        clk = FakeClock()
+        m = EPSMeter(window_s=10.0, clock=clk)
+        clk.t += 1.0
+        m.add(100)
+        assert m.eps == pytest.approx(100.0)
+
+    def test_zero_elapsed_is_zero(self):
+        m = EPSMeter(window_s=5.0, clock=FakeClock())
+        assert m.eps == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Active-mask (rows) kernels vs oracles: dead slots bit-identical, live mean
+# ---------------------------------------------------------------------------
+
+class TestRowsKernels:
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    @pytest.mark.parametrize("rows", [(0, 2, 4), (1,), (0, 1, 2, 3, 4)])
+    def test_masked_mean_and_pullback(self, rows, use_pallas):
+        from repro.kernels.ma_update.ops import (
+            ma_sync_rows_op, replica_mean_rows_op)
+
+        key = jax.random.PRNGKey(0)
+        stack = jax.random.normal(key, (5, 256, LANE), jnp.float32)
+        rows_arr = jnp.asarray(rows, jnp.int32)
+        mean = replica_mean_rows_op(stack, rows_arr, use_pallas=use_pallas)
+        # the mean divides by the LIVE count, not R
+        np.testing.assert_allclose(
+            np.asarray(mean), np.asarray(jnp.mean(stack[rows_arr], axis=0)),
+            **TOL)
+        new = ma_sync_rows_op(stack.copy(), mean, rows_arr, 0.4,
+                              use_pallas=use_pallas)
+        oracle = S.ma_round(
+            {"w": stack}, 0.4,
+            active=jnp.asarray([i in rows for i in range(5)]))
+        np.testing.assert_allclose(np.asarray(new), np.asarray(oracle["w"]),
+                                   **TOL)
+        for i in range(5):
+            if i not in rows:  # dead slots bit-identical
+                assert np.array_equal(np.asarray(new[i]), np.asarray(stack[i]))
+
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    def test_bmuf_rows_vs_masked_oracle(self, use_pallas):
+        from repro.kernels.bmuf_update.ops import bmuf_sync_rows_op
+        from repro.kernels.ma_update.ops import replica_mean_rows_op
+
+        key = jax.random.PRNGKey(3)
+        stack = jax.random.normal(key, (4, 256, LANE), jnp.float32)
+        active = jnp.asarray([True, False, True, True])
+        rows = jnp.asarray([0, 2, 3], jnp.int32)
+        wg = jnp.mean(stack, axis=0)
+        vel = jnp.zeros_like(wg)
+        mean = replica_mean_rows_op(stack, rows, use_pallas=use_pallas)
+        new, nwg, nvel = bmuf_sync_rows_op(
+            stack.copy(), mean, wg.copy(), vel.copy(), rows, 0.5, eta=0.9,
+            block_momentum=0.8, nesterov=True, use_pallas=use_pallas)
+        o_stack, o_state = S.bmuf_round(
+            {"w": stack}, S.BMUFState(w_global={"w": wg}, velocity={"w": vel}),
+            0.5, eta=0.9, block_momentum=0.8, nesterov=True, active=active)
+        np.testing.assert_allclose(np.asarray(new), np.asarray(o_stack["w"]), **TOL)
+        np.testing.assert_allclose(np.asarray(nwg),
+                                   np.asarray(o_state.w_global["w"]), **TOL)
+        np.testing.assert_allclose(np.asarray(nvel),
+                                   np.asarray(o_state.velocity["w"]), **TOL)
+        assert np.array_equal(np.asarray(new[1]), np.asarray(stack[1]))
+
+    def test_gossip_ring_drawn_over_active_only(self):
+        active = np.asarray([True, False, True, True, False, True])
+        partner = algorithms._ring_partner_active_np(active, 0)
+        # dead slots are their own partner; live partners are live
+        for i in range(6):
+            if not active[i]:
+                assert partner[i] == i
+            else:
+                assert active[partner[i]]
+        # involution over the live subset
+        for i in np.flatnonzero(active):
+            assert partner[partner[i]] == i
+        rows, _, pp = algorithms._gossip_participants_np(
+            np.asarray([False, False, True, False, False, False]), 6, 0,
+            active=active)
+        assert all(active[r] for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# Flat-vs-pytree parity under a NON-TRIVIAL membership schedule, every algo
+# ---------------------------------------------------------------------------
+
+# fail slot 1, re-join it, then grow capacity with a brand-new slot 3 —
+# exercises masked training, masked landing, live-count means, join
+# bootstrap, and a sync in flight across a membership change (delay=1).
+SCHED = ((5, "fail", 1), (9, "join", 1), (11, "join", 3))
+
+
+@functools.lru_cache(maxsize=None)
+def _run_elastic(algo, engine, mode="shadow", iters=16):
+    sim = HogwildSim(
+        CFG, SyncConfig(algo=algo, mode=mode, gap=4, alpha=0.5, delay=1,
+                        engine=engine),
+        n_trainers=3, n_threads=2, batch_size=32,
+        optimizer=optim.adagrad(0.02), seed=0, schedule=list(SCHED))
+    out = sim.run(iters)
+    return (tuple(out["train_loss"]), out["sync_count"],
+            out["replica_losses"], sim, out)
+
+
+@pytest.mark.parametrize("algo", algorithms.names())
+def test_elastic_flat_matches_pytree_shadow(algo):
+    loss_f, n_f, _, _, _ = _run_elastic(algo, "flat")
+    loss_p, n_p, _, _, _ = _run_elastic(algo, "pytree")
+    assert n_f == n_p > 0
+    np.testing.assert_allclose(loss_f, loss_p, **TOL)
+
+
+@pytest.mark.parametrize("algo", algorithms.names())
+def test_elastic_flat_matches_pytree_fixed_rate(algo):
+    loss_f, _, _, _, _ = _run_elastic(algo, "flat", mode="fixed_rate")
+    loss_p, _, _, _, _ = _run_elastic(algo, "pytree", mode="fixed_rate")
+    np.testing.assert_allclose(loss_f, loss_p, **TOL)
+
+
+def test_dead_slot_frozen_while_dead():
+    """After fail(1)@5 the dead slot's replica must be bit-frozen: no
+    training update, no sync landing."""
+    sim = HogwildSim(
+        CFG, SyncConfig(algo="ma", mode="shadow", gap=4, alpha=0.5, delay=1,
+                        engine="flat"),
+        n_trainers=3, n_threads=2, batch_size=32,
+        optimizer=optim.adagrad(0.02), seed=0, schedule=[(5, "fail", 1)])
+    st = sim.init_state()
+    frozen = {}
+
+    def watch(t, _loss):
+        if t in (5, 7):  # during the dead window (fail applied at start of 5)
+            frozen[t] = (sim.membership.active_mask().copy(),
+                         np.asarray(st.w_stack[1]))
+
+    sim.run(8, state=st, on_iter=watch)
+    m5, w5 = frozen[5]
+    m7, w7 = frozen[7]
+    assert not m5[1] and not m7[1]
+    assert np.array_equal(w5, w7)  # bit-identical through the dead window
+
+
+@pytest.mark.parametrize("mode", ["shadow", "fixed_rate"])
+def test_all_dead_cohort_survives(mode):
+    """Killing every slot mid-run must not crash the masked kernels (empty
+    row sets) — training becomes a no-op, losses go nan, syncs stop."""
+    sim = HogwildSim(
+        CFG, SyncConfig(algo="ma", mode=mode, gap=2, alpha=0.5, delay=1,
+                        engine="flat"),
+        n_trainers=2, n_threads=2, batch_size=32,
+        optimizer=optim.adagrad(0.02), seed=0,
+        schedule=[(3, "fail", 0), (3, "fail", 1)])
+    out = sim.run(7)
+    assert np.isfinite(out["train_loss"][:3]).all()
+    assert np.isnan(out["train_loss"][3:]).all()
+    # dead-window iterations train nothing
+    assert out["examples"] == 3 * 2 * 2 * 32
+
+
+def test_avg_sync_gap_counts_live_iterations_only():
+    """With half the cohort dead most of the run, the gap metric must divide
+    by replica-iterations actually trained, not n_iters * R_max."""
+    sim = HogwildSim(
+        CFG, SyncConfig(algo="ma", mode="fixed_rate", gap=2, engine="flat"),
+        n_trainers=2, n_threads=1, batch_size=32,
+        optimizer=optim.adagrad(0.02), seed=0, schedule=[(2, "fail", 1)])
+    out = sim.run(10)
+    live_iters = out["examples"] // 32  # M=1, B=32
+    assert live_iters == 2 * 2 + 8 * 1
+    assert out["avg_sync_gap"] == pytest.approx(
+        live_iters / out["sync_count"])
+
+
+def test_capacity_padding_no_reallocation():
+    """Capacity R_max is allocated once; join of a spare slot must not change
+    the buffer object shape (no reallocation, no retrace)."""
+    sim = HogwildSim(
+        CFG, SyncConfig(algo="ma", engine="flat"), n_trainers=2, n_threads=2,
+        batch_size=32, optimizer=optim.adagrad(0.02), seed=0,
+        schedule=[(3, "join", 2)])
+    assert sim.R == 3  # capacity includes the scheduled spare slot
+    st = sim.init_state()
+    assert st.w_stack.shape[0] == 3
+    out = sim.run(6, state=st)
+    assert out["state"].w_stack.shape[0] == 3
+    assert sim.membership.n_active == 3
+
+
+# ---------------------------------------------------------------------------
+# Join bootstrap (on_join) + convergence of the joined replica
+# ---------------------------------------------------------------------------
+
+class TestJoinBootstrap:
+    def test_default_on_join_is_live_mean_both_engines(self):
+        algo = algorithms.get("ma")
+        sc = SyncConfig(algo="ma")
+        key = jax.random.PRNGKey(0)
+        stack = {"w": jax.random.normal(key, (4, 6, 3))}
+        active = np.asarray([True, True, False, False])
+        new, _ = algo.on_join(stack, 3, None, jnp.asarray(active), sc)
+        np.testing.assert_allclose(
+            np.asarray(new["w"][3]),
+            np.asarray(0.5 * (stack["w"][0] + stack["w"][1])), **TOL)
+        # flat engine agrees
+        from repro.core.flatspace import FlatSpace
+        fs = FlatSpace.from_tree({"w": stack["w"][0]}, block=8)
+        buf = fs.pack_stack(stack)
+        buf2, _ = algo.on_join_flat(buf, 3, None, active, sc, fs)
+        np.testing.assert_allclose(np.asarray(fs.unpack(buf2[3])["w"]),
+                                   np.asarray(new["w"][3]), **TOL)
+
+    def test_easgd_on_join_adopts_ps(self):
+        algo = algorithms.get("easgd")
+        sc = SyncConfig(algo="easgd")
+        stack = {"w": jnp.ones((3, 4))}
+        ps = {"w": jnp.full((4,), 7.0)}
+        new, _ = algo.on_join(stack, 2, ps, jnp.asarray([True, True, False]), sc)
+        np.testing.assert_allclose(np.asarray(new["w"][2]), 7.0)
+
+    @pytest.mark.parametrize("algo", ["easgd", "ma"])
+    def test_joined_replica_converges_to_cohort(self, algo):
+        """Acceptance: a mid-run join bootstraps via on_join and the joined
+        replica's loss converges to the cohort's."""
+        sim = HogwildSim(
+            CFG, SyncConfig(algo=algo, mode="shadow", gap=3, alpha=0.5,
+                            delay=1, engine="flat"),
+            n_trainers=3, n_threads=2, batch_size=64,
+            optimizer=optim.adagrad(0.02), seed=1,
+            schedule=[(10, "join", 3)])
+        out = sim.run(24)
+        rl = out["replica_losses"]  # (T, R_max)
+        # joined replica's first loss is already near the cohort (bootstrap
+        # from the live mean / PS, not from the stale init)
+        joined_first = rl[10, 3]
+        cohort_at_join = rl[10, :3].mean()
+        init_loss = rl[0, :3].mean()
+        assert abs(joined_first - cohort_at_join) < 0.5 * abs(
+            init_loss - cohort_at_join)
+        # and it tracks the cohort at the end
+        assert abs(rl[-1, 3] - rl[-1, :3].mean()) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Elastic checkpoint: save at R=4, restore and TRAIN at R=6 (and shrink)
+# ---------------------------------------------------------------------------
+
+class TestElasticCheckpointRestore:
+    def _mk(self, n, algo="easgd", engine="flat"):
+        return HogwildSim(
+            CFG, SyncConfig(algo=algo, gap=4, alpha=0.5, engine=engine),
+            n_trainers=n, n_threads=2, batch_size=32,
+            optimizer=optim.adagrad(0.02), seed=0)
+
+    @pytest.mark.parametrize("algo", ["easgd", "bmuf"])
+    def test_grow_r4_to_r6_and_train(self, tmp_path, algo):
+        path = os.path.join(tmp_path, "ck")
+        sim4 = self._mk(4, algo=algo)
+        out4 = sim4.run(8)
+        sim4.save_state(path, out4["state"])
+        sim6 = self._mk(6, algo=algo)
+        st6 = sim6.load_state(path)
+        assert st6.w_stack.shape[0] == 6
+        # restored cohort rows are bit-equal to the saved ones
+        np.testing.assert_allclose(np.asarray(st6.w_stack[:4]),
+                                   np.asarray(out4["state"].w_stack),
+                                   rtol=1e-6, atol=1e-7)
+        if algo == "easgd":
+            # new slots bootstrapped from the sync-PS copy via on_join
+            np.testing.assert_allclose(np.asarray(st6.w_stack[4]),
+                                       np.asarray(st6.algo_state),
+                                       rtol=1e-6)
+        out6 = sim6.run(6, state=st6)
+        assert all(np.isfinite(l) for l in out6["train_loss"])
+        # the grown cohort trains onward, not from scratch
+        assert out6["train_loss"][0] < out4["train_loss"][0]
+
+    def test_shrink_r4_to_r2(self, tmp_path):
+        path = os.path.join(tmp_path, "ck")
+        sim4 = self._mk(4)
+        out4 = sim4.run(6)
+        sim4.save_state(path, out4["state"])
+        sim2 = self._mk(2)
+        st2 = sim2.load_state(path)
+        assert st2.w_stack.shape[0] == 2
+        out2 = sim2.run(3, state=st2)
+        assert all(np.isfinite(l) for l in out2["train_loss"])
+
+    def test_dead_at_save_slot_is_bootstrapped_not_resurrected(self, tmp_path):
+        """A slot that was dead when the checkpoint was written holds stale
+        weights; a sim that wants it active on resume must re-bootstrap it
+        via on_join, not silently resurrect the stale row."""
+        path = os.path.join(tmp_path, "ck")
+        sim_a = HogwildSim(
+            CFG, SyncConfig(algo="easgd", gap=4, alpha=0.5, engine="flat"),
+            n_trainers=3, n_threads=2, batch_size=32,
+            optimizer=optim.adagrad(0.02), seed=0, schedule=[(2, "fail", 1)])
+        out = sim_a.run(6)
+        stale_row = np.asarray(out["state"].w_stack[1])
+        sim_a.save_state(path, out["state"])
+        sim_b = self._mk(3)  # wants all 3 slots active
+        st = sim_b.load_state(path)
+        # slot 1 re-bootstrapped from the PS (easgd's on_join), not stale
+        np.testing.assert_allclose(np.asarray(st.w_stack[1]),
+                                   np.asarray(st.algo_state), rtol=1e-6)
+        assert not np.allclose(np.asarray(st.w_stack[1]), stale_row)
+
+    def test_engine_mismatch_raises_clearly(self, tmp_path):
+        path = os.path.join(tmp_path, "ck")
+        sim_f = self._mk(3, engine="flat")
+        out = sim_f.run(3)
+        sim_f.save_state(path, out["state"])
+        sim_p = self._mk(3, engine="pytree")
+        with pytest.raises(ValueError, match="engine"):
+            sim_p.load_state(path)
+
+    def test_metadata_round_trips(self, tmp_path):
+        path = os.path.join(tmp_path, "ck")
+        sim = self._mk(3)
+        out = sim.run(4)
+        sim.save_state(path, out["state"], metadata={"note": "x"})
+        from repro import checkpoint as ckpt
+        _, meta = ckpt.restore(path, sim._state_tree(out["state"]))
+        assert meta["R"] == 3 and meta["step"] == 4 and meta["note"] == "x"
+        assert meta["algo"] == "easgd" and meta["engine"] == "flat"
+
+
+# ---------------------------------------------------------------------------
+# ThreadedShadowRunner fault injection (acceptance a)
+# ---------------------------------------------------------------------------
+
+def _threaded(mode, fault=None, iters=12, algo="easgd", **kw):
+    r = ThreadedShadowRunner(
+        CFG, SyncConfig(algo=algo, alpha=0.5, mode=mode, gap=3),
+        n_trainers=3, batch_size=32, optimizer=optim.adagrad(0.02),
+        sync_sleep_s=0.01, fault_spec=fault, **kw)
+    return r.run(iters)
+
+
+class TestThreadedFaults:
+    @pytest.fixture(scope="class", autouse=True)
+    def warmup(self):
+        # compile both modes' programs so timing comparisons are clean
+        _threaded("shadow", iters=2)
+        _threaded("fixed_rate", iters=2)
+
+    def test_crash_completes_and_survivors_keep_pace(self):
+        """One crashed trainer: the run completes, survivors finish all their
+        iterations, and their EPS stays within 20% of the no-fault run."""
+        base = _threaded("shadow", iters=12)
+        out = _threaded("shadow", FaultSpec(crash_at={2: 3}), iters=12)
+        assert out["iter_count"] == [12, 12, 3]
+        assert [e.kind for e in out["membership_events"]] == ["fail"]
+        surv = np.mean([out["per_trainer_eps"][i] for i in (0, 1)])
+        ref = np.mean([base["per_trainer_eps"][i] for i in (0, 1)])
+        assert surv >= 0.8 * ref, (surv, ref)
+        assert all(np.isfinite(out["train_loss"][i]) for i in (0, 1))
+
+    def test_fixed_rate_degrades_to_straggler_pace(self):
+        """The foreground baseline blocks at every sync point, so one
+        straggler drags the WHOLE cohort; background shadow sync leaves the
+        healthy trainers at full speed."""
+        # the sleep must dominate per-iteration compute on a loaded CI box,
+        # or CPU contention blurs the shadow-vs-foreground contrast
+        sleep = 0.12
+        fault = FaultSpec(straggler_sleep_s={2: sleep})
+        iters = 9
+        sh = _threaded("shadow", fault, iters=iters)
+        fr = _threaded("fixed_rate", fault, iters=iters)
+        surv_sh = np.mean([sh["per_trainer_eps"][i] for i in (0, 1)])
+        surv_fr = np.mean([fr["per_trainer_eps"][i] for i in (0, 1)])
+        # fixed-rate survivors are held near the straggler's pace
+        assert surv_fr < 0.6 * surv_sh, (surv_fr, surv_sh)
+        # the straggler's sleep is a hard floor on the fixed-rate wall
+        assert fr["wall_s"] >= iters * sleep
+
+    def test_threaded_join_bootstraps_and_trains(self):
+        out = _threaded("shadow", FaultSpec(join_at={2: 4}), iters=10)
+        kinds = [(e.kind, e.slot) for e in out["membership_events"]]
+        assert ("join", 2) in kinds and ("activate", 2) in kinds
+        assert out["iter_count"][2] > 0
+        assert np.isfinite(out["train_loss"][2])
+
+    def test_fixed_rate_crash_does_not_deadlock(self):
+        out = _threaded("fixed_rate", FaultSpec(crash_at={1: 4}), iters=9)
+        assert out["iter_count"][0] == 9 and out["iter_count"][2] == 9
+        assert out["iter_count"][1] == 4
+        assert out["sync_count"] > 0
+
+    def test_join_after_whole_cohort_crashed_does_not_hang(self):
+        """If every initially-active trainer crashes before a join_at
+        target, the joiner must bail out instead of spinning forever on a
+        frozen progress counter (run() would never return)."""
+        out = _threaded("shadow",
+                        FaultSpec(crash_at={0: 2, 1: 2}, join_at={2: 50}),
+                        iters=8)
+        assert out["iter_count"] == [2, 2, 0]
+        assert [e.kind for e in out["membership_events"]] == ["fail", "fail"]
+
+    def test_sync_count_consistent_under_threads(self):
+        """The counter satellite: with the lock in place the total must equal
+        the sum of per-round increments (no lost updates observable as a
+        negative or absurd value)."""
+        out = _threaded("shadow", iters=8)
+        assert 0 < out["sync_count"] < 10_000_000
+        assert out["avg_sync_gap"] > 0

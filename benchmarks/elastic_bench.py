@@ -8,20 +8,42 @@ baseline failure mode: every trainer blocks at the sync point, so one
 straggler drags the whole cohort to its speed and a crash only "helps"
 because the barrier shrinks.
 
-Three scenarios per mode on the real-thread runner (tiny DLRM, R=3):
+Four scenarios per mode on the real-thread runner (tiny DLRM, R=3):
 
-* ``no_fault``   — healthy cohort (the reference pace).
-* ``straggler``  — trainer R-1 sleeps an extra ``STRAGGLER_SLEEP_S`` per
-  iteration (a degraded host; NestPipe's observation that at scale SOME
-  worker is always degraded).
-* ``crash``      — trainer R-1 dies a third of the way in; the run must
+* ``no_fault``       — healthy cohort (the reference pace).
+* ``straggler``      — trainer R-1 sleeps an extra ``STRAGGLER_SLEEP_S`` per
+  iteration for the WHOLE run (a degraded host; NestPipe's observation that
+  at scale some worker is always degraded). Controller off: in fixed_rate
+  mode the whole cohort is dragged to the straggler's pace.
+* ``crash``          — trainer R-1 dies a third of the way in; the run must
   complete and the survivors' windowed EPS should hold.
+* ``straggler_auto`` — the SAME degradation, but transient
+  (``straggler_until``) and with the closed-loop controller on
+  (core/scheduler.py, DESIGN.md §9): per-slot busy-clock EPS meters feed a
+  ``StragglerPolicy`` that demotes the straggler out of the sync set (and
+  the fixed_rate barrier) once its pace stays below the floor for a full
+  window, then re-admits it through the ordinary join bootstrap after the
+  degradation ends. The healthy cohort's pace recovers toward the no-fault
+  reference — the number CI floors on (scripts/check_bench_floors.py).
 
-Per scenario we record total EPS, the trailing-window EPS (the survivors'
-pace after a crash — ``EPSMeter``), per-trainer EPS, and wall time.
+``straggler_auto`` self-calibrates its iteration count from the measured
+no-fault pace (``AUTO_SPAN_S`` seconds of healthy work), so the controller's
+fixed detection latency (meter warm-up + policy window) is small relative to
+the run on fast and slow boxes alike — the retention floor means the same
+thing everywhere.
+
+Per scenario we record total EPS, the trailing-window EPS, per-trainer EPS
+(wall and busy-clock), healthy-cohort EPS (faulted slot excluded) and its
+retention, wall time, and — for ``straggler_auto`` — the membership event
+log with demotion provenance and wall latencies. Retentions are computed
+against ``no_fault_ref`` — a no-fault run at the SAME calibrated span — so
+the denominator is never a sub-second sample whose scheduler noise could
+flip a CI floor.
 
 `--json` writes BENCH_elastic.json so the elasticity trajectory is recorded
-per PR; `--tiny` shrinks iterations for the CI smoke.
+per PR; `--tiny` shrinks the legacy scenarios for the CI smoke (the
+closed-loop scenario keeps its calibrated length — the controller needs
+real wall time).
 
   PYTHONPATH=src python -m benchmarks.elastic_bench [--json] [--tiny]
 """
@@ -34,79 +56,155 @@ from typing import Dict, List, Optional, Tuple
 R = 3  # trainers (slot R-1 takes the fault)
 ALGO = "easgd"
 GAP = 3
-STRAGGLER_SLEEP_S = 0.03
 BATCH = 64
+# Sleep-dominated degradation: the straggler's pace must be visibly below
+# the cohort's even on a slow, loaded CI box where per-iteration compute is
+# large (compute-bound degradation blurs the contrast).
+STRAGGLER_SLEEP_S = 0.25
+
+# Closed-loop profile (straggler_auto).
+AUTO_SPAN_S = 10.0       # target seconds of healthy work (calibrates iters)
+AUTO_ITERS_MIN, AUTO_ITERS_MAX = 40, 1000
+AUTO_UNTIL = 8           # straggler sleeps for its first 8 local iterations
+AUTO_EPS_WINDOW_S = 0.5  # per-slot busy-clock meter window
+AUTO_POLICY = dict(eps_floor_frac=0.5, readmit_frac=0.75,
+                   window_s=0.25, probation_s=0.3, min_active=2)
 
 
-def _scenarios(iters: int):
+def _fault_scenarios(iters: int):
     from repro.core.membership import FaultSpec
 
     return {
-        "no_fault": None,
-        "straggler": FaultSpec(straggler_sleep_s={R - 1: STRAGGLER_SLEEP_S}),
-        "crash": FaultSpec(crash_at={R - 1: max(iters // 3, 1)}),
+        "no_fault": (iters, None, False),
+        "straggler": (iters, FaultSpec(
+            straggler_sleep_s={R - 1: STRAGGLER_SLEEP_S}), False),
+        "crash": (iters, FaultSpec(
+            crash_at={R - 1: max(iters // 3, 1)}), False),
     }
+
+
+def _healthy_eps(out, fault) -> float:
+    """Mean per-trainer wall EPS over the slots the fault spec leaves
+    untouched — the cohort pace the sync mode is responsible for."""
+    faulted = set()
+    if fault is not None:
+        faulted = (set(fault.crash_at) | set(fault.straggler_sleep_s)
+                   | set(fault.join_at))
+    healthy = [out["per_trainer_eps"][i] for i in range(R) if i not in faulted]
+    return sum(healthy) / max(len(healthy), 1)
 
 
 def bench_elastic(json_path: Optional[str] = None,
                   tiny: bool = False) -> List[Tuple[str, float, str]]:
-    import jax
-
     from repro import optim
     from repro.configs import dlrm_ctr
+    from repro.core.membership import FaultSpec
     from repro.core.runners import ThreadedShadowRunner
+    from repro.core.scheduler import PolicyConfig, StragglerPolicy
     from repro.core.sync import SyncConfig
 
     cfg = dlrm_ctr.tiny()
-    iters = 8 if tiny else 40
+    iters = 24 if tiny else 40
     print(f"\n== Elastic EPS: shadow vs fixed_rate under faults "
           f"(R={R}, {iters} iters/trainer, algo={ALGO}, "
           f"straggler +{STRAGGLER_SLEEP_S * 1e3:.0f} ms/iter) ==")
-    # warm the jit caches so the first measured scenario does not pay
-    # compilation (both modes compile distinct programs)
-    for mode in ("shadow", "fixed_rate"):
-        ThreadedShadowRunner(
+
+    def make_runner(mode, fault=None, policy=None, eps_window_s=2.0):
+        return ThreadedShadowRunner(
             cfg, SyncConfig(algo=ALGO, mode=mode, gap=GAP, alpha=0.5),
             n_trainers=R, batch_size=BATCH, optimizer=optim.adagrad(0.02),
-            sync_sleep_s=0.01).run(2)
+            sync_sleep_s=0.01, fault_spec=fault, eps_window_s=eps_window_s,
+            straggler_policy=policy)
+
     rows: List[Tuple[str, float, str]] = []
-    results: Dict[str, Dict[str, Dict[str, float]]] = {}
+    results: Dict[str, Dict[str, Dict[str, object]]] = {}
+    auto_iters = {}
     for mode in ("shadow", "fixed_rate"):
         results[mode] = {}
-        for name, fault in _scenarios(iters).items():
-            runner = ThreadedShadowRunner(
-                cfg, SyncConfig(algo=ALGO, mode=mode, gap=GAP, alpha=0.5),
-                n_trainers=R, batch_size=BATCH, optimizer=optim.adagrad(0.02),
-                sync_sleep_s=0.01, fault_spec=fault, eps_window_s=2.0)
-            out = runner.run(iters)
-            crashed = set((fault.crash_at if fault else {}).keys())
-            survivors = [out["per_trainer_eps"][i]
-                         for i in range(R) if i not in crashed]
-            surv_eps = sum(survivors) / max(len(survivors), 1)
-            res = {
+        legacy = _fault_scenarios(iters)
+        # span-calibrated runs, AFTER no_fault (see module doc):
+        # no_fault_ref anchors every retention denominator over ~AUTO_SPAN_S
+        # seconds of work (a sub-second no_fault sample's scheduler noise
+        # would flip CI floors); straggler_auto is the same length with the
+        # transient straggler + the controller on. no_fault_ref must run
+        # BEFORE any scenario that computes a retention against it.
+        scenarios = {
+            "no_fault": legacy["no_fault"],
+            "no_fault_ref": (None, None, False),
+            "straggler": legacy["straggler"],
+            "crash": legacy["crash"],
+            "straggler_auto": (None, FaultSpec(
+                straggler_sleep_s={R - 1: STRAGGLER_SLEEP_S},
+                straggler_until={R - 1: AUTO_UNTIL}), True),
+        }
+        for name, (n_iters, fault, with_policy) in scenarios.items():
+            if n_iters is None:  # calibrate from this mode's no_fault pace
+                ref = results[mode]["no_fault"]["healthy_eps"]
+                n_iters = auto_iters.setdefault(mode, int(min(
+                    AUTO_ITERS_MAX, max(AUTO_ITERS_MIN,
+                                        round(AUTO_SPAN_S * ref / BATCH)))))
+            policy = None
+            eps_window_s = 2.0
+            if with_policy:
+                policy = StragglerPolicy(PolicyConfig(**AUTO_POLICY),
+                                         n_slots=R)
+                eps_window_s = AUTO_EPS_WINDOW_S
+            runner = make_runner(mode, fault, policy, eps_window_s)
+            # each runner owns fresh jit wrappers: trace OUTSIDE the
+            # measured run, or short scenarios are trace-dominated and the
+            # controller's meters are blind during its detection window
+            runner.warmup()
+            out = runner.run(n_iters)
+            healthy = _healthy_eps(out, fault)
+            res: Dict[str, object] = {
                 "eps": out["eps"],
                 "eps_window": out["eps_window"],
-                "survivor_eps": surv_eps,
+                "healthy_eps": healthy,
                 "per_trainer_eps": out["per_trainer_eps"],
+                "per_trainer_eps_busy": out["per_trainer_eps_busy"],
                 "wall_s": out["wall_s"],
                 "sync_count": out["sync_count"],
                 "iter_count": out["iter_count"],
+                "iters_per_trainer": n_iters,
             }
+            if name not in ("no_fault", "no_fault_ref"):
+                ref = results[mode]["no_fault_ref"]["healthy_eps"]
+                res["healthy_retention"] = healthy / max(ref, 1e-9)
+            if with_policy:
+                t0 = out["t_start"]
+                res["events"] = [[e.kind, e.slot, e.reason,
+                                  round(e.t - t0, 3)]
+                                 for e in out["membership_events"]]
+                demote = [e for e in out["membership_events"]
+                          if e.kind == "leave"]
+                readmit = [e for e in out["membership_events"]
+                           if e.kind == "activate"]
+                res["demote_wall_s"] = (demote[0].t - t0) if demote else None
+                res["readmit_wall_s"] = (readmit[0].t - t0) if readmit else None
             results[mode][name] = res
             rows.append((f"elastic/{mode}_{name}", out["wall_s"] * 1e6,
                          f"{out['eps']:.0f} EPS "
-                         f"(survivors {surv_eps:.0f}/trainer)"))
-            print(f"  {mode:10s} {name:9s}  EPS {out['eps']:7.0f}  "
+                         f"(healthy {healthy:.0f}/trainer)"))
+            extra = ""
+            if "healthy_retention" in res:
+                extra = f"  retention {res['healthy_retention']:.0%}"
+            print(f"  {mode:10s} {name:14s}  EPS {out['eps']:7.0f}  "
                   f"window {out['eps_window']:7.0f}  "
-                  f"survivor/trainer {surv_eps:7.0f}  "
-                  f"wall {out['wall_s']:5.2f}s  syncs {out['sync_count']}")
+                  f"healthy/trainer {healthy:7.0f}  "
+                  f"wall {out['wall_s']:5.2f}s  syncs {out['sync_count']}"
+                  f"{extra}")
+            if with_policy and res["events"]:
+                print(f"    {'':10s} events: "
+                      + ", ".join(f"{k}@{t:.2f}s" if t is not None else k
+                                  for k, _, _, t in res["events"]))
 
     sh, fr = results["shadow"], results["fixed_rate"]
-    if fr["straggler"]["survivor_eps"] > 0:
-        print(f"  straggler contrast: shadow survivors keep "
-              f"{sh['straggler']['survivor_eps'] / max(sh['no_fault']['survivor_eps'], 1e-9):.0%}"
-              f" of no-fault pace; fixed_rate holds everyone to "
-              f"{fr['straggler']['survivor_eps'] / max(fr['no_fault']['survivor_eps'], 1e-9):.0%}")
+    print(f"  straggler contrast: shadow healthy cohort keeps "
+          f"{sh['straggler']['healthy_retention']:.0%} of no-fault pace; "
+          f"fixed_rate holds everyone to "
+          f"{fr['straggler']['healthy_retention']:.0%} — with the "
+          f"closed-loop controller, fixed_rate recovers to "
+          f"{fr['straggler_auto']['healthy_retention']:.0%}")
 
     if json_path:
         payload = {
@@ -114,7 +212,14 @@ def bench_elastic(json_path: Optional[str] = None,
             "config": {"R": R, "iters_per_trainer": iters, "algo": ALGO,
                        "gap": GAP, "batch_size": BATCH,
                        "straggler_sleep_s": STRAGGLER_SLEEP_S,
-                       "crash_at": max(iters // 3, 1), "tiny": tiny},
+                       "crash_at": max(iters // 3, 1), "tiny": tiny,
+                       "straggler_auto": {
+                           "span_s": AUTO_SPAN_S,
+                           "iters": auto_iters,
+                           "straggler_until": AUTO_UNTIL,
+                           "eps_window_s": AUTO_EPS_WINDOW_S,
+                           **AUTO_POLICY,
+                       }},
             "results": results,
         }
         with open(json_path, "w") as f:

@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import List, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks._timing import time_call as _time
 

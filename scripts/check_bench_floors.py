@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""Assert committed performance floors against freshly generated BENCH_*.json.
+
+CI used to check only that the benchmark JSONs *parse* — a regression that
+halved throughput retention merged green. This script encodes the floors the
+repo's benchmarks exist to defend:
+
+* ``BENCH_sync.json``   — every registered sync algorithm's flat-engine HBM
+  stream ratio (pytree bytes / flat bytes) stays >= 2.2x (DESIGN.md §3).
+* ``BENCH_emb.json``    — the fused embedding path moves >= 5x fewer bytes
+  than dense-take (3.5x on the CI tiny shapes; DESIGN.md §7.1).
+* ``BENCH_elastic.json`` — the elasticity story (DESIGN.md §8-9):
+  - shadow-mode healthy cohort keeps >= 85% of no-fault pace under a
+    straggler (background sync never blocks on a degraded host);
+  - with the closed-loop controller on (``straggler_auto``), the fixed_rate
+    cohort ALSO recovers to >= 85% — the controller demotes the straggler
+    out of the barrier within its detection window and the event log shows
+    the full ``leave -> join -> activate`` cycle with demotion provenance.
+
+Stream-ratio floors are analytic (byte counts, machine-independent); the
+elastic floors are wall-clock ratios of equal-length runs, which is why
+``elastic_bench`` self-calibrates the ``straggler_auto`` span and the floors
+are set well below the ~0.9+ both fast and slow boxes produce.
+
+Usage (CI regenerates the JSONs first — see .github/workflows/ci.yml):
+
+    PYTHONPATH=src python scripts/check_bench_floors.py [--dir .]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+SYNC_STREAM_RATIO_MIN = 2.2
+EMB_STREAM_RATIO_MIN = 5.0
+EMB_STREAM_RATIO_MIN_TINY = 3.5
+SHADOW_STRAGGLER_RETENTION_MIN = 0.85
+AUTO_RETENTION_MIN = 0.85
+AUTO_DEMOTE_WALL_MAX_S = 2.5
+
+
+class Floors:
+    def __init__(self) -> None:
+        self.failures: List[str] = []
+        self.passes: List[str] = []
+
+    def check(self, ok: bool, msg: str) -> None:
+        (self.passes if ok else self.failures).append(msg)
+
+
+def check_sync(d: dict, fl: Floors) -> None:
+    results = d["results"]
+    fl.check(len(results) >= 4, f"sync: {len(results)} algorithms benched (>= 4)")
+    for algo, row in sorted(results.items()):
+        ratio = row["stream_ratio"]
+        fl.check(
+            ratio >= SYNC_STREAM_RATIO_MIN,
+            f"sync/{algo}: stream_ratio {ratio:.2f} >= {SYNC_STREAM_RATIO_MIN}",
+        )
+
+
+def check_emb(d: dict, fl: Floors) -> None:
+    tiny = bool(d["config"].get("tiny"))
+    floor = EMB_STREAM_RATIO_MIN_TINY if tiny else EMB_STREAM_RATIO_MIN
+    ratio = d["results"]["fused"]["stream_ratio"]
+    fl.check(ratio >= floor, f"emb/fused: stream_ratio {ratio:.2f} >= {floor}")
+    fl.check(
+        d["results"]["plan_sharded"]["bytes"] <= d["results"]["dense_take"]["bytes"],
+        "emb/plan_sharded: moves no more bytes than dense_take",
+    )
+
+
+def _check_auto_events(mode: str, row: dict, slot: int, fl: Floors) -> None:
+    events = row.get("events") or []
+    kinds = [e[0] for e in events if e[1] == slot]
+    fl.check(
+        kinds[:3] == ["leave", "join", "activate"],
+        f"elastic/{mode}/straggler_auto: slot {slot} event log is "
+        f"leave -> join -> activate (got {kinds})",
+    )
+    leaves = [e for e in events if e[0] == "leave" and e[1] == slot]
+    provenance = bool(leaves) and "straggler" in leaves[0][2]
+    fl.check(
+        provenance,
+        f"elastic/{mode}/straggler_auto: demotion carries straggler provenance",
+    )
+    demote_wall = row.get("demote_wall_s")
+    fl.check(
+        demote_wall is not None and demote_wall <= AUTO_DEMOTE_WALL_MAX_S,
+        f"elastic/{mode}/straggler_auto: demoted in {demote_wall}s "
+        f"(<= {AUTO_DEMOTE_WALL_MAX_S}s — within the detection window)",
+    )
+    fl.check(
+        row.get("readmit_wall_s") is not None,
+        f"elastic/{mode}/straggler_auto: re-admitted after the degradation ended",
+    )
+
+
+def check_elastic(d: dict, fl: Floors) -> None:
+    results = d["results"]
+    slot = d["config"]["R"] - 1
+    for mode in ("shadow", "fixed_rate"):
+        scenarios = set(results[mode])
+        fl.check(
+            {"no_fault", "no_fault_ref", "straggler", "crash", "straggler_auto"}
+            <= scenarios,
+            f"elastic/{mode}: all five scenarios present",
+        )
+    ret = results["shadow"]["straggler"]["healthy_retention"]
+    fl.check(
+        ret >= SHADOW_STRAGGLER_RETENTION_MIN,
+        f"elastic/shadow/straggler: healthy retention {ret:.2f} >= "
+        f"{SHADOW_STRAGGLER_RETENTION_MIN} (background sync shields the cohort)",
+    )
+    for mode in ("shadow", "fixed_rate"):
+        ret = results[mode]["straggler_auto"]["healthy_retention"]
+        fl.check(
+            ret >= AUTO_RETENTION_MIN,
+            f"elastic/{mode}/straggler_auto: healthy retention {ret:.2f} >= "
+            f"{AUTO_RETENTION_MIN} (closed-loop controller recovers the cohort)",
+        )
+        _check_auto_events(mode, results[mode]["straggler_auto"], slot, fl)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=".", help="directory holding BENCH_*.json")
+    ap.add_argument(
+        "--skip",
+        default="",
+        help="comma-separated benches to skip (sync,emb,elastic)",
+    )
+    args = ap.parse_args()
+    skip = {s for s in args.skip.split(",") if s}
+    checks = {"sync": check_sync, "emb": check_emb, "elastic": check_elastic}
+    fl = Floors()
+    for name, fn in checks.items():
+        if name in skip:
+            continue
+        path = os.path.join(args.dir, f"BENCH_{name}.json")
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            fl.check(False, f"{name}: unreadable {path}: {e}")
+            continue
+        try:
+            fn(payload, fl)
+        except Exception as e:  # any payload-shape surprise is a FAIL, not a crash
+            fl.check(False, f"{name}: malformed payload ({type(e).__name__}: {e})")
+    for msg in fl.passes:
+        print(f"  PASS  {msg}")
+    for msg in fl.failures:
+        print(f"  FAIL  {msg}")
+    print(
+        f"bench floors: {len(fl.passes)} passed, {len(fl.failures)} failed",
+        file=sys.stderr,
+    )
+    return 1 if fl.failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

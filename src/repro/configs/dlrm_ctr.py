@@ -3,7 +3,7 @@
 Criteo-like: 13 dense features, 26 categorical features. Table sizes follow a
 power-law mix so the embedding-PS bin-packing layer has real work to do.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

@@ -764,7 +764,6 @@ class Gossip(SyncAlgorithm):
             return super().land_elastic(stack, state, snap, mask, active, cfg)
         if launch_active is None:
             launch_active = active
-        R = jax.tree.leaves(stack)[0].shape[0]
         # the matching was drawn at LAUNCH, over the then-live slots
         partner = _ring_partner_active_np(launch_active, int(state))
         mask_arr = (jnp.asarray(np.asarray(launch_active, bool)) if mask is None

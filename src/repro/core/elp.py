@@ -1,10 +1,11 @@
 """EPS / ELP accounting (paper Definitions 1 and 2) + the Table 1 comparison."""
 from __future__ import annotations
 
+import statistics
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, Iterable, Tuple
 
 
 def elp(batch_size: int, n_hogwild: int, n_replicas: int) -> int:
@@ -25,7 +26,15 @@ class EPSMeter:
     windowed rate converges to the SURVIVORS' pace instead of being diluted
     forever by the dead trainer's early contribution (a cumulative
     examples-since-construction rate — the previous implementation — never
-    recovers). ``clock`` is injectable for deterministic tests.
+    recovers). ``clock`` is injectable for deterministic tests AND for
+    running the meter on a virtual clock: ``SlotEPS`` below feeds each
+    per-trainer meter that trainer's accumulated BUSY time, so the reading
+    is the trainer's intrinsic pace even while it blocks at a foreground
+    sync barrier.
+
+    Concurrency: one writer (``add``, which evicts) + any readers (``eps``
+    never mutates — it snapshots the deque and filters, so a reader racing a
+    writer cannot mis-evict a live bucket).
     """
 
     window_s: float = 5.0
@@ -38,6 +47,7 @@ class EPSMeter:
         self._buckets = deque()
 
     def _evict(self, now: float) -> None:
+        # strictly-older-than-window: a bucket exactly at the cutoff is kept
         cutoff = now - self.window_s
         while self._buckets and self._buckets[0][0] < cutoff:
             self._buckets.popleft()
@@ -50,11 +60,67 @@ class EPSMeter:
     @property
     def eps(self) -> float:
         now = self.clock()
-        self._evict(now)
         span = min(now - self._t0, self.window_s)
         if span <= 0:
             return 0.0
-        return sum(n for _, n in self._buckets) / span
+        cutoff = now - self.window_s
+        # list(deque) is atomic under the GIL; filtering instead of evicting
+        # keeps this read-only (safe against a concurrent add)
+        return sum(n for t, n in list(self._buckets) if t >= cutoff) / span
+
+
+def median_eps(values: Iterable[float]) -> float:
+    """Median of a (possibly empty) collection of rates; empty -> 0.0."""
+    vals = list(values)
+    return float(statistics.median(vals)) if vals else 0.0
+
+
+class SlotEPS:
+    """A bank of per-slot ``EPSMeter``s — the straggler controller's signal
+    source (``core/scheduler.py`` reads ``eps_by_slot`` and takes its own
+    ``median_eps`` over the slots it considers comparable).
+
+    Each slot's meter runs on that slot's own virtual clock — ``tick(slot,
+    busy_s)`` advances it by the seconds the trainer actually spent working
+    (compute + any injected degradation), ``add(slot, n)`` then records the
+    examples at that clock. Excluding time blocked at a foreground sync
+    barrier is the point: under ``mode="fixed_rate"`` the barrier equalizes
+    everyone's WALL-clock rate (the healthy trainers wait for the straggler),
+    so a wall-time meter cannot tell who the straggler is. Busy-time can.
+
+    Thread model: slot ``i`` is written only by trainer thread ``i``; the
+    controller only reads (``eps`` is non-mutating), so no lock is needed.
+    """
+
+    def __init__(self, n_slots: int, window_s: float = 5.0):
+        if n_slots < 1:
+            raise ValueError(f"need n_slots >= 1, got {n_slots}")
+        self.n_slots = int(n_slots)
+        self.window_s = float(window_s)
+        self._busy = [0.0] * self.n_slots
+        self._meters = [
+            EPSMeter(window_s=window_s, clock=self._make_clock(i))
+            for i in range(self.n_slots)
+        ]
+
+    def _make_clock(self, slot: int) -> Callable[[], float]:
+        return lambda: self._busy[slot]
+
+    def tick(self, slot: int, busy_s: float) -> None:
+        """Advance slot's virtual clock by ``busy_s`` seconds of real work."""
+        self._busy[slot] += busy_s
+
+    def add(self, slot: int, n: int) -> None:
+        self._meters[slot].add(n)
+
+    def busy(self, slot: int) -> float:
+        return self._busy[slot]
+
+    def eps(self, slot: int) -> float:
+        return self._meters[slot].eps
+
+    def eps_by_slot(self) -> Dict[int, float]:
+        return {i: self._meters[i].eps for i in range(self.n_slots)}
 
 
 # Paper Table 1 — ELP of prior art (batch, #hogwild, #replicas as reported).

@@ -35,6 +35,7 @@ Transitions (anything else raises ``ValueError``):
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -49,11 +50,19 @@ _STATUS_NAMES = {DEAD: "dead", ACTIVE: "active", JOINING: "joining"}
 
 @dataclass(frozen=True)
 class MembershipEvent:
-    """One transition, as recorded in ``Membership.events``."""
+    """One transition, as recorded in ``Membership.events``.
+
+    ``reason`` is provenance: "" for legacy/injected transitions, a
+    human-readable cause for controller decisions (e.g. the straggler
+    policy's demotion evidence — core/scheduler.py). ``t`` is the wall
+    timestamp of the transition (``time.perf_counter`` domain; diagnostics
+    only — deterministic consumers compare ``(kind, slot)``)."""
 
     kind: str  # "join" | "activate" | "leave" | "fail"
     slot: int
     epoch: int  # epoch AFTER the transition
+    reason: str = ""
+    t: float = 0.0
 
 
 class Membership:
@@ -116,7 +125,7 @@ class Membership:
 
     # -- transitions ---------------------------------------------------------
     def _transition(self, slot: int, allowed: Iterable[int], to: int,
-                    kind: str) -> MembershipEvent:
+                    kind: str, reason: str = "") -> MembershipEvent:
         if not 0 <= slot < self.R_max:
             raise ValueError(f"slot {slot} out of range [0, {self.R_max})")
         with self._lock:
@@ -128,26 +137,28 @@ class Membership:
                     f"{[_STATUS_NAMES[a] for a in allowed]})")
             self._status[slot] = to
             self._epoch += 1
-            ev = MembershipEvent(kind, slot, self._epoch)
+            ev = MembershipEvent(kind, slot, self._epoch, reason,
+                                 time.perf_counter())
             self.events.append(ev)
             return ev
 
-    def join(self, slot: int) -> MembershipEvent:
+    def join(self, slot: int, reason: str = "") -> MembershipEvent:
         """dead -> joining: the slot is being bootstrapped (``on_join``)."""
-        return self._transition(slot, (DEAD,), JOINING, "join")
+        return self._transition(slot, (DEAD,), JOINING, "join", reason)
 
-    def activate(self, slot: int) -> MembershipEvent:
+    def activate(self, slot: int, reason: str = "") -> MembershipEvent:
         """joining -> active: bootstrap finished; the slot trains and syncs."""
-        return self._transition(slot, (JOINING,), ACTIVE, "activate")
+        return self._transition(slot, (JOINING,), ACTIVE, "activate", reason)
 
-    def leave(self, slot: int) -> MembershipEvent:
-        """active -> dead: planned departure (capacity scale-down)."""
-        return self._transition(slot, (ACTIVE,), DEAD, "leave")
+    def leave(self, slot: int, reason: str = "") -> MembershipEvent:
+        """active -> dead: planned departure (capacity scale-down or a
+        straggler demotion — ``reason`` records which)."""
+        return self._transition(slot, (ACTIVE,), DEAD, "leave", reason)
 
-    def fail(self, slot: int) -> MembershipEvent:
+    def fail(self, slot: int, reason: str = "") -> MembershipEvent:
         """active|joining -> dead: crash. The sync stack just stops reading
         the slot; nothing blocks, nothing reallocates."""
-        return self._transition(slot, (ACTIVE, JOINING), DEAD, "fail")
+        return self._transition(slot, (ACTIVE, JOINING), DEAD, "fail", reason)
 
     def __repr__(self) -> str:
         s = "".join({DEAD: ".", ACTIVE: "A", JOINING: "j"}[int(x)]
@@ -202,6 +213,11 @@ class FaultSpec:
       ``mode="fixed_rate"`` every trainer blocks at the sync barrier until
       the straggler arrives — the paper's Fig-5 contrast, restated as fault
       tolerance.
+    * ``straggler_until[slot]`` — the straggler sleep applies only while the
+      slot's LOCAL iteration is below this bound (a transient degradation —
+      e.g. a co-tenant burst — that ends; absent means degraded for the whole
+      run). This is what the closed-loop controller's re-admission story
+      exercises: demote while degraded, re-admit once the pace recovers.
     * ``crash_at[slot]`` — the trainer dies (thread exits, membership
       ``fail``) when it reaches this local iteration.
     * ``join_at[slot]`` — the slot starts dead and joins (bootstrap via
@@ -210,11 +226,18 @@ class FaultSpec:
     """
 
     straggler_sleep_s: Dict[int, float] = field(default_factory=dict)
+    straggler_until: Dict[int, int] = field(default_factory=dict)
     crash_at: Dict[int, int] = field(default_factory=dict)
     join_at: Dict[int, int] = field(default_factory=dict)
 
     def validate(self, R_max: int) -> "FaultSpec":
+        for slot in self.straggler_until:
+            if slot not in self.straggler_sleep_s:
+                raise ValueError(
+                    f"straggler_until names slot {slot} but "
+                    f"straggler_sleep_s does not degrade it")
         for name, d in (("straggler_sleep_s", self.straggler_sleep_s),
+                        ("straggler_until", self.straggler_until),
                         ("crash_at", self.crash_at),
                         ("join_at", self.join_at)):
             for slot in d:

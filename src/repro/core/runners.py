@@ -46,12 +46,20 @@ thread reads membership each round and simply skips dead slots — training
 never blocks on a fault. ``mode="fixed_rate"`` in the threaded runner is the
 foreground contrast: every trainer blocks at the sync point, so one
 straggler drags the whole cohort to its pace.
+
+Closed-loop straggler scheduling (DESIGN.md §9): pass a
+``core.scheduler.StragglerPolicy`` and the threaded runner evaluates it
+every background round over per-slot busy-clock EPS meters — a slot whose
+pace falls below the policy floor is demoted to ``leave`` (with provenance
+in the membership event log) and re-admitted through the ordinary join
+bootstrap once its probation passes. ``HogwildSim`` consumes the same
+policy deterministically via ``core.scheduler.StragglerSchedule``.
 """
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -61,9 +69,10 @@ import numpy as np
 from repro import checkpoint as ckpt
 from repro.core import algorithms
 from repro.core import sync as S
-from repro.core.elp import EPSMeter
+from repro.core.elp import EPSMeter, SlotEPS
 from repro.core.flatspace import FlatSpace
 from repro.core.membership import FaultSpec, Membership, MembershipSchedule
+from repro.core.scheduler import StragglerPolicy
 from repro.data import ctr
 from repro.embeddings import shards as emb_shards
 from repro.embeddings import table as emb
@@ -296,14 +305,17 @@ class HogwildSim:
         # pytree: real deep copy (train_iter donates its buffers)
         return jax.tree.map(jnp.copy, st.w_stack)
 
-    def _apply_membership_event(self, st: SimState, kind: str, slot: int) -> SimState:
+    def _apply_membership_event(self, st: SimState, kind: str, slot: int,
+                                reason: str = "") -> SimState:
         """One schedule transition, at an iteration boundary. Joins bootstrap
         through the algorithm's ``on_join`` hook (live mean / PS copy) with a
         fresh optimizer slot; leaves/fails dispatch ``on_leave``. Nothing
-        reallocates — the capacity-padded buffers just flip a mask bit."""
+        reallocates — the capacity-padded buffers just flip a mask bit.
+        ``reason`` is provenance for the event log (e.g. a straggler-policy
+        demotion — core/scheduler.py)."""
         sc, fs = self.sync_cfg, self.flat
         if kind in ("fail", "leave"):
-            getattr(self.membership, kind)(slot)
+            getattr(self.membership, kind)(slot, reason=reason)
             if self.engine == "flat":
                 st.algo_state = self.algo.on_leave_flat(st.algo_state, slot, sc, fs)
             else:
@@ -312,7 +324,7 @@ class HogwildSim:
         if kind != "join":
             raise ValueError(f"unknown membership event kind {kind!r}")
         donors = self.membership.active_mask()  # before the join
-        self.membership.join(slot)
+        self.membership.join(slot, reason=reason)
         if donors.any():  # no live donors -> keep the slot's current weights
             if self.engine == "flat":
                 st.w_stack, st.algo_state = self.algo.on_join_flat(
@@ -344,8 +356,13 @@ class HogwildSim:
         pending: Optional[Tuple[int, Pytree, np.ndarray, Optional[np.ndarray]]] = None
         for t in range(start, start + n_iters):
             if elastic and self.schedule is not None:
-                for kind, slot in self.schedule.events_at(t):
-                    st = self._apply_membership_event(st, kind, slot)
+                # plain schedules yield (kind, slot); a closed-loop
+                # StragglerSchedule yields (kind, slot, reason) — provenance
+                # rides into the membership event log
+                for ev in self.schedule.events_at(t):
+                    kind, slot = ev[0], ev[1]
+                    reason = ev[2] if len(ev) > 2 else ""
+                    st = self._apply_membership_event(st, kind, slot, reason)
             active = self.membership.active_mask() if elastic else None
             batch = self.make_batch(t)
             if elastic:
@@ -572,7 +589,8 @@ class ThreadedShadowRunner:
                  n_emb_shards: Optional[int] = None,
                  fault_spec: Optional[FaultSpec] = None,
                  membership: Optional[Membership] = None,
-                 eps_window_s: float = 2.0):
+                 eps_window_s: float = 2.0,
+                 straggler_policy: Optional[StragglerPolicy] = None):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
@@ -584,6 +602,14 @@ class ThreadedShadowRunner:
         # Fault-injection harness + elastic membership (DESIGN.md §8.4):
         # slots with a join_at schedule start dead and bootstrap mid-run.
         self.fault = (fault_spec or FaultSpec()).validate(n_trainers)
+        # Closed-loop straggler controller (DESIGN.md §9): evaluated in the
+        # shadow thread each round (mode="shadow") or by a lightweight
+        # monitor thread (mode="fixed_rate", which has no shadow thread).
+        if straggler_policy is not None and straggler_policy.n_slots != n_trainers:
+            raise ValueError(f"straggler_policy watches "
+                             f"{straggler_policy.n_slots} slots, runner has "
+                             f"{n_trainers} trainers")
+        self.policy = straggler_policy
         if membership is None:
             membership = Membership.from_mask(
                 [i not in self.fault.join_at for i in range(n_trainers)])
@@ -633,6 +659,58 @@ class ThreadedShadowRunner:
         # The background round: a host callable from the algorithm that
         # mutates the per-trainer planes/pytrees in place (Algorithm 1).
         self._shadow_round = self.algo.make_shadow_round(self.sync_cfg, self.flat)
+
+    def warmup(self, iters: int = 1) -> None:
+        """Trace/compile this runner's jitted programs on throwaway state.
+
+        Each runner instance owns fresh ``jax.jit`` wrappers, so its first
+        training iteration pays tracing (~0.5-2 s on a loaded box) — enough
+        to dominate a short benchmark run and to blind the straggler
+        controller's meters during exactly the window it should be
+        detecting in. Warming up touches no membership, meters, or
+        measured state."""
+        key = jax.random.PRNGKey(self.seed)
+        kw, ke = jax.random.split(key)
+        w0 = dlrm.init_dense(self.cfg, kw)
+        plane = self.flat.pack(w0) if self.engine == "flat" else w0
+        opt0 = self.opt.init(w0)
+        embs = emb_shards.EmbeddingShards.init(self.plan, ke)
+        for it in range(iters):
+            batch = ctr.gen_batch(self.cfg, self.teacher, self.seed, it, self.B)
+            plane, opt0, _, g_pooled = self._train_one(
+                plane, opt0, embs.tables(), batch)
+            for s in range(self.n_emb_shards):
+                embs.states[s] = self._emb_updates[s](
+                    embs.states[s], batch["sparse"], g_pooled)
+        # the background/foreground sync round is its own jitted program
+        # (retraced per live count): warm it at the initial cohort size on
+        # throwaway state, or the FIRST measured round pays the trace —
+        # inside the controller's detection window
+        n_live = max(int(self.membership.active_ids().size), 1)
+        if self.engine == "flat":
+            algo_state = self.algo.init_state_flat(plane, self.sync_cfg,
+                                                   self.flat)
+        else:
+            algo_state = self.algo.init_state(w0, self.sync_cfg)
+        self._shadow_round([plane] * n_live, algo_state)
+
+    def _dispatch_on_leave(self, slot: int) -> None:
+        """Engine-dispatched algorithm hook for a departing slot. Caller
+        holds ``_state_lock``."""
+        if self.engine == "flat":
+            self.algo_state = self.algo.on_leave_flat(
+                self.algo_state, slot, self.sync_cfg, self.flat)
+        else:
+            self.algo_state = self.algo.on_leave(
+                self.algo_state, slot, self.sync_cfg)
+
+    def _admit_slot(self, slot: int, reason: str = "") -> None:
+        """join -> bootstrap -> activate, the one admission sequence (used
+        by the join_at fault path and policy re-admission). Caller holds
+        ``_state_lock``."""
+        self.membership.join(slot, reason=reason)
+        self._bootstrap_join(slot)
+        self.membership.activate(slot)
 
     def _bootstrap_join(self, i: int) -> None:
         """Bootstrap a joining slot through the algorithm's ``on_join`` hook
@@ -687,6 +765,14 @@ class ThreadedShadowRunner:
         # round's PS/consensus update with a stale copy)
         self._state_lock = threading.Lock()
         self.eps_meter = EPSMeter(window_s=self.eps_window_s)
+        # Per-slot meters on each trainer's BUSY clock (compute + injected
+        # degradation, excluding barrier waits): under fixed_rate the barrier
+        # equalizes everyone's wall-clock rate, so busy-time is the only
+        # signal that identifies the straggler (core/scheduler.py).
+        self.slot_eps = SlotEPS(self.R, window_s=self.eps_window_s)
+        # thread-alive flags: the controller must not judge a trainer that
+        # merely FINISHED (its rate decays to zero) nor re-admit a ghost
+        self._alive = [True] * self.R
         self.iter_count = [0] * self.R
         trainer_wall = [0.0] * self.R
         losses: List[List[float]] = [[] for _ in range(self.R)]
@@ -696,10 +782,15 @@ class ThreadedShadowRunner:
             # Foreground sync point: a Condition-based barrier whose party
             # count tracks membership, so a crash shrinks it instead of
             # deadlocking — but a straggler still drags EVERYONE (the paper's
-            # fixed-rate failure mode, restated as fault tolerance).
+            # fixed-rate failure mode, restated as fault tolerance) until the
+            # straggler policy (if any) demotes it out of the barrier.
             self._fr_cond = threading.Condition()
-            self._fr_parties = int(self.membership.n_active)
-            self._fr_arrived = 0
+            self._fr_registered = [bool(b) for b in self.membership.active_mask()]
+            # per-slot arrival flags, not a counter: the barrier fires only
+            # when every REGISTERED slot has arrived, so demoting a slot
+            # that is already waiting cannot leave a stale arrival that
+            # releases the round before the rest of the cohort shows up
+            self._fr_arrived = [False] * self.R
             self._fr_gen = 0
         initial_active = set(int(j) for j in self.membership.active_ids())
         self._initial_running = len(initial_active)
@@ -726,32 +817,119 @@ class ThreadedShadowRunner:
                     self.w[j] = sub[k]
                 return n
 
-        def _fr_deregister() -> None:
+        def _fr_ready_locked() -> bool:
+            regs = [j for j in range(self.R) if self._fr_registered[j]]
+            return bool(regs) and all(self._fr_arrived[j] for j in regs)
+
+        def _fr_deregister(i: int) -> None:
+            # idempotent; waiters re-evaluate readiness over the slots that
+            # remain registered (a stale arrival flag of a deregistered
+            # slot is simply ignored)
             with self._fr_cond:
-                self._fr_parties -= 1
+                self._fr_registered[i] = False
                 self._fr_cond.notify_all()
 
-        def _fr_sync_point() -> None:
+        def _fr_register(i: int) -> None:
+            # re-admission: only a live thread may rejoin the barrier — a
+            # party that never arrives would deadlock the whole cohort
+            # (atomic with the trainer's exit path, which deregisters under
+            # this same condition)
             with self._fr_cond:
+                if self._alive[i] and not self._fr_registered[i]:
+                    self._fr_registered[i] = True
+                    self._fr_arrived[i] = False
+                self._fr_cond.notify_all()
+
+        def _fr_sync_point(i: int) -> None:
+            with self._fr_cond:
+                if not self._fr_registered[i]:
+                    return  # demoted: train on, but never block the cohort
                 gen = self._fr_gen
-                self._fr_arrived += 1
-                # wait until every live party arrived (a crash shrinks
-                # _fr_parties and notifies, so the barrier re-evaluates)
-                while self._fr_gen == gen and self._fr_arrived < self._fr_parties:
+                self._fr_arrived[i] = True
+                # wait until every REGISTERED slot arrived (a crash or
+                # demotion clears a registration and notifies, so the
+                # barrier re-evaluates over the remaining cohort)
+                while (self._fr_gen == gen and self._fr_registered[i]
+                       and not _fr_ready_locked()):
                     self._fr_cond.wait(timeout=0.05)
+                    if self._fr_gen == gen and self._fr_registered[i]:
+                        # a demote -> readmit cycle while we were parked
+                        # cleared our arrival flag; we ARE at the sync
+                        # point, so re-assert it or the barrier starves
+                        self._fr_arrived[i] = True
+                if self._fr_gen == gen and not self._fr_registered[i]:
+                    # demoted while waiting: clear the (now ignored) arrival
+                    # and leave the barrier to the remaining cohort
+                    self._fr_arrived[i] = False
+                    self._fr_cond.notify_all()
+                    return
                 if self._fr_gen == gen:
-                    # last to arrive runs the foreground round for everyone
+                    # every registered slot is here: run the round for all
                     n = _round_over_active()
                     if n:
                         _add_syncs(n)
-                    self._fr_arrived = 0
+                    for j in range(self.R):
+                        self._fr_arrived[j] = False
                     self._fr_gen += 1
                     self._fr_cond.notify_all()
+
+        def _demote(slot: int, reason: str) -> None:
+            """Policy demotion: active -> dead ("leave", with provenance).
+            The trainer thread keeps running — its continued local iterations
+            ARE the probe stream the policy watches for re-admission — but
+            its replica leaves the sync set, its shared-embedding writes are
+            suppressed (the trainer checks membership per iteration), and
+            (fixed_rate) it leaves the barrier."""
+            with self._state_lock:
+                if not self.membership.active_mask()[slot]:
+                    return  # crashed/left between observation and action
+                self.membership.leave(slot, reason=reason)
+                self._dispatch_on_leave(slot)
+            if fr:
+                _fr_deregister(slot)
+
+        def _readmit(slot: int, reason: str) -> None:
+            """Policy re-admission after probation: dead -> joining ->
+            active, bootstrapped from the live cohort exactly like a fresh
+            join. The trainer may finish an in-flight iteration concurrently
+            and overwrite the bootstrap with its own plane — the same
+            landing-into-moving-state race every shadow round tolerates by
+            design; the next sync pulls it to consensus either way."""
+            with self._state_lock:
+                # alive is cleared under this lock on trainer exit, so a
+                # finished trainer can no longer be resurrected here
+                if not self._alive[slot]:
+                    return
+                if self.membership.status(slot) != "dead":
+                    return
+                self._admit_slot(slot, reason=reason)
+            if fr:
+                _fr_register(slot)
+
+        def _policy_step() -> None:
+            policy = self.policy
+            if policy is None:
+                return
+            actions = policy.observe(
+                time.perf_counter(), self.slot_eps.eps_by_slot(),
+                self.membership.active_mask(), list(self._alive))
+            for a in actions:
+                if a.kind == "demote":
+                    _demote(a.slot, a.reason)
+                else:
+                    _readmit(a.slot, a.reason)
 
         def trainer(i: int):
             try:
                 _trainer_body(i)
             finally:
+                # under _state_lock so _readmit's alive check is race-free
+                # (a finished trainer must never be resurrected into the
+                # sync set); then drop out of the barrier
+                with self._state_lock:
+                    self._alive[i] = False
+                if fr:
+                    _fr_deregister(i)
                 if i in initial_active:
                     with ex_lock:
                         self._initial_running -= 1
@@ -767,30 +945,27 @@ class ThreadedShadowRunner:
                         # join point — never block run() on an unreachable join
                     time.sleep(0.001)
                 with self._state_lock:
-                    self.membership.join(i)
-                    self._bootstrap_join(i)
-                    self.membership.activate(i)
+                    self._admit_slot(i)
                 if fr:
-                    with self._fr_cond:
-                        self._fr_parties += 1
+                    _fr_register(i)
                 n_iters = max(iters_per_trainer - target, 1)
             t_start = time.perf_counter()
             sleep_s = self.fault.straggler_sleep_s.get(i, 0.0)
+            sleep_until = self.fault.straggler_until.get(i)
             crash = self.fault.crash_at.get(i)
             for it in range(n_iters):
                 if crash is not None and it >= crash:
                     with self._state_lock:
-                        self.membership.fail(i)
-                        if self.engine == "flat":
-                            self.algo_state = self.algo.on_leave_flat(
-                                self.algo_state, i, self.sync_cfg, self.flat)
-                        else:
-                            self.algo_state = self.algo.on_leave(
-                                self.algo_state, i, self.sync_cfg)
+                        # a slot the policy already demoted is dead in the
+                        # membership table — its host dying is a no-op there
+                        if self.membership.status(i) != "dead":
+                            self.membership.fail(i)
+                            self._dispatch_on_leave(i)
                     if fr:
-                        _fr_deregister()
+                        _fr_deregister(i)
                     break
-                if sleep_s:
+                t_busy = time.perf_counter()
+                if sleep_s and (sleep_until is None or it < sleep_until):
                     time.sleep(sleep_s)  # injected degradation
                 batch = ctr.gen_batch(
                     self.cfg, self.teacher, self.seed + i, it, self.B
@@ -803,19 +978,32 @@ class ThreadedShadowRunner:
                 # Lock-free read-modify-write PER SHARD: concurrent writers to
                 # different PSs proceed independently; writers to the same PS
                 # can interleave and lose updates (the Hogwild property).
-                for s in range(self.n_emb_shards):
-                    self.emb.states[s] = self._emb_updates[s](
-                        self.emb.states[s], batch["sparse"], g_pooled)
+                # A slot membership holds dead — policy-demoted — keeps
+                # training PRIVATE state (its iterations are the probe
+                # stream re-admission watches) but must not land its
+                # degraded gradients in the SHARED embedding state: same
+                # dead-slot no-op invariant as HogwildSim (DESIGN.md §8.2).
+                is_member = self.membership.status(i) == "active"
+                if is_member:
+                    for s in range(self.n_emb_shards):
+                        self.emb.states[s] = self._emb_updates[s](
+                            self.emb.states[s], batch["sparse"], g_pooled)
                 losses[i].append(float(loss))
                 self.iter_count[i] = it + 1
-                with ex_lock:
-                    self.examples += self.B
-                    self.eps_meter.add(self.B)
+                # busy time stops HERE, before any barrier wait: the per-slot
+                # meter reads the trainer's intrinsic pace in both modes
+                # (probe iterations of a demoted slot included — that is the
+                # signal re-admission watches)
+                self.slot_eps.tick(i, time.perf_counter() - t_busy)
+                self.slot_eps.add(i, self.B)
+                if is_member:
+                    # headline eps/eps_window count COHORT work only: a
+                    # demoted slot's probe iterations are discarded work
+                    with ex_lock:
+                        self.examples += self.B
+                        self.eps_meter.add(self.B)
                 if fr and (it + 1) % self.sync_cfg.gap == 0:
-                    _fr_sync_point()
-            else:
-                if fr:
-                    _fr_deregister()
+                    _fr_sync_point(i)
             trainer_wall[i] = time.perf_counter() - t_start
 
         def shadow():
@@ -828,21 +1016,38 @@ class ThreadedShadowRunner:
                     _add_syncs(n)
                 else:
                     time.sleep(0.001)
+                # the controller rides the shadow cadence: membership is
+                # re-evaluated every background round, training never blocks
+                _policy_step()
                 if self.sync_sleep_s:
                     time.sleep(self.sync_sleep_s)
 
+        def monitor():
+            # fixed_rate has no shadow thread, so the controller gets its own
+            # (otherwise a demotion decision could only happen at a barrier —
+            # exactly the place the straggler is blocking everyone)
+            while not self.done.is_set():
+                _policy_step()
+                time.sleep(0.02)
+
         threads = [threading.Thread(target=trainer, args=(i,)) for i in range(self.R)]
         shadow_t = None if fr else threading.Thread(target=shadow, daemon=True)
+        monitor_t = (threading.Thread(target=monitor, daemon=True)
+                     if fr and self.policy is not None else None)
         t0 = time.perf_counter()
         for t in threads:
             t.start()
         if shadow_t is not None:
             shadow_t.start()
+        if monitor_t is not None:
+            monitor_t.start()
         for t in threads:
             t.join()
         self.done.set()
         if shadow_t is not None:
             shadow_t.join(timeout=5.0)
+        if monitor_t is not None:
+            monitor_t.join(timeout=5.0)
         wall = time.perf_counter() - t0
         total_iters = sum(self.iter_count)
         if self.engine == "flat":
@@ -863,8 +1068,17 @@ class ThreadedShadowRunner:
                 self.B * self.iter_count[i] / trainer_wall[i]
                 if trainer_wall[i] > 0 and self.iter_count[i] > 0 else 0.0
                 for i in range(self.R)],
+            # intrinsic (busy-clock) pace per slot: what the straggler
+            # controller saw; barrier waits excluded
+            "per_trainer_eps_busy": [
+                self.B * self.iter_count[i] / self.slot_eps.busy(i)
+                if self.slot_eps.busy(i) > 0 else 0.0
+                for i in range(self.R)],
             "iter_count": list(self.iter_count),
             "membership_events": list(self.membership.events),
+            "policy_transitions": (list(self.policy.transitions)
+                                   if self.policy is not None else []),
+            "t_start": t0,
             "w": w_out,
             # Engine-independent packed view of the per-PS states.
             "emb_state": self.emb.to_packed(),

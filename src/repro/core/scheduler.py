@@ -1,0 +1,273 @@
+"""Closed-loop straggler scheduling: EPS-driven auto-demotion / re-admission.
+
+PR 4 made replica membership mutable but only ever changed it by *injected*
+fault (``--crash-at`` / ``--join-at``); a straggler silently dragged quality
+(its updates go stale) and, in ``fixed_rate`` mode, dragged the whole cohort
+to its pace. This module closes the detect → demote → re-admit loop — in the
+spirit of BagPipe's measure-then-schedule approach — turning the windowed
+``EPSMeter`` from a dashboard into a controller: the last un-elastic decision
+in the stack (who is a member) becomes measured, not declared.
+
+``StragglerPolicy`` is a deterministic state machine over per-slot EPS
+observations (DESIGN.md §9):
+
+    healthy --breach persists window_s--> suspect --> DEMOTED ("leave")
+    demoted --healthy probes persist probation_s--> probation --> re-admitted
+                                                                  ("join")
+
+* Demotion: a slot's EPS stays below ``eps_floor_frac`` x the live median
+  for a full ``window_s`` (two observations minimum — a single dip is never
+  acted on).
+* Re-admission: a demoted slot's EPS stays at or above ``readmit_frac`` x
+  the live median for a full ``probation_s`` of healthy probe observations.
+* Hysteresis: ``readmit_frac > eps_floor_frac``, so a slot must prove MORE
+  than marginal health to come back — a borderline slot parks as demoted
+  instead of flapping through the membership log.
+* Quorum: the controller never demotes below ``min_active`` live slots, and
+  it only re-admits slots IT demoted — crashed slots belong to the fault
+  harness, joining slots to their bootstrap.
+
+The policy is runtime-agnostic: ``ThreadedShadowRunner`` feeds it real
+busy-time EPS readings (``elp.SlotEPS``) from the shadow thread each round;
+``StragglerSchedule`` adapts it into a deterministic
+``MembershipSchedule``-compatible event source for ``HogwildSim``, where the
+per-slot rates come from a scripted trace — same controller, reproducible
+trajectories.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.elp import median_eps
+from repro.core.membership import MembershipSchedule
+
+HEALTHY = "healthy"
+SUSPECT = "suspect"
+DEMOTED = "demoted"
+PROBATION = "probation"
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    """Tuning knobs for ``StragglerPolicy`` (defaults favor stability over
+    reaction speed; benchmarks/elastic_bench.py uses a snappier profile)."""
+
+    eps_floor_frac: float = 0.5   # demote below this fraction of live median
+    readmit_frac: float = 0.75    # re-admit at/above this fraction (hysteresis)
+    window_s: float = 1.0         # breach must persist this long to demote
+    probation_s: float = 1.0      # healthy probes must persist this long
+    min_active: int = 2           # never demote below this many live slots
+
+    def validate(self) -> "PolicyConfig":
+        if not 0.0 < self.eps_floor_frac <= 1.0:
+            raise ValueError(f"eps_floor_frac must be in (0, 1], "
+                             f"got {self.eps_floor_frac}")
+        if self.readmit_frac <= self.eps_floor_frac:
+            raise ValueError(
+                f"readmit_frac ({self.readmit_frac}) must be > "
+                f"eps_floor_frac ({self.eps_floor_frac}) — the hysteresis "
+                f"band is what stops a borderline slot from flapping")
+        if self.window_s <= 0 or self.probation_s < 0:
+            raise ValueError(f"need window_s > 0 and probation_s >= 0, got "
+                             f"window_s={self.window_s}, "
+                             f"probation_s={self.probation_s}")
+        if self.min_active < 1:
+            raise ValueError(f"min_active must be >= 1, got {self.min_active}")
+        return self
+
+
+@dataclass(frozen=True)
+class PolicyAction:
+    """One controller decision, with provenance for the membership log."""
+
+    kind: str  # "demote" | "readmit"
+    slot: int
+    reason: str
+
+
+@dataclass
+class _SlotState:
+    state: str = HEALTHY
+    since: float = 0.0  # entry time of a timed state (suspect/probation)
+    # the live median the slot was judged against when demoted: the
+    # re-admission bar when no OTHER eligible slot remains to compare
+    # against (health must be proven, never defaulted)
+    ref_eps: float = 0.0
+
+
+class StragglerPolicy:
+    """EPS-driven membership controller. Feed it per-slot rate observations
+    via ``observe``; it returns the demote/re-admit actions to apply.
+
+    Deterministic: actions depend only on the observation sequence (no
+    internal clocks — ``now`` is a caller-supplied timestamp, wall seconds
+    in the threaded runner, the iteration counter in ``StragglerSchedule``).
+    """
+
+    def __init__(self, config: Optional[PolicyConfig] = None,
+                 n_slots: int = 0):
+        self.config = (config or PolicyConfig()).validate()
+        if n_slots < 1:
+            raise ValueError(f"need n_slots >= 1, got {n_slots}")
+        self.n_slots = int(n_slots)
+        self._slots = [_SlotState() for _ in range(self.n_slots)]
+        # (now, slot, from_state, to_state) — observability + tests
+        self.transitions: List[Tuple[float, int, str, str]] = []
+
+    def demoted_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots)
+                if s.state in (DEMOTED, PROBATION)]
+
+    def state(self, slot: int) -> str:
+        return self._slots[slot].state
+
+    def _move(self, now: float, slot: int, to: str) -> None:
+        st = self._slots[slot]
+        self.transitions.append((now, slot, st.state, to))
+        st.state, st.since = to, now
+
+    def observe(self, now: float, eps_by_slot: Mapping[int, float],
+                active: Sequence[bool],
+                eligible: Optional[Sequence[bool]] = None,
+                ) -> List[PolicyAction]:
+        """One controller round.
+
+        ``active``: the membership mask (who is currently training AND
+        syncing). ``eligible``: slots with a live host behind them (the
+        threaded runner passes its thread-alive flags so a trainer that
+        simply FINISHED — whose rate decays to zero — is neither demoted
+        nor re-admitted); defaults to all-eligible.
+        """
+        cfg = self.config
+        if eligible is None:
+            eligible = [True] * self.n_slots
+        live = [i for i in range(self.n_slots)
+                if i < len(active) and active[i] and eligible[i]]
+        # The median's base is the live cohort PLUS our own demoted slots,
+        # so probation probes stay comparable to the cohort that demoted
+        # them. One straggler among R cannot drag the median: it is the
+        # middle, not the mean. (If the base ever degenerates to a demoted
+        # slot alone, re-admission falls back to that slot's demotion-time
+        # reference median — see below.)
+        base = [i for i in range(self.n_slots)
+                if eligible[i] and ((i < len(active) and active[i])
+                                    or self._slots[i].state in (DEMOTED,
+                                                                PROBATION))]
+        median = median_eps(eps_by_slot.get(i, 0.0) for i in base)
+        actions: List[PolicyAction] = []
+        if median <= 0.0:
+            return actions  # no signal yet (startup) — never act blind
+        floor = cfg.eps_floor_frac * median
+        n_live = len(live)
+
+        for slot in range(self.n_slots):
+            st = self._slots[slot]
+            eps = eps_by_slot.get(slot, 0.0)
+            if st.state in (HEALTHY, SUSPECT):
+                if slot not in live:
+                    # crashed / left / finished outside our control: forget
+                    # any suspicion, but the slot is not ours to re-admit
+                    if st.state == SUSPECT:
+                        self._move(now, slot, HEALTHY)
+                    continue
+                if eps >= floor:
+                    if st.state == SUSPECT:
+                        self._move(now, slot, HEALTHY)
+                    continue
+                if st.state == HEALTHY:
+                    self._move(now, slot, SUSPECT)
+                    continue
+                # suspect with the breach still in force
+                if now - st.since >= cfg.window_s and n_live > cfg.min_active:
+                    st.ref_eps = median  # the bar it must clear to return
+                    self._move(now, slot, DEMOTED)
+                    n_live -= 1
+                    actions.append(PolicyAction(
+                        "demote", slot,
+                        f"straggler: eps {eps:.0f} < "
+                        f"{cfg.eps_floor_frac:.2f} x live median {median:.0f} "
+                        f"for {cfg.window_s:g}s"))
+            else:  # DEMOTED | PROBATION — only slots WE demoted get here
+                if not eligible[slot]:
+                    continue  # host gone; hold state, never re-admit a ghost
+                # when no OTHER eligible slot remains, the median degenerates
+                # to this slot's own rate and any pace would pass — hold it
+                # to the median it was demoted against instead
+                ref = (median if any(i != slot for i in base)
+                       else st.ref_eps)
+                if ref <= 0.0 or eps < cfg.readmit_frac * ref:
+                    if st.state == PROBATION:
+                        self._move(now, slot, DEMOTED)
+                    continue
+                if st.state == DEMOTED:
+                    self._move(now, slot, PROBATION)
+                    continue
+                if now - st.since >= cfg.probation_s:
+                    self._move(now, slot, HEALTHY)
+                    actions.append(PolicyAction(
+                        "readmit", slot,
+                        f"probation passed: eps {eps:.0f} >= "
+                        f"{cfg.readmit_frac:.2f} x reference median "
+                        f"{ref:.0f} for {cfg.probation_s:g}s"))
+        return actions
+
+
+class StragglerSchedule(MembershipSchedule):
+    """Adapt a ``StragglerPolicy`` into the deterministic event source
+    ``HogwildSim`` already consumes (``events_at(t)``), so closed-loop
+    demotion/re-admission is reproducible in the simulator.
+
+    The per-slot rates come from ``rates(t, slot)`` — a scripted trace (the
+    sim itself is deterministic, so "slowness" must be declared, exactly
+    like ``FaultSpec`` declares crashes). The policy's clock is the
+    iteration counter: ``window_s`` / ``probation_s`` are read in
+    iterations here.
+
+    Events are generated lazily as the sim asks for each iteration and
+    cached, so re-reading an earlier iteration (or ``__iter__``) replays
+    rather than re-evaluating.
+    """
+
+    def __init__(self, policy: StragglerPolicy,
+                 rates: Callable[[int, int], float],
+                 *, start_active: Optional[Sequence[bool]] = None):
+        super().__init__([])
+        self.policy = policy
+        self.rates = rates
+        n = policy.n_slots
+        self._active = ([True] * n if start_active is None
+                        else [bool(b) for b in start_active])
+        if len(self._active) != n:
+            raise ValueError(f"start_active has {len(self._active)} slots, "
+                             f"policy has {n}")
+        self._emitted: Dict[int, List[Tuple[str, int, str]]] = {}
+        self._next_t = 0
+
+    def max_slot(self) -> int:
+        return self.policy.n_slots - 1
+
+    def events_at(self, t: int) -> List[Tuple[str, int, str]]:
+        # evaluate every iteration up to t exactly once (the sim calls with
+        # monotonically increasing t; a resumed run skips the gap in one go)
+        while self._next_t <= t:
+            tt = self._next_t
+            self._next_t += 1
+            eps = {s: float(self.rates(tt, s))
+                   for s in range(self.policy.n_slots)}
+            out: List[Tuple[str, int, str]] = []
+            for a in self.policy.observe(float(tt), eps, list(self._active)):
+                kind = "leave" if a.kind == "demote" else "join"
+                self._active[a.slot] = a.kind == "readmit"
+                out.append((kind, a.slot, a.reason))
+            if out:
+                self._emitted[tt] = out
+        return self._emitted.get(t, [])
+
+    def __iter__(self):
+        return iter((t, kind, slot)
+                    for t, evs in sorted(self._emitted.items())
+                    for kind, slot, _ in evs)
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._emitted.values())

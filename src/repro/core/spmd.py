@@ -13,8 +13,7 @@ roofline; cf. FR-EASGD's saturation in Fig 5).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ pytrees whose leaves carry a leading replica dimension R.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 

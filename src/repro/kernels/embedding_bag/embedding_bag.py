@@ -18,8 +18,6 @@ pooling, §3.1). Two grid strategies over the same semantics (DESIGN.md §7):
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -9,8 +9,6 @@ one compact pass out.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

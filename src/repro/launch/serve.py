@@ -18,7 +18,6 @@ import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_config, reduced
 from repro.core import spmd
-from repro.models import transformer, whisper
 
 
 def main():

@@ -5,8 +5,7 @@ Nothing here allocates: params/optimizer/cache structures come from
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -35,6 +35,7 @@ from repro.core import algorithms, spmd
 from repro.core.elp import elp
 from repro.core.membership import FaultSpec
 from repro.core.runners import HogwildSim, ThreadedShadowRunner
+from repro.core.scheduler import PolicyConfig, StragglerPolicy
 from repro.core.sync import SyncConfig
 
 
@@ -67,22 +68,39 @@ def run_dlrm(args) -> dict:
     print(f"DLRM {'tiny' if args.tiny else 'full'}: {cfg.n_sparse_features} sparse features, "
           f"{cfg.n_embedding_rows:,} embedding rows; "
           f"ELP = {elp(args.batch_size, args.threads, args.trainers):,}")
+    if args.auto_demote and not args.threaded:
+        raise SystemExit(
+            "--auto-demote requires --threaded: the deterministic sim has no "
+            "real pace to measure — script one with "
+            "core.scheduler.StragglerSchedule instead")
     if args.threaded:
         fault = FaultSpec(
             straggler_sleep_s=_parse_slot_map(args.straggler, float),
+            straggler_until=_parse_slot_map(args.straggler_until, int),
             crash_at=_parse_slot_map(args.crash_at, int),
             join_at=_parse_slot_map(args.join_at, int))
+        policy = None
+        if args.auto_demote:
+            # hysteresis: re-admission demands strictly more than marginal
+            # health (readmit_frac > eps_floor_frac, or the policy rejects
+            # the config as flap-prone) — readmit_frac may exceed 1.0,
+            # meaning "beat the live median"
+            policy = StragglerPolicy(PolicyConfig(
+                eps_floor_frac=args.eps_floor,
+                readmit_frac=max(args.eps_floor * 1.5, 0.75),
+                probation_s=args.probation), n_slots=args.trainers)
         runner = ThreadedShadowRunner(
             cfg, sync_cfg, n_trainers=args.trainers, batch_size=args.batch_size,
             optimizer=opt, seed=args.seed, sync_sleep_s=args.sync_sleep,
-            fault_spec=fault)
+            fault_spec=fault, straggler_policy=policy)
         out = runner.run(args.iters)
         print(f"EPS={out['eps']:.0f} (window {out['eps_window']:.0f})  "
               f"avg_sync_gap={out['avg_sync_gap']:.2f} "
               f"iters/trainer={out['iter_count']} "
               f"final train loss per trainer={[round(l,4) for l in out['train_loss']]}")
         if out["membership_events"]:
-            print("membership:", [(e.kind, e.slot) for e in out["membership_events"]])
+            print("membership:", [(e.kind, e.slot) + ((e.reason,) if e.reason else ())
+                                  for e in out["membership_events"]])
         return {k: v for k, v in out.items()
                 if k not in ("w", "emb_state", "membership_events")}
     sim = HogwildSim(cfg, sync_cfg, n_trainers=args.trainers, n_threads=args.threads,
@@ -182,6 +200,18 @@ def main():
                    help='threaded mid-run join: "slot:iter,..."')
     d.add_argument("--straggler", default=None,
                    help='threaded straggler sleep seconds: "slot:0.02,..."')
+    d.add_argument("--straggler-until", default=None,
+                   help='end of the straggler sleep, per slot local iteration:'
+                        ' "slot:40,..." (absent = degraded all run)')
+    d.add_argument("--auto-demote", action="store_true",
+                   help="closed-loop straggler controller (threaded only): "
+                        "demote a slot whose busy-clock EPS falls below "
+                        "--eps-floor x live median, re-admit after probation")
+    d.add_argument("--eps-floor", type=float, default=0.5,
+                   help="demotion floor as a fraction of the live median EPS")
+    d.add_argument("--probation", type=float, default=1.0,
+                   help="seconds a demoted slot must probe healthy before "
+                        "re-admission")
 
     l = sub.add_parser("lm")
     l.add_argument("--arch", choices=list(ARCH_IDS), default="minicpm-2b")

@@ -8,7 +8,7 @@ row scatter — exactly the trainer -> embedding-PS gradient flow of the paper.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ enough to compile 88-layer models for a 512-device mesh on one CPU core.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

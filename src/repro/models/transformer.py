@@ -10,7 +10,6 @@ Three entry points per model: full-sequence ``forward`` (train), ``prefill``
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -24,7 +23,6 @@ from repro.models.layers import (
     attention_apply,
     attention_decode,
     attention_init,
-    cross_entropy,
     dtype_of,
     embed_init,
     embed_lookup,

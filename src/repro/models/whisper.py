@@ -7,11 +7,10 @@ positions; noted as an adaptation in DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.configs.base import ArchConfig
 from repro.models.transformer import _mask_padded_logits, padded_vocab
@@ -21,7 +20,6 @@ from repro.models.layers import (
     attention_apply,
     attention_decode,
     attention_init,
-    cross_entropy,
     dtype_of,
     embed_init,
     embed_lookup,
@@ -174,7 +172,6 @@ def build_cross_cache(params: Params, cfg: ArchConfig, enc_out: jnp.ndarray) -> 
 
 def decode_step(params: Params, cfg: ArchConfig, cache: Any, token: jnp.ndarray,
                 pos: jnp.ndarray) -> Tuple[jnp.ndarray, Any]:
-    B = token.shape[0]
     x = embed_lookup(params["embed"], token[:, None])
     x = x + sinusoids_at(pos[None], cfg.d_model).astype(x.dtype)
 

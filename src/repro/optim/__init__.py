@@ -8,7 +8,6 @@ replicas use any of these.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax

@@ -13,8 +13,8 @@ factor cancels in the term.
 from __future__ import annotations
 
 import re
-from dataclasses import asdict, dataclass, field
-from typing import Dict, Optional
+from dataclasses import asdict, dataclass
+from typing import Dict
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

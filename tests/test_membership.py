@@ -506,9 +506,10 @@ class TestThreadedFaults:
         """The foreground baseline blocks at every sync point, so one
         straggler drags the WHOLE cohort; background shadow sync leaves the
         healthy trainers at full speed."""
-        # the sleep must dominate per-iteration compute on a loaded CI box,
-        # or CPU contention blurs the shadow-vs-foreground contrast
-        sleep = 0.12
+        # the sleep must dominate per-iteration compute on a loaded CI box
+        # (untraced first iterations here cost ~0.2-0.5 s), or CPU
+        # contention blurs the shadow-vs-foreground contrast
+        sleep = 0.6
         fault = FaultSpec(straggler_sleep_s={2: sleep})
         iters = 9
         sh = _threaded("shadow", fault, iters=iters)

@@ -1,6 +1,5 @@
 """Roofline analysis unit tests: HLO collective parsing + term math + the
 calibrated EPS throughput model's paper-claim checks."""
-import numpy as np
 import pytest
 
 from benchmarks.eps_model import ClusterModel

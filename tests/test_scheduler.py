@@ -1,0 +1,453 @@
+"""Closed-loop straggler scheduling (DESIGN.md §9): EPSMeter/SlotEPS edge
+cases the controller depends on, the StragglerPolicy state machine
+(healthy -> suspect -> demoted -> probation, hysteresis, quorum), the
+deterministic StragglerSchedule, and end-to-end demote/re-admit through both
+runners."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.core.elp import EPSMeter, SlotEPS, median_eps
+from repro.core.membership import FaultSpec
+from repro.core.runners import HogwildSim, ThreadedShadowRunner
+from repro.core.scheduler import (
+    DEMOTED, HEALTHY, PROBATION, SUSPECT,
+    PolicyAction, PolicyConfig, StragglerPolicy, StragglerSchedule,
+)
+from repro.core.sync import SyncConfig
+
+CFG = dlrm_ctr.tiny()
+
+
+class FakeClock:
+    def __init__(self, t=100.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# EPSMeter edge cases (satellite): the controller trusts these exactly
+# ---------------------------------------------------------------------------
+
+class TestEPSMeterEdges:
+    def test_empty_window_is_zero(self):
+        """All buckets aged out: the rate must be 0, not a stale positive."""
+        clk = FakeClock()
+        m = EPSMeter(window_s=1.0, clock=clk)
+        clk.t += 0.5
+        m.add(500)
+        clk.t += 100.0
+        assert m.eps == 0.0
+
+    def test_single_bucket(self):
+        clk = FakeClock()
+        m = EPSMeter(window_s=4.0, clock=clk)
+        clk.t += 2.0
+        m.add(100)  # partial window: rate over elapsed time, not window_s
+        assert m.eps == pytest.approx(50.0)
+
+    def test_eviction_exactness_at_cutoff(self):
+        """A bucket EXACTLY window_s old is kept (strictly-older evicts);
+        one epsilon older is gone. The controller's breach decisions sit
+        right on this boundary."""
+        clk = FakeClock()
+        m = EPSMeter(window_s=2.0, clock=clk)
+        clk.t = 110.0
+        m.add(10)
+        clk.t = 112.0  # bucket age == window_s exactly
+        assert m.eps == pytest.approx(10 / 2.0)
+        clk.t = 112.0000001
+        assert m.eps == 0.0
+
+    def test_eps_read_does_not_mutate(self):
+        """The controller reads concurrently with the trainer's add():
+        eps must be a pure read — expired buckets are filtered, not
+        evicted, so a racing reader can never drop a live bucket."""
+        clk = FakeClock()
+        m = EPSMeter(window_s=1.0, clock=clk)
+        clk.t += 0.5
+        m.add(10)
+        clk.t += 100.0
+        assert m.eps == 0.0
+        assert len(m._buckets) == 1  # still there; only add() evicts
+        m.add(20)
+        assert len(m._buckets) == 1  # add() evicted the stale one
+
+    @settings(max_examples=20)
+    @given(n=st.integers(min_value=1, max_value=10_000),
+           dt=st.floats(min_value=0.01, max_value=0.5))
+    def test_steady_rate_recovered(self, n, dt):
+        clk = FakeClock()
+        m = EPSMeter(window_s=2.0, clock=clk)
+        for _ in range(int(np.ceil(2.0 / dt)) + 5):
+            clk.t += dt
+            m.add(n)
+        # bucket quantization: at most one extra bucket rides the exact
+        # window edge, so the error bound is dt/window_s (<= 25% here)
+        assert m.eps == pytest.approx(n / dt, rel=0.3)
+
+
+class TestSlotEPS:
+    def test_busy_clock_isolates_barrier_waits(self):
+        """Two slots process the same examples; slot 1's busy clock
+        advances 4x slower (it spends the rest blocked). Busy-time EPS
+        must report slot 1 at 4x the rate — the wall is not its fault."""
+        bank = SlotEPS(2, window_s=10.0)
+        for _ in range(10):
+            bank.tick(0, 0.4)
+            bank.add(0, 40)
+            bank.tick(1, 0.1)
+            bank.add(1, 40)
+        assert bank.eps(0) == pytest.approx(100.0)
+        assert bank.eps(1) == pytest.approx(400.0)
+
+    def test_median_of_live_slots_excludes_dead(self):
+        """Dead slots (rate 0) must not drag the median the living are
+        judged against — the controller's base-set rule, stated on the
+        meter bank it reads."""
+        bank = SlotEPS(4, window_s=10.0)
+        for slot, rate in ((0, 100), (1, 120), (2, 48)):
+            bank.tick(slot, 1.0)
+            bank.add(slot, rate)
+        eps = bank.eps_by_slot()  # slot 3 is dead: never ticked, rate 0
+        live = [0, 1, 2]
+        assert median_eps(eps[i] for i in live) == pytest.approx(100.0)
+        # a naive median over all four would be dragged down to 74
+        assert median_eps(eps.values()) == pytest.approx(74.0)
+        # ...and the policy indeed excludes the dead slot from its base:
+        # 48 breaches 0.5 x 100 (live median) but would pass 0.5 x 74
+        p = _policy(n=4, min_active=1)
+        p.observe(0.0, eps, [True, True, True, False])
+        assert p.state(2) == SUSPECT
+        assert p.state(3) == HEALTHY  # dead slot never judged
+
+    @settings(max_examples=20)
+    @given(a=st.floats(min_value=0.0, max_value=1e6),
+           b=st.floats(min_value=0.0, max_value=1e6),
+           c=st.floats(min_value=0.0, max_value=1e6))
+    def test_median_is_the_middle(self, a, b, c):
+        vals = [a, b, c]
+        assert median_eps(vals) == sorted(vals)[1]
+
+    def test_median_even_and_empty(self):
+        assert median_eps([]) == 0.0
+        assert median_eps([4.0]) == 4.0
+        assert median_eps([1.0, 3.0]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy state machine
+# ---------------------------------------------------------------------------
+
+def _policy(n=3, **kw):
+    cfg = dict(eps_floor_frac=0.5, readmit_frac=0.75, window_s=2.0,
+               probation_s=2.0, min_active=2)
+    cfg.update(kw)
+    return StragglerPolicy(PolicyConfig(**cfg), n_slots=n)
+
+
+ACTIVE3 = [True, True, True]
+
+
+class TestPolicyConfig:
+    def test_validation(self):
+        PolicyConfig().validate()
+        with pytest.raises(ValueError, match="eps_floor_frac"):
+            PolicyConfig(eps_floor_frac=0.0).validate()
+        with pytest.raises(ValueError, match="hysteresis"):
+            PolicyConfig(eps_floor_frac=0.6, readmit_frac=0.5).validate()
+        with pytest.raises(ValueError, match="window_s"):
+            PolicyConfig(window_s=0.0).validate()
+        with pytest.raises(ValueError, match="min_active"):
+            PolicyConfig(min_active=0).validate()
+        with pytest.raises(ValueError, match="n_slots"):
+            StragglerPolicy(PolicyConfig(), n_slots=0)
+
+    def test_runner_rejects_slot_mismatch(self):
+        with pytest.raises(ValueError, match="slots"):
+            ThreadedShadowRunner(
+                CFG, SyncConfig(), n_trainers=3, batch_size=8,
+                optimizer=optim.adagrad(0.02), straggler_policy=_policy(n=2))
+
+
+class TestStragglerPolicy:
+    def test_single_dip_never_demotes(self):
+        p = _policy()
+        assert p.observe(0.0, {0: 100, 1: 100, 2: 10}, ACTIVE3) == []
+        assert p.state(2) == SUSPECT
+        # recovery clears the suspicion
+        assert p.observe(1.0, {0: 100, 1: 100, 2: 90}, ACTIVE3) == []
+        assert p.state(2) == HEALTHY
+
+    def test_sustained_breach_demotes_with_provenance(self):
+        p = _policy()
+        p.observe(0.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        assert p.observe(1.0, {0: 100, 1: 100, 2: 10}, ACTIVE3) == []
+        acts = p.observe(2.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        assert acts == [PolicyAction("demote", 2, acts[0].reason)]
+        assert "straggler" in acts[0].reason and "median" in acts[0].reason
+        assert p.state(2) == DEMOTED
+
+    def test_never_acts_blind(self):
+        p = _policy()
+        for t in range(10):
+            assert p.observe(float(t), {0: 0.0, 1: 0.0, 2: 0.0}, ACTIVE3) == []
+        assert p.state(2) == HEALTHY
+
+    def test_quorum_floor(self):
+        """min_active=2 with a 2-slot cohort: the controller must tolerate
+        the straggler rather than demote below quorum."""
+        p = _policy(n=2)
+        active = [True, True]
+        for t in range(10):
+            assert p.observe(float(t), {0: 100, 1: 1}, active) == []
+        assert p.state(1) == SUSPECT  # watched, but never demoted
+
+    def test_readmit_after_probation(self):
+        p = _policy()
+        p.observe(0.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        p.observe(2.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        assert p.state(2) == DEMOTED
+        down = [True, True, False]
+        # still slow: stays demoted
+        p.observe(3.0, {0: 100, 1: 100, 2: 20}, down)
+        assert p.state(2) == DEMOTED
+        # healthy probes start the probation clock
+        p.observe(4.0, {0: 100, 1: 100, 2: 95}, down)
+        assert p.state(2) == PROBATION
+        acts = p.observe(6.0, {0: 100, 1: 100, 2: 95}, down)
+        assert [(a.kind, a.slot) for a in acts] == [("readmit", 2)]
+        assert "probation" in acts[0].reason
+        assert p.state(2) == HEALTHY
+
+    def test_probation_resets_on_relapse(self):
+        p = _policy()
+        p.observe(0.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        p.observe(2.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        down = [True, True, False]
+        p.observe(3.0, {0: 100, 1: 100, 2: 95}, down)
+        assert p.state(2) == PROBATION
+        p.observe(4.0, {0: 100, 1: 100, 2: 10}, down)  # relapse
+        assert p.state(2) == DEMOTED
+        p.observe(5.0, {0: 100, 1: 100, 2: 95}, down)
+        # probation restarted: 2s from t=5, not from t=3
+        assert p.observe(6.0, {0: 100, 1: 100, 2: 95}, down) == []
+        acts = p.observe(7.0, {0: 100, 1: 100, 2: 95}, down)
+        assert [(a.kind, a.slot) for a in acts] == [("readmit", 2)]
+
+    def test_hysteresis_parks_borderline_slot(self):
+        """A slot at 60% of median is above the demotion floor (50%) but
+        below the re-admission bar (75%): once demoted it must PARK, not
+        flap through leave/join cycles."""
+        p = _policy()
+        p.observe(0.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        p.observe(2.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        down = [True, True, False]
+        for t in range(3, 30):
+            assert p.observe(float(t), {0: 100, 1: 100, 2: 60}, down) == []
+        assert p.state(2) == DEMOTED
+
+    def test_crashed_slot_is_not_ours_to_readmit(self):
+        """A slot that died outside the policy (crash/leave) must never be
+        re-admitted by it — the fault harness owns that lifecycle."""
+        p = _policy()
+        p.observe(0.0, {0: 100, 1: 100, 2: 100}, ACTIVE3)
+        crashed = [True, True, False]  # slot 2 crashed, policy never demoted
+        for t in range(1, 10):
+            assert p.observe(float(t), {0: 100, 1: 100, 2: 500}, crashed) == []
+        assert p.state(2) == HEALTHY
+
+    def test_lone_demoted_slot_judged_against_demotion_reference(self):
+        """When every other eligible slot is gone, the median degenerates to
+        the demoted slot's own rate — re-admission must fall back to the
+        median it was demoted against, so a still-degraded slot can never
+        pass probation by being compared to itself."""
+        p = _policy()
+        p.observe(0.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        p.observe(2.0, {0: 100, 1: 100, 2: 10}, ACTIVE3)
+        assert p.state(2) == DEMOTED
+        down = [True, True, False]
+        gone = [False, False, True]  # slots 0/1 finished: only 2 eligible
+        for t in range(3, 10):  # still degraded: must NOT pass probation
+            assert p.observe(float(t), {2: 10.0}, down, gone) == []
+        assert p.state(2) == DEMOTED
+        # genuinely recovered vs the demotion-time median (100): re-admitted
+        p.observe(10.0, {2: 95.0}, down, gone)
+        assert p.state(2) == PROBATION
+        acts = p.observe(12.0, {2: 95.0}, down, gone)
+        assert [(a.kind, a.slot) for a in acts] == [("readmit", 2)]
+        assert "reference median" in acts[0].reason
+
+    def test_finished_slot_is_not_a_straggler(self):
+        """eligible=False (thread exited): its decayed-to-zero rate must
+        not read as degradation."""
+        p = _policy()
+        eligible = [True, True, False]
+        for t in range(10):
+            acts = p.observe(float(t), {0: 100, 1: 100, 2: 0.0}, ACTIVE3,
+                             eligible)
+            assert acts == []
+        assert p.state(2) == HEALTHY
+
+    def test_multiple_stragglers_stop_at_quorum(self):
+        p = _policy(n=4, min_active=2)
+        active = [True] * 4
+        eps = {0: 100, 1: 100, 2: 5, 3: 5}
+        p.observe(0.0, eps, active)
+        acts = p.observe(2.0, eps, active)
+        # both breached a full window, but only TWO may leave... n_live=4,
+        # min_active=2 -> exactly 2 demotions, never a third
+        assert [a.kind for a in acts] == ["demote", "demote"]
+        p2 = _policy(n=4, min_active=3)
+        p2.observe(0.0, eps, active)
+        acts2 = p2.observe(2.0, eps, active)
+        assert len(acts2) == 1  # quorum 3: only one slot may leave
+
+
+# ---------------------------------------------------------------------------
+# StragglerSchedule: the deterministic sim-side event source
+# ---------------------------------------------------------------------------
+
+def _rates(t, s):
+    if s == 2 and t < 12:
+        return 20.0
+    return 100.0
+
+
+def _sched(**kw):
+    pol = _policy(window_s=3, probation_s=2, **kw)
+    return StragglerSchedule(pol, _rates)
+
+
+class TestStragglerSchedule:
+    def test_emits_leave_then_join_with_provenance(self):
+        s = _sched()
+        stream = {t: s.events_at(t) for t in range(20)}
+        emitted = [(t, kind, slot) for t, evs in stream.items()
+                   for kind, slot, _ in evs]
+        assert emitted == [(3, "leave", 2), (14, "join", 2)]
+        assert "straggler" in stream[3][0][2]
+        assert "probation" in stream[14][0][2]
+
+    def test_deterministic_replay(self):
+        a, b = _sched(), _sched()
+        ev_a = [a.events_at(t) for t in range(20)]
+        ev_b = [b.events_at(t) for t in range(20)]
+        assert ev_a == ev_b
+        # re-reading an earlier iteration replays the cache, not the policy
+        assert a.events_at(3) == ev_a[3]
+        assert len(a) == 2
+
+    def test_skipped_iterations_are_still_evaluated(self):
+        """A resumed run jumps events_at from 0 to t: every intermediate
+        iteration must be fed to the policy exactly once."""
+        s = _sched()
+        assert s.events_at(19) == []  # evaluates 0..19 internally
+        assert [kind for _, kind, _ in s] == ["leave", "join"]
+
+    def test_start_active_length_checked(self):
+        with pytest.raises(ValueError, match="slots"):
+            StragglerSchedule(_policy(), _rates, start_active=[True])
+
+
+# ---------------------------------------------------------------------------
+# HogwildSim integration: closed loop, reproducible, engine-agnostic
+# ---------------------------------------------------------------------------
+
+_SIM_RUNS = {}
+
+
+class TestSimClosedLoop:
+    def _run(self, engine):
+        if engine not in _SIM_RUNS:
+            sched = _sched()
+            sim = HogwildSim(
+                CFG, SyncConfig(algo="easgd", alpha=0.5, gap=3, engine=engine),
+                n_trainers=3, n_threads=2, batch_size=16,
+                optimizer=optim.adagrad(0.02), schedule=sched)
+            _SIM_RUNS[engine] = sim.run(20)
+        return _SIM_RUNS[engine]
+
+    @pytest.mark.parametrize("engine", ["flat", "pytree"])
+    def test_demote_readmit_cycle(self, engine):
+        out = self._run(engine)
+        evs = [(e.kind, e.slot) for e in out["membership_events"]]
+        assert evs == [("leave", 2), ("join", 2), ("activate", 2)]
+        leave = out["membership_events"][0]
+        assert "straggler" in leave.reason  # demotion provenance
+        assert np.isfinite(out["train_loss"][-1])
+
+    def test_flat_pytree_parity_under_policy(self):
+        """The controller's membership churn must not open a gap between
+        the fused-kernel landing and the pytree oracle."""
+        a, b = self._run("flat"), self._run("pytree")
+        assert [(e.kind, e.slot) for e in a["membership_events"]] == \
+               [(e.kind, e.slot) for e in b["membership_events"]]
+        np.testing.assert_allclose(a["train_loss"], b["train_loss"],
+                                   rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ThreadedShadowRunner integration: the real-time loop
+# ---------------------------------------------------------------------------
+
+def _threaded_auto(mode, iters=300, sleep=0.5, until=4):
+    # margins matter on a loaded box: the straggler must straggle long
+    # enough to be demoted (sleep dominates compute), then run long enough
+    # after recovery for its meter to refill (eps_window_s of BUSY time) and
+    # the probation to pass BEFORE it exhausts its iteration budget
+    policy = StragglerPolicy(
+        PolicyConfig(eps_floor_frac=0.5, readmit_frac=0.75, window_s=0.2,
+                     probation_s=0.1, min_active=2), n_slots=3)
+    runner = ThreadedShadowRunner(
+        CFG, SyncConfig(algo="easgd", alpha=0.5, mode=mode, gap=3),
+        n_trainers=3, batch_size=32, optimizer=optim.adagrad(0.02),
+        sync_sleep_s=0.01, eps_window_s=0.25,
+        fault_spec=FaultSpec(straggler_sleep_s={2: sleep},
+                             straggler_until={2: until}),
+        straggler_policy=policy)
+    runner.warmup()  # keep tracing out of the controller's detection window
+    return runner.run(iters)
+
+
+class TestThreadedClosedLoop:
+    @pytest.mark.parametrize("mode", ["shadow", "fixed_rate"])
+    def test_demote_readmit_cycle(self, mode):
+        """The controller must demote the transient straggler (sleep
+        dominates compute by construction) and re-admit it once the
+        degradation ends — the run completes every iteration either way."""
+        out = _threaded_auto(mode)
+        assert out["iter_count"] == [300, 300, 300]
+        kinds = [(e.kind, e.slot) for e in out["membership_events"]]
+        assert kinds[:3] == [("leave", 2), ("join", 2), ("activate", 2)]
+        leave = out["membership_events"][0]
+        assert "straggler" in leave.reason
+        assert all(np.isfinite(loss) for loss in out["train_loss"])
+        # busy-clock meters: the straggler's intrinsic pace reads below the
+        # healthy slots' even in fixed_rate, where WALL pace equalizes at
+        # the barrier (the slept prefix is in its busy time)
+        busy = out["per_trainer_eps_busy"]
+        assert busy[2] < min(busy[0], busy[1])
+
+    def test_straggler_until_restores_pace(self):
+        """FaultSpec.straggler_until alone (no policy): the sleep stops at
+        the bound. The slot's extra busy time over its healthy peer is the
+        slept prefix (~until x sleep), nowhere near a run-long sleep."""
+        runner = ThreadedShadowRunner(
+            CFG, SyncConfig(algo="easgd", alpha=0.5, mode="shadow", gap=3),
+            n_trainers=2, batch_size=32, optimizer=optim.adagrad(0.02),
+            fault_spec=FaultSpec(straggler_sleep_s={1: 0.3},
+                                 straggler_until={1: 3}))
+        runner.warmup()
+        out = runner.run(20)
+        assert out["iter_count"] == [20, 20]
+        slept = runner.slot_eps.busy(1) - runner.slot_eps.busy(0)
+        assert 3 * 0.3 * 0.8 <= slept <= 3 * 0.3 + 2.0  # 20 x 0.3 would be 6s
+
+    def test_straggler_until_requires_sleep(self):
+        with pytest.raises(ValueError, match="straggler_until"):
+            FaultSpec(straggler_until={1: 3}).validate(2)

@@ -1,5 +1,4 @@
 """Substrate tests: optimizers, data pipeline, embeddings, checkpoint."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -7,6 +7,19 @@ import os
 import random
 import sys
 
+
+def pytest_configure(config):
+    # The threaded suites pin per-test wall ceilings with
+    # ``pytest.mark.timeout`` so a deadlocked barrier/join fails fast
+    # instead of eating the whole CI job timeout. pytest-timeout (pinned in
+    # requirements-ci.txt) enforces them; when it is absent the marker must
+    # still be registered or ``--strict-markers``/warnings choke on it.
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test wall-clock ceiling "
+        "(enforced by pytest-timeout when installed)",
+    )
+
 _ROOT = os.path.dirname(os.path.abspath(__file__))
 for p in (_ROOT, os.path.join(_ROOT, "src")):
     if p not in sys.path:

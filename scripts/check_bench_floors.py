@@ -15,7 +15,16 @@ repo's benchmarks exist to defend:
   - with the closed-loop controller on (``straggler_auto``), the fixed_rate
     cohort ALSO recovers to >= 85% — the controller demotes the straggler
     out of the barrier within its detection window and the event log shows
-    the full ``leave -> join -> activate`` cycle with demotion provenance.
+    the full ``leave -> join -> activate`` cycle with demotion provenance;
+  - chaos floors (DESIGN.md §10): ``sync_crash`` must show the supervisor
+    detecting the dead shadow thread and restarting it within the committed
+    recovery deadline, with sync_count STRICTLY increasing afterwards (a
+    silently dead sync engine degenerates to unsynchronized Hogwild — the
+    exact failure this PR exists to catch); ``ps_fail`` must show the failed
+    embedding PS rehydrating from its background snapshot, the healthy
+    cohort's throughput retained while it was down, and the final embedding
+    table within the committed bounded-staleness distance of the span-
+    matched no-fault oracle.
 
 Stream-ratio floors are analytic (byte counts, machine-independent); the
 elastic floors are wall-clock ratios of equal-length runs, which is why
@@ -40,6 +49,23 @@ EMB_STREAM_RATIO_MIN_TINY = 3.5
 SHADOW_STRAGGLER_RETENTION_MIN = 0.85
 AUTO_RETENTION_MIN = 0.85
 AUTO_DEMOTE_WALL_MAX_S = 2.5
+# Chaos floors (DESIGN.md §10). Recovery deadline: crash at shadow round ~2
+# (well under 1s in), death detection is one supervisor check interval, the
+# first restart backoff is 50 ms — 2.5 s is an order of magnitude of slack
+# for a loaded CI box. Final-state parity is floored on the Adagrad
+# accumulator mass ratio: acc is a monotone, near-deterministic meter of
+# landed update energy (run-to-run Hogwild interleaving moves it ~3%;
+# measured 1.03 on this config), while a PS quietly serving its quarter-way
+# snapshot forever drags it to ~0.8 — 0.9 separates with margin on both
+# sides. The raw table's Frobenius rel err CANNOT make that call (measured
+# ~0.35 for a healthy recovery AND for the catastrophic rollback — pure
+# interleaving noise), so it is kept only as a loose ceiling against
+# outright divergence or NaN.
+SYNC_RESTART_WALL_MAX_S = 2.5
+SYNC_CRASH_RETENTION_MIN = 0.80
+PS_FAIL_RETENTION_MIN = 0.75
+PS_FAIL_EMB_PROGRESS_MIN = 0.9
+PS_FAIL_EMB_REL_ERR_MAX = 0.6
 
 
 class Floors:
@@ -99,16 +125,102 @@ def _check_auto_events(mode: str, row: dict, slot: int, fl: Floors) -> None:
     )
 
 
+def _check_sync_crash(row: dict, fl: Floors) -> None:
+    fl.check(
+        row.get("sync_restarts", 0) >= 1,
+        f"elastic/shadow/sync_crash: supervisor restarted the dead sync "
+        f"thread ({row.get('sync_restarts')} restart(s))",
+    )
+    post = row.get("post_restart_syncs", 0)
+    fl.check(
+        post >= 1,
+        f"elastic/shadow/sync_crash: sync_count strictly increased after "
+        f"restart (+{post} syncs — a dead sync engine is unsynchronized "
+        f"Hogwild otherwise)",
+    )
+    wall = row.get("restart_wall_s")
+    fl.check(
+        wall is not None and wall <= SYNC_RESTART_WALL_MAX_S,
+        f"elastic/shadow/sync_crash: detected + restarted in {wall}s "
+        f"(<= {SYNC_RESTART_WALL_MAX_S}s recovery deadline)",
+    )
+    fl.check(
+        not row.get("sync_degraded", False),
+        "elastic/shadow/sync_crash: one crash never exhausts the restart "
+        "budget",
+    )
+    ret = row.get("healthy_retention", 0.0)
+    fl.check(
+        ret >= SYNC_CRASH_RETENTION_MIN,
+        f"elastic/shadow/sync_crash: healthy retention {ret:.2f} >= "
+        f"{SYNC_CRASH_RETENTION_MIN} (training never blocks on the sync "
+        f"engine, dead or alive)",
+    )
+
+
+def _check_ps_fail(mode: str, row: dict, ps_recover_s: float,
+                   fl: Floors) -> None:
+    kinds = [e[0] for e in (row.get("shard_events") or [])]
+    fl.check(
+        kinds.count("ps_fail") >= 1 and kinds.count("ps_recover") >= 1,
+        f"elastic/{mode}/ps_fail: shard failed and rehydrated from snapshot "
+        f"(events: {kinds})",
+    )
+    down = row.get("ps_down_s")
+    fl.check(
+        down is not None and down <= ps_recover_s + 2.0,
+        f"elastic/{mode}/ps_fail: shard back within {down}s "
+        f"(<= provisioning delay {ps_recover_s}s + 2s slack)",
+    )
+    stale = sum(row.get("stale_lookups") or [0])
+    fl.check(
+        stale >= 1,
+        f"elastic/{mode}/ps_fail: snapshot served {stale} bounded-staleness "
+        f"lookups while the shard was down (trainers never blocked)",
+    )
+    ret = row.get("healthy_retention", 0.0)
+    fl.check(
+        ret >= PS_FAIL_RETENTION_MIN,
+        f"elastic/{mode}/ps_fail: healthy retention {ret:.2f} >= "
+        f"{PS_FAIL_RETENTION_MIN} (retry-then-drop beats blocking)",
+    )
+    prog = row.get("emb_progress_ratio")
+    fl.check(
+        prog is not None and prog >= PS_FAIL_EMB_PROGRESS_MIN,
+        f"elastic/{mode}/ps_fail: Adagrad acc mass ratio "
+        f"{prog if prog is None else round(prog, 4)} >= "
+        f"{PS_FAIL_EMB_PROGRESS_MIN} vs the no-fault oracle (the bounded-"
+        f"staleness parity bound: a never-rehydrated snapshot measures ~0.8)",
+    )
+    err = row.get("emb_rel_err")
+    fl.check(
+        err is not None and err <= PS_FAIL_EMB_REL_ERR_MAX,
+        f"elastic/{mode}/ps_fail: table rel err "
+        f"{err if err is None else round(err, 5)} <= "
+        f"{PS_FAIL_EMB_REL_ERR_MAX} (divergence/NaN sanity ceiling; "
+        f"~0.35 of Hogwild interleaving noise is expected)",
+    )
+
+
 def check_elastic(d: dict, fl: Floors) -> None:
     results = d["results"]
     slot = d["config"]["R"] - 1
+    ps_recover_s = (d["config"].get("chaos") or {}).get("ps_recover_s", 0.3)
     for mode in ("shadow", "fixed_rate"):
         scenarios = set(results[mode])
+        want = {"no_fault", "no_fault_ref", "straggler", "crash",
+                "straggler_auto", "ps_fail"}
+        if mode == "shadow":
+            want |= {"sync_crash"}
         fl.check(
-            {"no_fault", "no_fault_ref", "straggler", "crash", "straggler_auto"}
-            <= scenarios,
-            f"elastic/{mode}: all five scenarios present",
+            want <= scenarios,
+            f"elastic/{mode}: all scenarios present (missing: "
+            f"{sorted(want - scenarios)})",
         )
+    _check_sync_crash(results["shadow"].get("sync_crash") or {}, fl)
+    for mode in ("shadow", "fixed_rate"):
+        _check_ps_fail(mode, results[mode].get("ps_fail") or {},
+                       ps_recover_s, fl)
     ret = results["shadow"]["straggler"]["healthy_retention"]
     fl.check(
         ret >= SHADOW_STRAGGLER_RETENTION_MIN,

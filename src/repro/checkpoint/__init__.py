@@ -5,6 +5,19 @@ state, opaque sync-algorithm state, step counter) so a ShadowSync run can
 resume mid-stream — the one-pass constraint makes resumability a hard
 requirement in production.
 
+Crash safety (DESIGN.md §10.4): ``save`` is atomic against the failure the
+supervision PR injects everywhere else — a process dying mid-write. Each save
+lands as a new *generation* directory ``<path>/gen-NNNNNN``: the arrays and
+manifest are written to a hidden temp directory, fsynced leaf-by-leaf, and
+published with a single ``os.replace`` — a reader never observes a torn
+generation. The manifest records a CRC32 per stored array; ``restore``
+verifies every leaf it loads and, when bit-rot or truncation is detected,
+falls back to the newest *intact* generation (``save`` keeps the last
+``keep`` of them) with a warning naming the corrupt leaf. Only when every
+generation is corrupt does restore raise — again naming the first corrupt
+leaf, so the operator knows *what* died, not just that something did. The
+pre-PR-6 flat layout (``<path>/manifest.json``) still restores.
+
 Elastic restore (DESIGN.md §8.5): ``restore_elastic`` resizes leaves whose
 shapes differ ONLY in the leading (replica) axis, so a run saved at ``R=4``
 can resume at ``R=6`` — the runner then bootstraps each genuinely new slot
@@ -15,13 +28,26 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Callable, Dict, Optional, Tuple
+import shutil
+import warnings
+import zipfile
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _SEP = "/"
+_GEN_PREFIX = "gen-"
+
+
+class CheckpointCorruptError(ValueError):
+    """A checkpoint generation failed integrity verification (CRC32 mismatch,
+    truncated archive, unreadable manifest). Distinct from the plain
+    ``ValueError`` a template/shape mismatch raises, because ONLY corruption
+    may trigger fallback to an older generation — falling back on a shape
+    mismatch would mask a caller bug with stale weights."""
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -41,11 +67,69 @@ def _key_str(p) -> str:
     return str(p)
 
 
-def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None) -> None:
+# -- generation layout --------------------------------------------------------
+
+def _gen_dirs(path: str) -> List[Tuple[int, str]]:
+    """(generation, dir) pairs under ``path``, newest first."""
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for name in os.listdir(path):
+        if not name.startswith(_GEN_PREFIX):
+            continue
+        try:
+            g = int(name[len(_GEN_PREFIX):])
+        except ValueError:
+            continue
+        out.append((g, os.path.join(path, name)))
+    return sorted(out, reverse=True)
+
+
+def _read_candidates(path: str) -> List[str]:
+    """Checkpoint dirs to try, newest generation first. The legacy flat
+    layout (manifest directly under ``path``) is the final fallback."""
+    cands = [d for _, d in _gen_dirs(path)]
+    if os.path.exists(os.path.join(path, "manifest.json")):
+        cands.append(path)
+    if not cands:
+        raise FileNotFoundError(
+            f"no checkpoint at {path!r}: neither {_GEN_PREFIX}* generations "
+            f"nor a flat manifest.json")
+    return cands
+
+
+def _fsync_file(fp: str) -> None:
+    with open(fp, "rb") as f:
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(d: str) -> None:
+    fd = os.open(d, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None,
+         *, keep: int = 2) -> None:
+    """Crash-safe generational save (see module docstring): temp dir ->
+    fsync -> one atomic ``os.replace`` publish; the last ``keep``
+    generations are retained as corruption fallbacks."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
     os.makedirs(path, exist_ok=True)
+    gens = _gen_dirs(path)
+    next_gen = gens[0][0] + 1 if gens else 0
+    final = os.path.join(path, f"{_GEN_PREFIX}{next_gen:06d}")
+    tmp = os.path.join(path, f".tmp-{_GEN_PREFIX}{next_gen:06d}")
+    if os.path.exists(tmp):  # debris of a previous crashed save
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
     flat = _flatten(tree)
     # bf16 isn't npz-native: store raw bits + dtype tag.
-    arrays, dtypes = {}, {}
+    arrays, dtypes, crcs = {}, {}, {}
     for k, v in flat.items():
         if v.dtype == jnp.bfloat16:
             arrays[k] = v.view(np.uint16)
@@ -53,19 +137,46 @@ def save(path: str, tree: Any, metadata: Dict[str, Any] | None = None) -> None:
         else:
             arrays[k] = v
             dtypes[k] = str(v.dtype)
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+        # integrity is checked on the STORED bytes (post bf16 view)
+        crcs[k] = zlib.crc32(np.ascontiguousarray(arrays[k]).tobytes())
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     treedef = jax.tree_util.tree_structure(tree)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(
-            {"treedef": str(treedef), "dtypes": dtypes, "metadata": metadata or {}}, f
-        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "dtypes": dtypes,
+                   "crc32": crcs, "metadata": metadata or {}}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_file(os.path.join(tmp, "arrays.npz"))
+    _fsync_dir(tmp)
+    # the publish: a crash before this line leaves only an ignored .tmp-*;
+    # a crash after it leaves a fully durable generation
+    os.replace(tmp, final)
+    _fsync_dir(path)
+    for _, old in _gen_dirs(path)[keep:]:
+        shutil.rmtree(old, ignore_errors=True)
 
 
-def read_metadata(path: str) -> Dict[str, Any]:
-    """The manifest metadata alone — cheap pre-flight checks (engine/algo
-    compatibility) before any array is loaded."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        return json.load(f)["metadata"]
+def generations(path: str) -> List[str]:
+    """Generation directories under ``path``, newest first (observability +
+    tests; empty for a legacy flat checkpoint)."""
+    return [d for _, d in _gen_dirs(path)]
+
+
+# -- reading ------------------------------------------------------------------
+
+def _open_gen(d: str) -> Tuple[Any, Dict[str, Any]]:
+    """Load (npz handle, manifest) for one generation, mapping every
+    truncation/unreadable-archive failure to ``CheckpointCorruptError``."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+    except (json.JSONDecodeError, zipfile.BadZipFile, EOFError,
+            OSError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint generation at {d!r} is unreadable "
+            f"({type(e).__name__}: {e})") from e
+    return data, manifest
 
 
 def _load_leaf(data, manifest, key: str, path: str) -> np.ndarray:
@@ -75,29 +186,72 @@ def _load_leaf(data, manifest, key: str, path: str) -> np.ndarray:
             f"checkpoint at {path!r} has no leaf {key!r} required by the "
             f"restore template (checkpoint leaves include: {have}"
             f"{', ...' if len(data.files) > 8 else ''})")
-    arr = data[key]
+    try:
+        arr = data[key]
+    except (zipfile.BadZipFile, zlib.error, EOFError, OSError) as e:
+        raise CheckpointCorruptError(
+            f"corrupt leaf {key!r} in checkpoint at {path!r}: undecodable "
+            f"({type(e).__name__}: {e})") from e
+    want_crc = manifest.get("crc32", {}).get(key)  # legacy manifests: absent
+    if want_crc is not None:
+        got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if got != want_crc:
+            raise CheckpointCorruptError(
+                f"corrupt leaf {key!r} in checkpoint at {path!r}: crc32 "
+                f"mismatch (manifest {want_crc:#010x}, stored bytes "
+                f"{got:#010x})")
     if manifest["dtypes"].get(key) == "bfloat16":
         arr = arr.view(jnp.bfloat16)
     return arr
 
 
+def _with_fallback(path: str, fn: Callable[[str], Any]) -> Any:
+    """Run ``fn(gen_dir)`` against the newest generation, falling back to
+    older intact generations ONLY on ``CheckpointCorruptError``."""
+    cands = _read_candidates(path)
+    first_err: Optional[CheckpointCorruptError] = None
+    for i, d in enumerate(cands):
+        try:
+            return fn(d)
+        except CheckpointCorruptError as e:
+            first_err = first_err or e
+            if i + 1 < len(cands):
+                warnings.warn(
+                    f"{e}; falling back to older generation "
+                    f"{cands[i + 1]!r}", RuntimeWarning)
+    raise CheckpointCorruptError(
+        f"every generation of the checkpoint at {path!r} is corrupt; "
+        f"first failure: {first_err}") from first_err
+
+
+def read_metadata(path: str) -> Dict[str, Any]:
+    """The manifest metadata alone — cheap pre-flight checks (engine/algo
+    compatibility) before any array is loaded."""
+    return _with_fallback(path, lambda d: _open_gen(d)[1]["metadata"])
+
+
 def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
     """Restore into the structure of ``like`` (shapes/dtypes must match).
 
-    Raises ``ValueError`` naming the offending leaf when a leaf is missing
-    from the checkpoint or its shape disagrees with the template.
+    Every loaded leaf is CRC-verified; a corrupt generation falls back to
+    the newest intact one (warning names the corrupt leaf). Raises
+    ``ValueError`` naming the offending leaf when a leaf is missing from the
+    checkpoint or its shape disagrees with the template, and
+    ``CheckpointCorruptError`` when no intact generation remains.
     """
-    data = np.load(os.path.join(path, "arrays.npz"))
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    return _with_fallback(path, lambda d: _restore_one(d, like))
+
+
+def _restore_one(d: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
+    data, manifest = _open_gen(d)
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for pathk, leaf in flat_like:
         key = _SEP.join(_key_str(p) for p in pathk)
-        arr = _load_leaf(data, manifest, key, path)
+        arr = _load_leaf(data, manifest, key, d)
         if arr.shape != tuple(leaf.shape):
             raise ValueError(
-                f"shape mismatch restoring leaf {key!r} from {path!r}: "
+                f"shape mismatch restoring leaf {key!r} from {d!r}: "
                 f"checkpoint has {tuple(arr.shape)}, template expects "
                 f"{tuple(leaf.shape)} (use restore_elastic for replica-axis "
                 f"resizes)")
@@ -133,14 +287,19 @@ def restore_elastic(path: str, like: Any, *,
     silently mean-filled (see ``HogwildSim.load_state``). ``None`` permits
     every leaf.
     """
-    data = np.load(os.path.join(path, "arrays.npz"))
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    return _with_fallback(
+        path, lambda d: _restore_elastic_one(d, like, may_resize))
+
+
+def _restore_elastic_one(d: str, like: Any,
+                         may_resize: Optional[Callable[[str], bool]]
+                         ) -> Tuple[Any, Dict[str, Any], Dict[str, Tuple]]:
+    data, manifest = _open_gen(d)
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves, resized = [], {}
     for pathk, leaf in flat_like:
         key = _SEP.join(_key_str(p) for p in pathk)
-        arr = _load_leaf(data, manifest, key, path)
+        arr = _load_leaf(data, manifest, key, d)
         want = tuple(leaf.shape)
         if arr.shape != want:
             allowed = may_resize is None or may_resize(key)
@@ -148,7 +307,7 @@ def restore_elastic(path: str, like: Any, *,
                           and arr.shape[1:] == want[1:])
             if not elastic_ok:
                 raise ValueError(
-                    f"shape mismatch restoring leaf {key!r} from {path!r}: "
+                    f"shape mismatch restoring leaf {key!r} from {d!r}: "
                     f"checkpoint has {tuple(arr.shape)}, template expects "
                     f"{want}; only the leading (replica) axis of a "
                     f"replica-stacked leaf may differ")

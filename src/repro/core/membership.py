@@ -25,12 +25,20 @@ is the one place that truth lives:
   for reproducible elasticity experiments in ``HogwildSim``.
 
 * ``FaultSpec`` — the ThreadedShadowRunner fault-injection harness config:
-  per-slot straggler slowdown, crash-at-iteration, join-at-iteration.
+  per-slot straggler slowdown, crash-at-iteration, join-at-iteration, plus
+  the PR-6 chaos domains — sync-thread crash/stall rounds, trainer
+  exceptions, and PS-shard loss (DESIGN.md §10).
 
 Transitions (anything else raises ``ValueError``):
 
     dead --join--> joining --activate--> active --fail/leave--> dead
                    joining --fail-----------------------------> dead
+
+Besides slot transitions, the event log also carries *annotations*
+(``Membership.note``): non-transition events from the other failure domains
+— ``degraded`` (the supervisor exhausted the sync engine's restart budget),
+``sync_restart``, ``ps_fail`` / ``ps_recover`` (``slot`` is the SHARD id
+there) — so one log tells the whole robustness story with provenance.
 """
 from __future__ import annotations
 
@@ -58,9 +66,12 @@ class MembershipEvent:
     timestamp of the transition (``time.perf_counter`` domain; diagnostics
     only — deterministic consumers compare ``(kind, slot)``)."""
 
-    kind: str  # "join" | "activate" | "leave" | "fail"
+    # transitions: "join" | "activate" | "leave" | "fail"
+    # annotations (Membership.note — no status change, no epoch bump):
+    # "degraded" | "sync_restart" | "ps_fail" | "ps_recover" (slot = shard)
+    kind: str
     slot: int
-    epoch: int  # epoch AFTER the transition
+    epoch: int  # epoch AFTER the transition (unchanged for annotations)
     reason: str = ""
     t: float = 0.0
 
@@ -160,6 +171,18 @@ class Membership:
         the slot; nothing blocks, nothing reallocates."""
         return self._transition(slot, (ACTIVE, JOINING), DEAD, "fail", reason)
 
+    def note(self, kind: str, slot: int = -1, reason: str = "") -> MembershipEvent:
+        """Append a non-transition annotation to the event log: provenance
+        from the OTHER failure domains (sync-engine degradation, PS-shard
+        loss/recovery) so one log tells the whole robustness story. No
+        status changes, no epoch bump; ``slot`` is -1 for cohort-level
+        events and the shard id for ``ps_*`` events."""
+        with self._lock:
+            ev = MembershipEvent(kind, slot, self._epoch, reason,
+                                 time.perf_counter())
+            self.events.append(ev)
+            return ev
+
     def __repr__(self) -> str:
         s = "".join({DEAD: ".", ACTIVE: "A", JOINING: "j"}[int(x)]
                     for x in self._status)
@@ -223,12 +246,36 @@ class FaultSpec:
     * ``join_at[slot]`` — the slot starts dead and joins (bootstrap via
       ``SyncAlgorithm.on_join``) once the initial cohort's fastest trainer
       has passed this iteration.
+    * ``raise_at[slot]`` — the trainer RAISES (an injected software bug, not
+      a clean simulated death) at this local iteration; exercises the
+      runner's exception capture + re-raise-with-provenance path.
+    * ``sync_crash_at`` — the shadow/sync thread dies (raises) at the start
+      of this background ROUND (cumulative across restarts; injected once).
+      The supervisor must detect the death and restart the thread against
+      live membership (DESIGN.md §10.2).
+    * ``sync_stall_at`` / ``sync_stall_s`` — the shadow thread STALLS (sleeps
+      ``sync_stall_s`` without dying) at this round; the supervisor detects
+      the stale heartbeat, fences the zombie out by generation, and starts a
+      replacement.
+    * ``ps_fail_at[shard]`` — embedding PS ``shard`` fails (live state lost)
+      once cohort progress reaches this iteration; lookups fall back to the
+      background snapshot, updates retry-then-drop (embeddings/shards.py).
+    * ``ps_recover_after_s`` — seconds after a PS failure at which the
+      supervisor rehydrates the shard from its snapshot (a replacement host
+      coming up). Shards still down at shutdown are always rehydrated so the
+      final state includes every shard.
     """
 
     straggler_sleep_s: Dict[int, float] = field(default_factory=dict)
     straggler_until: Dict[int, int] = field(default_factory=dict)
     crash_at: Dict[int, int] = field(default_factory=dict)
     join_at: Dict[int, int] = field(default_factory=dict)
+    raise_at: Dict[int, int] = field(default_factory=dict)
+    sync_crash_at: Optional[int] = None
+    sync_stall_at: Optional[int] = None
+    sync_stall_s: float = 10.0
+    ps_fail_at: Dict[int, int] = field(default_factory=dict)
+    ps_recover_after_s: float = 0.25
 
     def validate(self, R_max: int) -> "FaultSpec":
         for slot in self.straggler_until:
@@ -239,9 +286,26 @@ class FaultSpec:
         for name, d in (("straggler_sleep_s", self.straggler_sleep_s),
                         ("straggler_until", self.straggler_until),
                         ("crash_at", self.crash_at),
-                        ("join_at", self.join_at)):
+                        ("join_at", self.join_at),
+                        ("raise_at", self.raise_at)):
             for slot in d:
                 if not 0 <= slot < R_max:
                     raise ValueError(f"{name} slot {slot} out of range "
                                      f"[0, {R_max})")
+        for name, v in (("sync_crash_at", self.sync_crash_at),
+                        ("sync_stall_at", self.sync_stall_at)):
+            if v is not None and v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v}")
+        if self.sync_stall_s <= 0:
+            raise ValueError(f"sync_stall_s must be > 0, got "
+                             f"{self.sync_stall_s}")
+        if self.ps_recover_after_s < 0:
+            raise ValueError(f"ps_recover_after_s must be >= 0, got "
+                             f"{self.ps_recover_after_s}")
+        for shard, it in self.ps_fail_at.items():
+            if shard < 0 or it < 0:
+                raise ValueError(f"bad ps_fail_at entry {shard}:{it} "
+                                 f"(shard and iteration must be >= 0; the "
+                                 f"runner validates shard ids against its "
+                                 f"plan)")
         return self

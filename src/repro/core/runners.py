@@ -54,11 +54,28 @@ pace falls below the policy floor is demoted to ``leave`` (with provenance
 in the membership event log) and re-admitted through the ordinary join
 bootstrap once its probation passes. ``HogwildSim`` consumes the same
 policy deterministically via ``core.scheduler.StragglerSchedule``.
+
+Failure-domain supervision (DESIGN.md §10): the threaded runner's long-lived
+threads — shadow, monitor, trainers — register heartbeats with a
+``core.supervision.Supervisor``. A dead or stalled shadow thread is
+restarted against the LIVE membership state (isolation makes this safe:
+training never blocked on it); when the restart budget is exhausted the run
+degrades gracefully — training continues locally, a ``degraded`` event with
+provenance lands in the membership log, and one final foreground sync at
+shutdown still converges the replicas. The embedding PSs are their own
+failure domain (``embeddings/shards.py``): the shadow thread takes O(1)
+background snapshots, ``FaultSpec.ps_fail_at`` kills a shard, lookups fall
+back to the snapshot (bounded staleness, never a blocked trainer), updates
+retry-then-drop, and the supervisor rehydrates the shard after the
+provisioning delay. Trainer exceptions are captured per-thread and re-raised
+with slot provenance after ``join()`` — a failed run no longer returns
+partial results as if it succeeded.
 """
 from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -73,6 +90,7 @@ from repro.core.elp import EPSMeter, SlotEPS
 from repro.core.flatspace import FlatSpace
 from repro.core.membership import FaultSpec, Membership, MembershipSchedule
 from repro.core.scheduler import StragglerPolicy
+from repro.core.supervision import Supervisor, SupervisorConfig
 from repro.data import ctr
 from repro.embeddings import shards as emb_shards
 from repro.embeddings import table as emb
@@ -590,7 +608,11 @@ class ThreadedShadowRunner:
                  fault_spec: Optional[FaultSpec] = None,
                  membership: Optional[Membership] = None,
                  eps_window_s: float = 2.0,
-                 straggler_policy: Optional[StragglerPolicy] = None):
+                 straggler_policy: Optional[StragglerPolicy] = None,
+                 supervise: bool = True,
+                 supervisor_config: Optional[SupervisorConfig] = None,
+                 ps_snapshot_every: int = 2,
+                 shard_retry: Optional[emb_shards.ShardRetryPolicy] = None):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
@@ -627,6 +649,33 @@ class ThreadedShadowRunner:
         # lookups and sparse updates route by it below.
         self.plan = emb_shards.plan_shards(self.spec, n_emb_shards, batch_size)
         self.n_emb_shards = self.plan.n_shards
+        # Failure-domain supervision (DESIGN.md §10): heartbeats over every
+        # long-lived thread, bounded shadow restarts, PS fail/recover
+        # orchestration. Chaos injection (sync_crash_at / sync_stall_at /
+        # ps_fail_at) rides the supervisor's watch loop, so a FaultSpec that
+        # kills the sync thread or a PS requires supervise=True.
+        self.supervise = bool(supervise)
+        self.supervisor_config = (supervisor_config
+                                  or SupervisorConfig()).validate()
+        if ps_snapshot_every < 1:
+            raise ValueError(f"ps_snapshot_every must be >= 1, got "
+                             f"{ps_snapshot_every}")
+        self.ps_snapshot_every = int(ps_snapshot_every)
+        self.shard_retry = shard_retry
+        for s in self.fault.ps_fail_at:
+            if not 0 <= s < self.n_emb_shards:
+                raise ValueError(f"ps_fail_at names shard {s}, but the plan "
+                                 f"has {self.n_emb_shards} embedding shards")
+        sync_chaos = (self.fault.sync_crash_at is not None
+                      or self.fault.sync_stall_at is not None)
+        if sync_chaos and self.sync_cfg.mode == "fixed_rate":
+            raise ValueError("sync_crash_at / sync_stall_at target the "
+                             "shadow thread; mode='fixed_rate' has none")
+        if (sync_chaos or self.fault.ps_fail_at) and not self.supervise:
+            raise ValueError("FaultSpec injects sync/PS chaos, but "
+                             "supervise=False — the supervisor is both the "
+                             "injection clock and the recovery path")
+        self.supervisor: Optional[Supervisor] = None
         plan = self.plan
 
         def train_one(w, opt_state, shard_tables, batch):
@@ -755,10 +804,23 @@ class ThreadedShadowRunner:
             self.algo_state = self.algo.init_state(w0, self.sync_cfg)
         self.opt_states = [self.opt.init(w0) for _ in range(self.R)]
         # Per-PS Hogwild states, seed-identical to the packed single table.
-        self.emb = emb_shards.EmbeddingShards.init(self.plan, ke)
+        self.emb = emb_shards.EmbeddingShards.init(self.plan, ke,
+                                                   retry=self.shard_retry)
         self.done = threading.Event()
         self.examples = 0
         self.sync_count = 0
+        # Failure-domain bookkeeping (DESIGN.md §10): captured trainer
+        # exceptions (re-raised with slot provenance after join), dead sync-
+        # thread incarnations, restart/degradation state, PS chaos tracking.
+        self._trainer_excs: List[Tuple[int, BaseException]] = []
+        self._sync_excs: List[BaseException] = []
+        self._shadow_rounds = 0
+        self._sync_degraded = False
+        self._sync_stalled = False
+        self._sync_crash_t: Optional[float] = None
+        self._sync_count_at_restart: List[int] = []
+        self._ps_injected: set = set()
+        self._tick_count = 0
         self._sync_lock = threading.Lock()  # shadow/trainer threads both add
         # serializes algo_state transitions: the shadow round vs the rare
         # crash/join handlers (an unguarded read-modify-write could revert a
@@ -802,6 +864,12 @@ class ThreadedShadowRunner:
         def _add_syncs(n: int) -> None:
             with self._sync_lock:
                 self.sync_count += n
+
+        def _beat(name: str) -> None:
+            # liveness heartbeat; `sup` is bound later in run() — closures
+            # resolve it at call time, after the threads have started
+            if sup is not None:
+                sup.beat(name)
 
         def _round_over_active() -> int:
             # The round runs over the LIVE planes only: the matching/mean/PS
@@ -852,6 +920,9 @@ class ThreadedShadowRunner:
                 while (self._fr_gen == gen and self._fr_registered[i]
                        and not _fr_ready_locked()):
                     self._fr_cond.wait(timeout=0.05)
+                    # parked at the barrier is intentional waiting, not a
+                    # stall — keep the heartbeat fresh
+                    _beat(f"trainer-{i}")
                     if self._fr_gen == gen and self._fr_registered[i]:
                         # a demote -> readmit cycle while we were parked
                         # cleared our arrival flag; we ARE at the sync
@@ -922,6 +993,18 @@ class ThreadedShadowRunner:
         def trainer(i: int):
             try:
                 _trainer_body(i)
+            except BaseException as e:
+                # A dying trainer thread must not die SILENTLY (the old
+                # behavior: join() succeeds, partial results look complete).
+                # Capture with slot provenance — run() re-raises the first
+                # after join — and record the failure in the membership log
+                # so the cohort (and the sync set) sees the slot leave.
+                with self._state_lock:
+                    self._trainer_excs.append((i, e))
+                    if self.membership.status(i) != "dead":
+                        self.membership.fail(
+                            i, reason=f"exception: {type(e).__name__}: {e}")
+                        self._dispatch_on_leave(i)
             finally:
                 # under _state_lock so _readmit's alive check is race-free
                 # (a finished trainer must never be resurrected into the
@@ -930,6 +1013,11 @@ class ThreadedShadowRunner:
                     self._alive[i] = False
                 if fr:
                     _fr_deregister(i)
+                if sup is not None:
+                    # clean exit (or captured failure): stop watching before
+                    # the thread object dies, or the supervisor would read
+                    # the natural end of the run as a death
+                    sup.deregister(f"trainer-{i}")
                 if i in initial_active:
                     with ex_lock:
                         self._initial_running -= 1
@@ -943,6 +1031,7 @@ class ThreadedShadowRunner:
                             or self._initial_running == 0):
                         return  # cohort finished (or all crashed) before the
                         # join point — never block run() on an unreachable join
+                    _beat(f"trainer-{i}")  # waiting to join is not a stall
                     time.sleep(0.001)
                 with self._state_lock:
                     self._admit_slot(i)
@@ -953,7 +1042,14 @@ class ThreadedShadowRunner:
             sleep_s = self.fault.straggler_sleep_s.get(i, 0.0)
             sleep_until = self.fault.straggler_until.get(i)
             crash = self.fault.crash_at.get(i)
+            boom = self.fault.raise_at.get(i)
             for it in range(n_iters):
+                _beat(f"trainer-{i}")
+                if boom is not None and it >= boom:
+                    # injected software fault: an actual raise, exercising the
+                    # capture -> membership.fail -> re-raise-after-join path
+                    raise RuntimeError(
+                        f"injected trainer fault at iteration {it}")
                 if crash is not None and it >= crash:
                     with self._state_lock:
                         # a slot the policy already demoted is dead in the
@@ -986,8 +1082,12 @@ class ThreadedShadowRunner:
                 is_member = self.membership.status(i) == "active"
                 if is_member:
                     for s in range(self.n_emb_shards):
-                        self.emb.states[s] = self._emb_updates[s](
-                            self.emb.states[s], batch["sparse"], g_pooled)
+                        # routed through the PS failure domain: a healthy
+                        # shard takes the plain lock-free swap; a failed one
+                        # retries with backoff then DROPS the update (counted)
+                        # — training never blocks on a dead PS
+                        self.emb.try_update(s, self._emb_updates[s],
+                                            batch["sparse"], g_pooled)
                 losses[i].append(float(loss))
                 self.iter_count[i] = it + 1
                 # busy time stops HERE, before any barrier wait: the per-slot
@@ -1006,8 +1106,35 @@ class ThreadedShadowRunner:
                     _fr_sync_point(i)
             trainer_wall[i] = time.perf_counter() - t_start
 
-        def shadow():
+        def _shadow_body(gen: int):
+            # One incarnation of the shadow loop. A restarted incarnation
+            # resumes rounds against the LIVE membership state — safe because
+            # training never blocked on the sync engine (the isolation
+            # property, paper §3.3). ``gen`` is the supervisor's generation
+            # token at spawn: a stalled-but-alive zombie whose replacement is
+            # already running sees itself superseded and stands down.
             while not self.done.is_set():
+                if sup is not None and sup.generation("shadow") != gen:
+                    return  # fenced out: a replacement owns the rounds now
+                r = self._shadow_rounds
+                if (self.fault.sync_crash_at is not None
+                        and r >= self.fault.sync_crash_at
+                        and self._sync_crash_t is None):
+                    self._sync_crash_t = time.perf_counter()
+                    raise RuntimeError(
+                        f"injected sync-thread crash at round {r}")
+                if (self.fault.sync_stall_at is not None
+                        and r >= self.fault.sync_stall_at
+                        and not self._sync_stalled):
+                    # wedge WITHOUT beating: the supervisor must detect the
+                    # stale heartbeat, fence this incarnation, and restart
+                    self._sync_stalled = True
+                    t_end = time.perf_counter() + self.fault.sync_stall_s
+                    while (time.perf_counter() < t_end
+                           and not self.done.is_set()):
+                        time.sleep(0.01)
+                    continue  # generation check above retires the zombie
+                _beat("shadow")
                 # One algorithm-owned background round over the live replica
                 # planes — landings interpolate into the CURRENT state while
                 # trainers keep moving (paper §3.3).
@@ -1016,24 +1143,114 @@ class ThreadedShadowRunner:
                     _add_syncs(n)
                 else:
                     time.sleep(0.001)
+                self._shadow_rounds = r + 1
+                # the shadow thread is already the background worker: PS
+                # snapshots ride its cadence (O(1) reference grabs)
+                if self._shadow_rounds % self.ps_snapshot_every == 0:
+                    self.emb.snapshot_all()
                 # the controller rides the shadow cadence: membership is
                 # re-evaluated every background round, training never blocks
                 _policy_step()
                 if self.sync_sleep_s:
                     time.sleep(self.sync_sleep_s)
 
+        def shadow(gen: int = 0):
+            try:
+                _shadow_body(gen)
+            except BaseException as e:
+                # die quietly: the supervisor's death detection (and the
+                # restart it triggers) IS the recovery path; the exception is
+                # kept for the output record
+                self._sync_excs.append(e)
+
+        def _restart_shadow() -> threading.Thread:
+            # Called by the supervisor (outside its lock) after backoff. The
+            # generation token was already bumped, fencing any stalled
+            # zombie; record where sync_count stood so the bench can assert
+            # post-restart progress.
+            with self._sync_lock:
+                self._sync_count_at_restart.append(self.sync_count)
+            gen = sup.generation("shadow")
+            self.membership.note(
+                "sync_restart", -1,
+                f"shadow thread restarted (attempt "
+                f"{len(self._sync_count_at_restart)}, generation {gen})")
+            t = threading.Thread(target=shadow, args=(gen,), daemon=True)
+            t.start()
+            return t
+
+        def _sync_give_up(name: str) -> None:
+            # Degradation ladder, last rung (DESIGN.md §10.2): training keeps
+            # running locally (isolation means nothing breaks), the event log
+            # records the degradation with provenance, and run() forces one
+            # final FOREGROUND sync at shutdown so the run still converges.
+            self._sync_degraded = True
+            self.membership.note(
+                "degraded", -1,
+                "sync engine degraded: restart budget exhausted; training "
+                "continues locally, final foreground sync at shutdown")
+
+        def _supervision_tick() -> None:
+            # PS chaos injection + timed recovery ride the supervisor's
+            # watch loop (its clock domain is the policy's: perf_counter).
+            if fr:
+                # no shadow thread to ride: background PS snapshots take the
+                # watch-loop cadence instead (still O(1) reference grabs)
+                self._tick_count += 1
+                if self._tick_count % 10 == 0:
+                    self.emb.snapshot_all()
+            for s, at in self.fault.ps_fail_at.items():
+                if s not in self._ps_injected and _progress() >= at:
+                    self._ps_injected.add(s)
+                    self.emb.fail_shard(
+                        s, reason=f"injected PS failure at iteration {at}")
+                    self.membership.note(
+                        "ps_fail", -1,
+                        f"embedding shard {s} down: live state lost, serving "
+                        f"snapshot reads, dropping writes after retry")
+            now = time.perf_counter()
+            for s in list(self.emb.failed_at):
+                t_fail = self.emb.failed_at.get(s)
+                if (t_fail is not None
+                        and now - t_fail >= self.fault.ps_recover_after_s):
+                    self.emb.recover_shard(
+                        s, reason=f"rehydrated from snapshot after "
+                                  f"{now - t_fail:.2f}s down")
+                    self.membership.note(
+                        "ps_recover", -1,
+                        f"embedding shard {s} rejoined the routing plan")
+            # backup policy clock: membership decisions keep flowing even
+            # while the thread that normally evaluates the policy (the
+            # shadow thread) is the thing being restarted
+            _policy_step()
+
         def monitor():
             # fixed_rate has no shadow thread, so the controller gets its own
             # (otherwise a demotion decision could only happen at a barrier —
             # exactly the place the straggler is blocking everyone)
             while not self.done.is_set():
+                _beat("monitor")
                 _policy_step()
                 time.sleep(0.02)
 
+        sup = (Supervisor(self.supervisor_config, tick=_supervision_tick)
+               if self.supervise else None)
+        self.supervisor = sup
         threads = [threading.Thread(target=trainer, args=(i,)) for i in range(self.R)]
-        shadow_t = None if fr else threading.Thread(target=shadow, daemon=True)
+        shadow_t = None if fr else threading.Thread(target=shadow, args=(0,),
+                                                    daemon=True)
         monitor_t = (threading.Thread(target=monitor, daemon=True)
                      if fr and self.policy is not None else None)
+        # register BEFORE starting anything: a fast-finishing thread must
+        # never race its own registration (it deregisters itself on exit)
+        if sup is not None:
+            for i, t in enumerate(threads):
+                sup.register(f"trainer-{i}", t)  # watch-only
+            if shadow_t is not None:
+                sup.register("shadow", shadow_t, restart=_restart_shadow,
+                             on_give_up=_sync_give_up)
+            if monitor_t is not None:
+                sup.register("monitor", monitor_t)
         t0 = time.perf_counter()
         for t in threads:
             t.start()
@@ -1041,14 +1258,59 @@ class ThreadedShadowRunner:
             shadow_t.start()
         if monitor_t is not None:
             monitor_t.start()
+        if sup is not None:
+            sup.start()
         for t in threads:
             t.join()
         self.done.set()
+        sync_restarts = 0
+        if sup is not None:
+            sync_restarts = sup.restarts("shadow")
+            cur = sup.thread("shadow")
+            if cur is not None:
+                shadow_t = cur  # join the CURRENT incarnation, not gen 0
+            # clean shutdown: done is set and the loops exit on their own —
+            # stop watching first, or the supervisor would read those clean
+            # exits as deaths and spin up doomed replacements
+            sup.deregister("shadow")
+            sup.deregister("monitor")
+            sup.stop()
         if shadow_t is not None:
             shadow_t.join(timeout=5.0)
+            if shadow_t.is_alive():
+                warnings.warn(
+                    "shadow thread failed to exit within 5s at shutdown "
+                    "(sync engine wedged?); proceeding — the returned state "
+                    "may race one final background round", RuntimeWarning)
         if monitor_t is not None:
             monitor_t.join(timeout=5.0)
+            if monitor_t.is_alive():
+                warnings.warn("monitor thread failed to exit within 5s at "
+                              "shutdown", RuntimeWarning)
+        # rehydrate any still-down PS so the returned packed state is the
+        # best surviving copy and a subsequent run starts healthy
+        for s in self.emb.down_shards():
+            self.emb.recover_shard(s, reason="shutdown rehydrate")
+            self.membership.note(
+                "ps_recover", -1,
+                f"embedding shard {s} rehydrated at shutdown")
+        final_fg_sync = False
+        if self._sync_degraded and self.membership.active_ids().size > 0:
+            # degradation ladder's last rung: one FOREGROUND sync so the run
+            # still converges to a synchronized model
+            n = _round_over_active()
+            if n:
+                _add_syncs(n)
+                final_fg_sync = True
         wall = time.perf_counter() - t0
+        if self._trainer_excs:
+            i, e = self._trainer_excs[0]
+            others = len(self._trainer_excs) - 1
+            raise RuntimeError(
+                f"trainer thread (slot {i}) died with "
+                f"{type(e).__name__}: {e}"
+                + (f"; {others} more trainer exception(s) captured"
+                   if others else "")) from e
         total_iters = sum(self.iter_count)
         if self.engine == "flat":
             w_out = [self.flat.unpack(p) for p in self.w]
@@ -1078,6 +1340,17 @@ class ThreadedShadowRunner:
             "membership_events": list(self.membership.events),
             "policy_transitions": (list(self.policy.transitions)
                                    if self.policy is not None else []),
+            # failure-domain telemetry (DESIGN.md §10)
+            "supervision_events": (list(sup.events) if sup is not None
+                                   else []),
+            "shard_events": list(self.emb.events),
+            "dropped_updates": list(self.emb.dropped_updates),
+            "stale_lookups": list(self.emb.stale_lookups),
+            "sync_rounds": self._shadow_rounds,
+            "sync_restarts": sync_restarts,
+            "sync_count_at_restart": list(self._sync_count_at_restart),
+            "sync_degraded": self._sync_degraded,
+            "final_foreground_sync": final_fg_sync,
             "t_start": t0,
             "w": w_out,
             # Engine-independent packed view of the per-PS states.

@@ -33,9 +33,18 @@ busy-time EPS readings (``elp.SlotEPS``) from the shadow thread each round;
 ``MembershipSchedule``-compatible event source for ``HogwildSim``, where the
 per-slot rates come from a scripted trace — same controller, reproducible
 trajectories.
+
+Supervision (PR 6, DESIGN.md §10): the ``core.supervision.Supervisor`` watch
+loop also ticks the policy, on the SAME clock domain (``time.perf_counter``),
+so membership decisions keep flowing while the thread that normally evaluates
+the policy — the shadow thread — is itself dead or being restarted. Two
+threads may therefore call ``observe`` concurrently; the state machine is
+lock-guarded so a transition is never evaluated twice against one
+observation window.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -114,6 +123,9 @@ class StragglerPolicy:
         self._slots = [_SlotState() for _ in range(self.n_slots)]
         # (now, slot, from_state, to_state) — observability + tests
         self.transitions: List[Tuple[float, int, str, str]] = []
+        # observe() may be called from two threads (the shadow round AND the
+        # supervisor's tick while the shadow thread is down/restarting)
+        self._lock = threading.Lock()
 
     def demoted_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots)
@@ -139,6 +151,13 @@ class StragglerPolicy:
         simply FINISHED — whose rate decays to zero — is neither demoted
         nor re-admitted); defaults to all-eligible.
         """
+        with self._lock:
+            return self._observe_locked(now, eps_by_slot, active, eligible)
+
+    def _observe_locked(self, now: float, eps_by_slot: Mapping[int, float],
+                        active: Sequence[bool],
+                        eligible: Optional[Sequence[bool]],
+                        ) -> List[PolicyAction]:
         cfg = self.config
         if eligible is None:
             eligible = [True] * self.n_slots

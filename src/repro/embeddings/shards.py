@@ -15,11 +15,25 @@ kernel — one launch per shard, touching only that PS's rows.
 ``EmbeddingShards`` is the stateful host-side holder ``ThreadedShadowRunner``
 uses: ``states[s]`` are genuinely independent per-PS Hogwild states, so
 concurrent trainers writing to different PSs no longer serialize through one
-jitted scatter over a single packed array (DESIGN.md §7)."""
+jitted scatter over a single packed array (DESIGN.md §7).
+
+Each PS is also a real *failure domain* (DESIGN.md §10.3): per-shard health
+state, background snapshots, and fail/recover transitions. Because every
+update replaces ``states[s]`` wholesale with fresh immutable arrays, a
+snapshot is an O(1) reference grab — the shadow thread (already the
+background worker) snapshots every few rounds for free. When a shard fails
+(``fail_shard``, injected via ``FaultSpec.ps_fail_at``), its live state is
+lost; lookups transparently fall back to the latest snapshot (a bounded-
+staleness read — training on surviving shards never blocks) and updates
+routed at it retry with backoff under ``ShardRetryPolicy`` and are then
+*dropped* (counted — the measured staleness cost). ``recover_shard``
+rehydrates the shard from its snapshot and it rejoins the routing plan."""
 from __future__ import annotations
 
+import threading
+import time
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -151,26 +165,169 @@ def shard_update(
     return {"table": table, "acc": acc}
 
 
+@dataclass(frozen=True)
+class ShardRetryPolicy:
+    """Routing policy for updates aimed at a failed shard: retry with
+    backoff inside a bounded budget, then drop (bounded staleness beats an
+    unbounded stall — the surviving shards must never wait)."""
+
+    retries: int = 2          # attempts AFTER the first
+    backoff_s: float = 0.005  # sleep before each retry (doubles per retry)
+    timeout_s: float = 0.05   # hard wall-clock budget for the whole attempt
+
+    def validate(self) -> "ShardRetryPolicy":
+        if self.retries < 0 or self.backoff_s < 0 or self.timeout_s <= 0:
+            raise ValueError(
+                f"need retries >= 0, backoff_s >= 0, timeout_s > 0; got "
+                f"retries={self.retries}, backoff_s={self.backoff_s}, "
+                f"timeout_s={self.timeout_s}")
+        return self
+
+
+@dataclass(frozen=True)
+class ShardEvent:
+    """One PS failure-domain transition (``EmbeddingShards.events``)."""
+
+    kind: str  # "ps_snapshot" | "ps_fail" | "ps_recover"
+    shard: int
+    t: float  # time.perf_counter domain (same clock as supervision events)
+    reason: str = ""
+
+
 class EmbeddingShards:
     """Host-side holder of the per-PS Hogwild states (ThreadedShadowRunner's
     embedding substrate). ``states[s]`` is replaced wholesale per update —
     concurrent trainers can interleave per shard (lost updates included:
-    that is the preserved Hogwild property, DESIGN.md §2)."""
+    that is the preserved Hogwild property, DESIGN.md §2).
 
-    def __init__(self, plan: ShardPlan, states: List[Params]):
+    Failure domain (DESIGN.md §10.3): ``health[s]`` marks a live shard;
+    ``fail_shard`` discards the live state (a lost PS), after which
+    ``tables()`` serves the latest background snapshot for that shard (a
+    stale read, counted in ``stale_lookups``) and ``try_update`` retries
+    then drops writes (counted in ``dropped_updates``). ``recover_shard``
+    rehydrates from the snapshot and the shard rejoins the plan.
+
+    Thread model: trainers call ``tables``/``try_update`` lock-free (list
+    reads are atomic under the GIL; states are immutable jnp arrays swapped
+    wholesale); health/snapshot transitions take ``_lock``. ``init`` seeds
+    generation-0 snapshots, so recovery is always possible."""
+
+    def __init__(self, plan: ShardPlan, states: List[Params],
+                 retry: Optional[ShardRetryPolicy] = None):
         self.plan = plan
-        self.states = states
+        self.states: List[Optional[Params]] = list(states)
+        self.retry = (retry or ShardRetryPolicy()).validate()
+        n = plan.n_shards
+        self.health: List[bool] = [True] * n
+        # snapshots are reference grabs of the immutable per-shard states —
+        # O(1), taken by the background worker (see snapshot_all)
+        self.snapshots: List[Params] = list(states)
+        self.snapshot_t: List[float] = [time.perf_counter()] * n
+        self.dropped_updates: List[int] = [0] * n
+        self.stale_lookups: List[int] = [0] * n
+        self.events: List[ShardEvent] = []
+        self.failed_at: Dict[int, float] = {}  # shard -> perf_counter of fail
+        self._lock = threading.Lock()
 
     @classmethod
-    def init(cls, plan: ShardPlan, key: jax.Array) -> "EmbeddingShards":
+    def init(cls, plan: ShardPlan, key: jax.Array,
+             retry: Optional[ShardRetryPolicy] = None) -> "EmbeddingShards":
         # Seed-identical to the single-table engine: init the packed
         # collection once, then split by the plan.
-        return cls(plan, shard_states(plan, init_tables(plan.spec, key)))
+        return cls(plan, shard_states(plan, init_tables(plan.spec, key)),
+                   retry=retry)
 
+    # -- hot-path routing ----------------------------------------------------
     def tables(self) -> Tuple[jnp.ndarray, ...]:
-        """Lock-free snapshot of the per-shard tables (Hogwild read)."""
-        return tuple(st["table"] for st in self.states)
+        """Lock-free snapshot of the per-shard tables (Hogwild read). A
+        failed shard serves its latest background snapshot — a bounded-
+        staleness read instead of a blocked trainer."""
+        out = []
+        for s in range(self.plan.n_shards):
+            st = self.states[s]
+            # health is the authority, not just ``states[s] is None``: an
+            # in-flight try_update that started before fail_shard can land
+            # its swap just after, leaving a non-None state on a dead shard
+            if st is None or not self.health[s]:
+                st = self.snapshots[s]
+                self.stale_lookups[s] += 1
+            out.append(st["table"])
+        return tuple(out)
+
+    def try_update(self, s: int, fn, *args) -> bool:
+        """Route one Hogwild write at shard ``s``: ``fn(state, *args)`` maps
+        the current state to the new one. Against a healthy shard this is
+        the plain lock-free swap. Against a failed shard it retries with
+        exponential backoff inside ``ShardRetryPolicy``'s budget, then drops
+        the update (returns False; the drop is the measured staleness cost —
+        a trainer must never block unboundedly on a dead PS)."""
+        retry = self.retry
+        deadline = time.perf_counter() + retry.timeout_s
+        backoff = retry.backoff_s
+        for attempt in range(retry.retries + 1):
+            st = self.states[s]
+            if self.health[s] and st is not None:
+                new = fn(st, *args)
+                # re-check AFTER the (milliseconds-long) kernel dispatch:
+                # if the shard died mid-flight, landing the swap would
+                # resurrect a non-None state on a dead PS — that write is
+                # lost with the shard, exactly like a drop
+                if self.health[s]:
+                    self.states[s] = new
+                    return True
+            if attempt == retry.retries or time.perf_counter() >= deadline:
+                break
+            time.sleep(min(backoff, max(deadline - time.perf_counter(), 0.0)))
+            backoff *= 2.0
+        self.dropped_updates[s] += 1
+        return False
+
+    # -- failure-domain transitions ------------------------------------------
+    def snapshot_all(self, reason: str = "") -> None:
+        """Background snapshot of every healthy shard (reference grabs of
+        the immutable states — O(n_shards), no copies). The shadow thread
+        calls this every few rounds; the snapshot is what a failed shard
+        serves and what recovery rehydrates from."""
+        now = time.perf_counter()
+        with self._lock:
+            for s in range(self.plan.n_shards):
+                st = self.states[s]
+                if self.health[s] and st is not None:
+                    self.snapshots[s] = st
+                    self.snapshot_t[s] = now
+
+    def fail_shard(self, s: int, reason: str = "") -> None:
+        """PS ``s`` dies: its live state is LOST (not quietly kept). Lookups
+        fall back to the snapshot, updates start dropping after retries."""
+        with self._lock:
+            if not self.health[s]:
+                return  # already down
+            self.health[s] = False
+            self.states[s] = None
+            self.failed_at[s] = time.perf_counter()
+            self.events.append(
+                ShardEvent("ps_fail", s, self.failed_at[s], reason))
+
+    def recover_shard(self, s: int, reason: str = "") -> None:
+        """Rehydrate shard ``s`` from its latest snapshot and rejoin the
+        routing plan. The delta between the snapshot and the pre-failure
+        live state (plus the updates dropped while down) is the bounded-
+        staleness cost the bench measures."""
+        with self._lock:
+            if self.health[s]:
+                return  # already up
+            self.states[s] = self.snapshots[s]
+            self.health[s] = True
+            self.failed_at.pop(s, None)
+            self.events.append(
+                ShardEvent("ps_recover", s, time.perf_counter(), reason))
+
+    def down_shards(self) -> List[int]:
+        return [s for s in range(self.plan.n_shards) if not self.health[s]]
 
     def to_packed(self) -> Params:
-        """The engine-independent packed {"table", "acc"} view."""
-        return packed_state(self.plan, self.states)
+        """The engine-independent packed {"table", "acc"} view. A failed
+        shard contributes its snapshot (the best surviving copy)."""
+        states = [st if st is not None else self.snapshots[s]
+                  for s, st in enumerate(self.states)]
+        return packed_state(self.plan, states)

@@ -15,6 +15,10 @@ Examples:
       --straggler 1:0.02 --iters 200          # fault-injection harness
   PYTHONPATH=src python -m repro.launch.train dlrm --membership-schedule \
       "fail@60:2,join@100:2" --iters 200      # deterministic elasticity
+  PYTHONPATH=src python -m repro.launch.train dlrm --threaded \
+      --sync-crash-at 2 --ps-fail-at 0:50 --iters 200   # chaos drill: the
+      # supervisor restarts the dead sync thread, PS 0 serves its snapshot
+      # while down and rehydrates (DESIGN.md §10)
   PYTHONPATH=src python -m repro.launch.train lm --arch minicpm-2b --replicas 2 \
       --iters 100 --sync-gap 5
 """
@@ -73,12 +77,24 @@ def run_dlrm(args) -> dict:
             "--auto-demote requires --threaded: the deterministic sim has no "
             "real pace to measure — script one with "
             "core.scheduler.StragglerSchedule instead")
+    chaos = (args.sync_crash_at is not None or args.sync_stall_at is not None
+             or args.ps_fail_at or args.raise_at)
+    if chaos and not args.threaded:
+        raise SystemExit(
+            "--sync-crash-at/--sync-stall-at/--ps-fail-at/--raise-at are "
+            "chaos injections into the REAL threads — they require --threaded")
     if args.threaded:
         fault = FaultSpec(
             straggler_sleep_s=_parse_slot_map(args.straggler, float),
             straggler_until=_parse_slot_map(args.straggler_until, int),
             crash_at=_parse_slot_map(args.crash_at, int),
-            join_at=_parse_slot_map(args.join_at, int))
+            join_at=_parse_slot_map(args.join_at, int),
+            raise_at=_parse_slot_map(args.raise_at, int),
+            sync_crash_at=args.sync_crash_at,
+            sync_stall_at=args.sync_stall_at,
+            sync_stall_s=args.sync_stall_s,
+            ps_fail_at=_parse_slot_map(args.ps_fail_at, int),
+            ps_recover_after_s=args.ps_recover_after)
         policy = None
         if args.auto_demote:
             # hysteresis: re-admission demands strictly more than marginal
@@ -101,8 +117,21 @@ def run_dlrm(args) -> dict:
         if out["membership_events"]:
             print("membership:", [(e.kind, e.slot) + ((e.reason,) if e.reason else ())
                                   for e in out["membership_events"]])
+        if out["supervision_events"]:
+            print("supervision:", [(e.kind, e.name, e.reason)
+                                   for e in out["supervision_events"]])
+            print(f"  sync_restarts={out['sync_restarts']} "
+                  f"degraded={out['sync_degraded']} "
+                  f"final_foreground_sync={out['final_foreground_sync']}")
+        if out["shard_events"]:
+            print("embedding PS:", [(e.kind, e.shard) + ((e.reason,)
+                                                         if e.reason else ())
+                                    for e in out["shard_events"]])
+            print(f"  dropped_updates={out['dropped_updates']} "
+                  f"stale_lookups={out['stale_lookups']}")
         return {k: v for k, v in out.items()
-                if k not in ("w", "emb_state", "membership_events")}
+                if k not in ("w", "emb_state", "membership_events",
+                             "supervision_events", "shard_events")}
     sim = HogwildSim(cfg, sync_cfg, n_trainers=args.trainers, n_threads=args.threads,
                      batch_size=args.batch_size, optimizer=opt, seed=args.seed,
                      schedule=_parse_schedule(args.membership_schedule))
@@ -203,6 +232,28 @@ def main():
     d.add_argument("--straggler-until", default=None,
                    help='end of the straggler sleep, per slot local iteration:'
                         ' "slot:40,..." (absent = degraded all run)')
+    # chaos injection into the supervised failure domains (--threaded only;
+    # DESIGN.md §10): the supervisor detects/restarts/recovers, the run
+    # report prints the supervision + PS event logs
+    d.add_argument("--raise-at", default=None,
+                   help='chaos: raise inside trainer threads, "slot:iter,..."'
+                        ' — the run re-raises with slot provenance')
+    d.add_argument("--sync-crash-at", type=int, default=None,
+                   help="chaos: kill the shadow/sync thread at this round "
+                        "(mode=shadow); the supervisor restarts it")
+    d.add_argument("--sync-stall-at", type=int, default=None,
+                   help="chaos: wedge the shadow thread at this round; the "
+                        "supervisor detects the stale heartbeat and replaces "
+                        "it (the zombie is generation-fenced)")
+    d.add_argument("--sync-stall-s", type=float, default=10.0,
+                   help="how long the wedged shadow thread sleeps")
+    d.add_argument("--ps-fail-at", default=None,
+                   help='chaos: kill embedding PS shards, "shard:iter,..." — '
+                        'lookups serve the background snapshot, updates '
+                        'retry-then-drop, recovery rehydrates')
+    d.add_argument("--ps-recover-after", type=float, default=0.25,
+                   help="provisioning delay before a failed PS rehydrates "
+                        "from its snapshot")
     d.add_argument("--auto-demote", action="store_true",
                    help="closed-loop straggler controller (threaded only): "
                         "demote a slot whose busy-clock EPS falls below "

@@ -14,6 +14,11 @@ from repro.core import sync as S
 from repro.core.runners import HogwildSim, ThreadedShadowRunner
 from repro.core.sync import SyncConfig
 
+# real-thread suites must never wedge CI: pytest-timeout (see
+# requirements-ci.txt) enforces this per-test wall ceiling
+pytestmark = pytest.mark.timeout(300)
+
+
 jax.config.update("jax_platform_name", "cpu")
 
 CFG = dlrm_ctr.tiny()

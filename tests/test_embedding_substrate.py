@@ -22,6 +22,11 @@ from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.sparse_adagrad.ops import sparse_adagrad_op
 from repro.kernels.sparse_adagrad.ref import sparse_adagrad_ref
 
+# real-thread suites must never wedge CI: pytest-timeout (see
+# requirements-ci.txt) enforces this per-test wall ceiling
+pytestmark = pytest.mark.timeout(300)
+
+
 CFG = dlrm_ctr.tiny()
 SPEC = emb.spec_from_config(CFG)
 

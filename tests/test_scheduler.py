@@ -18,6 +18,11 @@ from repro.core.scheduler import (
 )
 from repro.core.sync import SyncConfig
 
+# real-thread suites must never wedge CI: pytest-timeout (see
+# requirements-ci.txt) enforces this per-test wall ceiling
+pytestmark = pytest.mark.timeout(300)
+
+
 CFG = dlrm_ctr.tiny()
 
 

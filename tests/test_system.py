@@ -12,6 +12,11 @@ from repro.core.elp import PAPER_TABLE1, elp
 from repro.core.runners import HogwildSim, ThreadedShadowRunner
 from repro.core.sync import SyncConfig
 
+# real-thread suites must never wedge CI: pytest-timeout (see
+# requirements-ci.txt) enforces this per-test wall ceiling
+pytestmark = pytest.mark.timeout(300)
+
+
 CFG = dlrm_ctr.tiny()
 ITERS = 60
 

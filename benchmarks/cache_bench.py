@@ -1,0 +1,254 @@
+"""Tiered embedding cache: hit rate, stalls, migration traffic, parity.
+
+Production CTR tables don't fit in device memory; DESIGN.md §11's two-tier
+``CachedStore`` keeps a fixed hot budget device-resident and lets the shadow
+thread's lookahead prefetcher stage cold->hot promotions between syncs. This
+bench records the numbers that story stands on, against a **full-device
+oracle** — the same stream through the unchanged full-table kernels, which
+is both the latency baseline and the bitwise ground truth.
+
+Store scenarios (zipf(``ZIPF_A``) row stream, hot budget = ``HOT_FRAC`` of
+the table, row ids PERMUTED so popularity is scattered — the initial
+[0, H) placement gets no free alignment with the skew):
+
+* ``lookahead2`` — the shipping configuration: the prefetcher peeks the
+  next ``LOOKAHEAD`` queued batches (BagPipe-style; the stream is a pure
+  function of the iteration counter) and promotes their miss sets before
+  the lookup lands. Floors (scripts/check_bench_floors.py): steady-state
+  hit rate >= 0.9, stall fraction <= 0.1, merged() BITWISE equal to the
+  oracle after the full lookup+update stream, device residency = HOT_FRAC.
+* ``lookahead0`` — prefetch off: every cold row is a counted synchronous
+  promotion. The hit rate here is what plain frequency-aware placement
+  earns on its own; the gap to ``lookahead2`` is the lookahead's
+  contribution. No floor — it's the contrast row.
+
+Steady-state means stats are diffed AFTER ``WARMUP_BATCHES`` rounds, so
+the cold-start ramp (everything misses once) doesn't dilute the rates the
+floors defend.
+
+Sim scenario: two ``HogwildSim`` runs (tiny DLRM, easgd), cache on vs off.
+The cache is a pure placement optimization, so ``trajectory_bitwise`` — the
+loss stream AND the final packed table/accumulator bitwise equal — must be
+True (floored). This is the acceptance contract: checkpoints, the sync
+oracle, and eval are cache-invisible.
+
+``--json`` writes BENCH_cache.json; ``--tiny`` shrinks shapes and spans for
+the CI smoke.
+
+  PYTHONPATH=src python -m benchmarks.cache_bench [--json] [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+N_ROWS = 4096
+DIM = 32
+HOT_FRAC = 0.25
+ZIPF_A = 1.05
+BATCH = 64  # bags per batch
+MULTI_HOT = 4  # rows per bag
+LOOKAHEAD = 2
+WARMUP_BATCHES = 8
+MEASURE_BATCHES = 48
+EMB_LR = 0.05
+SIM_ITERS = 10
+
+TINY = dict(n_rows=1024, batch=32, warmup=4, measure=16, sim_iters=5)
+
+
+def bench_cache(
+    json_path: Optional[str] = None,
+    tiny: bool = False,
+) -> List[Tuple[str, float, str]]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import optim
+    from repro.configs import dlrm_ctr
+    from repro.core.runners import HogwildSim
+    from repro.core.sync import SyncConfig
+    from repro.embeddings.cache import CacheConfig, CachedStore
+    from repro.kernels.embedding_bag.ops import embedding_bag_op
+    from repro.kernels.sparse_adagrad.ops import sparse_adagrad_op
+
+    n = TINY["n_rows"] if tiny else N_ROWS
+    B = TINY["batch"] if tiny else BATCH
+    warm = TINY["warmup"] if tiny else WARMUP_BATCHES
+    meas = TINY["measure"] if tiny else MEASURE_BATCHES
+    total = warm + meas
+    H = int(round(HOT_FRAC * n))
+    print(
+        f"\n== Tiered cache: zipf({ZIPF_A}) stream over {n} rows, "
+        f"hot budget {H} ({HOT_FRAC:.0%}), {B}x{MULTI_HOT} ids/batch, "
+        f"{warm}+{meas} batches ==",
+    )
+
+    # zipf(ZIPF_A) over n rows, ids permuted so popularity rank carries no
+    # relation to row id (the initial [0, H) placement earns nothing)
+    rng = np.random.default_rng(0)
+    p = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** ZIPF_A
+    p /= p.sum()
+    perm = rng.permutation(n)
+    batches = []
+    for _ in range(total + LOOKAHEAD):
+        batches.append(perm[rng.choice(n, size=(B, MULTI_HOT), p=p)])
+    grads = []
+    for _ in range(total):
+        grads.append(np.asarray(rng.standard_normal((B, DIM)), np.float32) * 0.1)
+
+    key = jax.random.PRNGKey(0)
+    state = {
+        "table": jax.random.normal(key, (n, DIM), jnp.float32),
+        "acc": jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (n, DIM))) * 0.1,
+    }
+
+    # full-device oracle: same stream through the unchanged full-table
+    # kernels — the latency baseline AND the bitwise ground truth
+    ref_t, ref_a = state["table"], state["acc"]
+    t0 = time.perf_counter()
+    for t in range(total):
+        idx = jnp.asarray(batches[t])
+        embedding_bag_op(ref_t, idx).block_until_ready()
+        g = jnp.asarray(grads[t])
+        ref_t, ref_a = sparse_adagrad_op(ref_t, ref_a, idx, g, lr=EMB_LR)
+    jax.block_until_ready(ref_t)
+    oracle_us = (time.perf_counter() - t0) / total * 1e6
+    row_bytes = 2 * 4 * DIM  # f32 table + acc
+
+    rows: List[Tuple[str, float, str]] = []
+    results: Dict[str, object] = {}
+    for la in (LOOKAHEAD, 0):
+        store = CachedStore(state, CacheConfig(hot_rows=H, lookahead=la))
+        base = store.stats.as_dict()
+        t0 = time.perf_counter()
+        for t in range(total):
+            if t == warm:  # steady state from here: diff stats, restart clock
+                base = store.stats.as_dict()
+                t0 = time.perf_counter()
+            if la:
+                store.prefetch([batches[t + j] for j in range(la)])
+            jax.block_until_ready(store.lookup(batches[t]))
+            store.update(batches[t], jnp.asarray(grads[t]), EMB_LR)
+        jax.block_until_ready(store.state.hot["table"])
+        us = (time.perf_counter() - t0) / meas * 1e6
+        d = {k: v - base[k] for k, v in store.stats.as_dict().items()}
+        merged = store.merged()
+        table_eq = bool((np.asarray(merged["table"]) == np.asarray(ref_t)).all())
+        acc_eq = bool((np.asarray(merged["acc"]) == np.asarray(ref_a)).all())
+        bitwise = table_eq and acc_eq
+        hit_rate = d["hit_rows"] / max(d["hit_rows"] + d["miss_rows"], 1)
+        stall_frac = d["stall_lookups"] / max(d["lookups"], 1)
+        res = {
+            "hit_rate": hit_rate,
+            "stall_fraction": stall_frac,
+            "migrated_bytes_per_batch": (d["bytes_h2d"] + d["bytes_d2h"]) / meas,
+            "prefetch_rows": d["prefetch_rows"],
+            "evict_rows": d["evict_rows"],
+            "writeback_rows": d["writeback_rows"],
+            "stall_lookups": d["stall_lookups"],
+            "update_conflicts": d["update_conflicts"],
+            "dropped_updates": d["dropped_updates"],
+            "us_per_batch": us,
+            "oracle_us_per_batch": oracle_us,
+            "device_bytes_frac": H / n,
+            "bitwise_vs_oracle": bitwise,
+        }
+        results[f"lookahead{la}"] = res
+        derived = f"hit {hit_rate:.3f} stall {stall_frac:.3f} bitwise {bitwise}"
+        rows.append((f"cache/lookahead{la}", us, derived))
+        mig_kb = res["migrated_bytes_per_batch"] / 1e3
+        mig_rows = (d["bytes_h2d"] + d["bytes_d2h"]) // row_bytes // meas
+        print(
+            f"  lookahead={la}: hit rate {hit_rate:.3f}  stall fraction "
+            f"{stall_frac:.3f}  migrated {mig_kb:.1f} KB/batch "
+            f"({mig_rows} rows/batch)  {us:.0f} us/batch "
+            f"(oracle {oracle_us:.0f})  bitwise {bitwise}",
+        )
+    print(
+        f"  device residency: {H}/{n} rows = {H / n:.0%} of the "
+        f"full-device oracle's footprint",
+    )
+
+    # trajectory parity: the cache must be invisible to training itself
+    cfg = dlrm_ctr.tiny()
+    iters = TINY["sim_iters"] if tiny else SIM_ITERS
+    sc = SyncConfig(algo="easgd", gap=4, delay=1, engine="flat")
+
+    def run(cache):
+        return HogwildSim(
+            cfg,
+            sc,
+            n_trainers=2,
+            n_threads=2,
+            batch_size=16,
+            optimizer=optim.adagrad(0.02),
+            seed=1,
+            cache=cache,
+        ).run(iters)
+
+    out_u = run(None)
+    out_c = run(CacheConfig(hot_frac=HOT_FRAC, lookahead=LOOKAHEAD))
+    eu = out_u["state"].emb_state
+    ec = out_c["state"].emb_state
+    loss_eq = out_u["train_loss"] == out_c["train_loss"]
+    table_eq = bool((np.asarray(eu["table"]) == np.asarray(ec["table"])).all())
+    acc_eq = bool((np.asarray(eu["acc"]) == np.asarray(ec["acc"])).all())
+    traj = bool(loss_eq and table_eq and acc_eq)
+    cs = out_c["cache_stats"]
+    sim_hits = cs["hit_rows"] / max(cs["hit_rows"] + cs["miss_rows"], 1)
+    results["sim"] = {
+        "trajectory_bitwise": traj,
+        "iters": iters,
+        "hit_rate": sim_hits,
+        "stall_lookups": cs["stall_lookups"],
+        "cache_stats": cs,
+    }
+    rows.append(("cache/sim_parity", 0.0, f"trajectory_bitwise {traj} hit {sim_hits:.3f}"))
+    print(
+        f"  sim: cache-on trajectory bitwise == cache-off: {traj} "
+        f"(hit rate {sim_hits:.3f}, {cs['stall_lookups']} stalls)",
+    )
+
+    if json_path:
+        payload = {
+            "bench": "cache_bench",
+            "config": {
+                "n_rows": n,
+                "dim": DIM,
+                "hot_rows": H,
+                "hot_frac": HOT_FRAC,
+                "zipf_a": ZIPF_A,
+                "batch": B,
+                "multi_hot": MULTI_HOT,
+                "lookahead": LOOKAHEAD,
+                "warmup_batches": warm,
+                "measure_batches": meas,
+                "sim_iters": iters,
+                "tiny": tiny,
+            },
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {json_path}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true", help="write BENCH_cache.json to the cwd")
+    ap.add_argument("--tiny", action="store_true", help="smoke-test shapes (CI)")
+    args = ap.parse_args()
+    rows = bench_cache(json_path="BENCH_cache.json" if args.json else None, tiny=args.tiny)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Prints human-readable tables followed by a ``name,us_per_call,derived`` CSV
   PYTHONPATH=src python -m benchmarks.run --only sync --json  # + BENCH_sync.json
   PYTHONPATH=src python -m benchmarks.run --only emb --json   # + BENCH_emb.json
   PYTHONPATH=src python -m benchmarks.run --only elastic --json  # + BENCH_elastic.json
+  PYTHONPATH=src python -m benchmarks.run --only cache --json    # + BENCH_cache.json
 """
 from __future__ import annotations
 
@@ -17,11 +18,12 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|sync|emb|elastic|roofline")
+                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|sync|emb|elastic|cache|roofline")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_sync.json / BENCH_emb.json / BENCH_elastic.json to the cwd")
     args = ap.parse_args()
 
+    from benchmarks.cache_bench import bench_cache
     from benchmarks.elastic_bench import bench_elastic
     from benchmarks.emb_bench import bench_emb
     from benchmarks.kernel_bench import bench_kernels
@@ -46,6 +48,8 @@ def main() -> None:
             json_path="BENCH_emb.json" if args.json else None)),
         ("elastic", lambda: bench_elastic(
             json_path="BENCH_elastic.json" if args.json else None)),
+        ("cache", lambda: bench_cache(
+            json_path="BENCH_cache.json" if args.json else None)),
         ("roofline", bench_roofline),
     ]
     rows = []

@@ -25,6 +25,18 @@ repo's benchmarks exist to defend:
     cohort's throughput retained while it was down, and the final embedding
     table within the committed bounded-staleness distance of the span-
     matched no-fault oracle.
+* ``BENCH_cache.json`` — the tiered embedding cache (DESIGN.md §11):
+  - with the lookahead prefetcher on and a 25% hot budget on the zipf
+    stream, steady-state hit rate >= 0.9 and stall fraction <= 0.1 (the
+    shadow thread stages promotions before lookups land);
+  - the store replays its whole lookup+update stream BITWISE equal to the
+    full-device oracle, and a cached ``HogwildSim`` trajectory (loss stream
+    + final packed table/acc) is bitwise-identical to the uncached run —
+    the cache-invisibility contract checkpoints and the sync oracle depend
+    on;
+  - device residency stays at the committed hot fraction (the whole point:
+    a table bigger than the box), and nothing is silently lost — zero
+    dropped updates with every shard healthy.
 
 Stream-ratio floors are analytic (byte counts, machine-independent); the
 elastic floors are wall-clock ratios of equal-length runs, which is why
@@ -66,6 +78,18 @@ SYNC_CRASH_RETENTION_MIN = 0.80
 PS_FAIL_RETENTION_MIN = 0.75
 PS_FAIL_EMB_PROGRESS_MIN = 0.9
 PS_FAIL_EMB_REL_ERR_MAX = 0.6
+# Tiered-cache floors (DESIGN.md §11). Hit rate: with the prefetcher
+# peeking the queued batches the working set is resident before the lookup
+# lands, so the shipping config measures ~1.0 (and the lookahead=0 contrast
+# row ~0.6-0.7 from frequency placement alone) — 0.9 separates "lookahead
+# works" from "LFU alone" with margin on both sides. Stall fraction floors
+# the same property from the latency side. The bitwise floors are exact by
+# construction (placement must not change a single bit) so any slack would
+# only hide a real bug. hot_frac tolerance covers integer rounding of the
+# row budget.
+CACHE_HIT_RATE_MIN = 0.9
+CACHE_STALL_FRACTION_MAX = 0.1
+CACHE_HOT_FRAC_TOL = 0.01
 
 
 class Floors:
@@ -237,17 +261,65 @@ def check_elastic(d: dict, fl: Floors) -> None:
         _check_auto_events(mode, results[mode]["straggler_auto"], slot, fl)
 
 
+def check_cache(d: dict, fl: Floors) -> None:
+    cfg = d["config"]
+    la = cfg.get("lookahead", 2)
+    hot = d["results"][f"lookahead{la}"]
+    hit = hot["hit_rate"]
+    fl.check(
+        hit >= CACHE_HIT_RATE_MIN,
+        f"cache/lookahead{la}: steady-state hit rate {hit:.3f} >= "
+        f"{CACHE_HIT_RATE_MIN} (25% hot budget, zipf({cfg.get('zipf_a')}) — "
+        f"the prefetcher stages the working set before lookups land)",
+    )
+    stall = hot["stall_fraction"]
+    fl.check(
+        stall <= CACHE_STALL_FRACTION_MAX,
+        f"cache/lookahead{la}: stall fraction {stall:.3f} <= "
+        f"{CACHE_STALL_FRACTION_MAX} (cold hits beating the horizon stay "
+        f"rare)",
+    )
+    for name in (f"lookahead{la}", "lookahead0"):
+        row = d["results"][name]
+        fl.check(
+            bool(row["bitwise_vs_oracle"]),
+            f"cache/{name}: lookup+update stream BITWISE equal to the "
+            f"full-device oracle (placement never changes a bit)",
+        )
+        fl.check(
+            row.get("dropped_updates", 1) == 0,
+            f"cache/{name}: zero dropped updates with every shard healthy",
+        )
+    frac = hot["device_bytes_frac"]
+    want = cfg.get("hot_frac", 0.25)
+    fl.check(
+        abs(frac - want) <= CACHE_HOT_FRAC_TOL,
+        f"cache/lookahead{la}: device residency {frac:.3f} == committed "
+        f"hot_frac {want} (the table stays bigger than the box)",
+    )
+    fl.check(
+        bool(d["results"]["sim"]["trajectory_bitwise"]),
+        "cache/sim: cached training trajectory (loss stream + final packed "
+        "table/acc) bitwise-identical to the uncached run",
+    )
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--dir", default=".", help="directory holding BENCH_*.json")
     ap.add_argument(
         "--skip",
         default="",
-        help="comma-separated benches to skip (sync,emb,elastic)",
+        help="comma-separated benches to skip (sync,emb,elastic,cache)",
     )
     args = ap.parse_args()
     skip = {s for s in args.skip.split(",") if s}
-    checks = {"sync": check_sync, "emb": check_emb, "elastic": check_elastic}
+    checks = {
+        "sync": check_sync,
+        "emb": check_emb,
+        "elastic": check_elastic,
+        "cache": check_cache,
+    }
     fl = Floors()
     for name, fn in checks.items():
         if name in skip:

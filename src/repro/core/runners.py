@@ -94,6 +94,7 @@ from repro.core.supervision import Supervisor, SupervisorConfig
 from repro.data import ctr
 from repro.embeddings import shards as emb_shards
 from repro.embeddings import table as emb
+from repro.embeddings.cache import CacheConfig, CachedStore
 from repro.models import dlrm
 from repro.optim import Optimizer
 
@@ -140,9 +141,16 @@ class HogwildSim:
         membership: Optional[Membership] = None,
         schedule: Optional[Union[MembershipSchedule,
                                  Sequence[Tuple[int, str, int]]]] = None,
+        cache: Optional[CacheConfig] = None,
     ):
         self.cfg = cfg
         self.sync_cfg = sync_cfg.validate()
+        # Tiered embedding cache (DESIGN.md §11): the packed table moves
+        # behind a CachedStore and training runs lookup -> dense jit ->
+        # fused update with only the hot tier device-resident. Deterministic:
+        # the batch stream is a pure function of the iteration counter, so
+        # the prefetch horizon is peeked, not raced.
+        self.cache = cache.validate() if cache is not None else None
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
         # Elastic membership: buffers are CAPACITY-padded at R_max; join/
@@ -189,13 +197,12 @@ class HogwildSim:
             (w, opt_state), _ = jax.lax.scan(apply_one, (w, opt_state), g_w)
             return w, opt_state, jnp.mean(loss), g_pooled
 
-        def train_core(state_w, state_opt, emb_state, batch, active=None):
-            # batch leaves: (R, M, B, ...)
-            idx = batch["sparse"]
-            pooled = emb.lookup(
-                emb_state, spec, idx.reshape(-1, cfg.n_sparse_features, cfg.multi_hot)
-            )
-            pooled = pooled.reshape(self.R, self.M, self.B, cfg.n_sparse_features, -1)
+        def dense_core(state_w, state_opt, pooled, batch, active=None):
+            # Everything downstream of the embedding lookup. Factored out of
+            # train_core so the cached path can run it as its own jit with
+            # ``pooled`` as an INPUT (lookup and sparse update run standalone
+            # against the hot tier) — bitwise-identical to the fused program
+            # (tests/test_cache.py pins this).
             w2, opt2, loss, g_pooled = jax.vmap(one_trainer)(
                 state_w, state_opt, batch["dense"], pooled, batch["labels"]
             )
@@ -213,6 +220,20 @@ class HogwildSim:
                 opt2 = jax.tree.map(keep, opt2, state_opt)
                 g_pooled = jnp.where(
                     active.reshape((R, 1, 1, 1, 1)), g_pooled, 0.0)
+            # elastic callers get the per-replica loss vector (the host masks
+            # dead slots out of the reported mean and the join tests read it)
+            return w2, opt2, (loss if active is not None
+                              else jnp.mean(loss)), g_pooled
+
+        def train_core(state_w, state_opt, emb_state, batch, active=None):
+            # batch leaves: (R, M, B, ...)
+            idx = batch["sparse"]
+            pooled = emb.lookup(
+                emb_state, spec, idx.reshape(-1, cfg.n_sparse_features, cfg.multi_hot)
+            )
+            pooled = pooled.reshape(self.R, self.M, self.B, cfg.n_sparse_features, -1)
+            w2, opt2, loss, g_pooled = dense_core(
+                state_w, state_opt, pooled, batch, active=active)
             # Hogwild on the single embedding copy: every trainer/thread applies
             # immediately; one fused scatter-Adagrad kernel launch implements
             # the duplicate-row accumulate.
@@ -220,10 +241,7 @@ class HogwildSim:
             flat_g = g_pooled.reshape(-1, cfg.n_sparse_features, cfg.embedding_dim)
             emb2 = emb.sparse_adagrad_update_fused(
                 emb_state, spec, flat_idx, flat_g, self.emb_lr)
-            # elastic callers get the per-replica loss vector (the host masks
-            # dead slots out of the reported mean and the join tests read it)
-            return w2, opt2, emb2, (loss if active is not None
-                                    else jnp.mean(loss))
+            return w2, opt2, emb2, loss
 
         sc = self.sync_cfg
         if self.engine == "flat":
@@ -265,6 +283,34 @@ class HogwildSim:
         self._train_iter = jax.jit(train_iter, donate_argnums=(0, 1, 2))
         self._train_iter_elastic = jax.jit(
             train_iter_elastic, donate_argnums=(0, 1, 2))
+
+        # Cached-mode dense programs: pooled arrives as an input (the hot-
+        # tier lookup ran standalone) and the sparse update runs standalone
+        # after; the embedding state never enters this jit.
+        if self.engine == "flat":
+            fs = self.flat
+
+            def dense_iter(w_buf, state_opt, pooled, batch):
+                w2, opt2, loss, g = dense_core(
+                    fs.unpack_stack(w_buf), state_opt, pooled, batch)
+                return fs.pack_stack(w2), opt2, loss, g
+
+            def dense_iter_elastic(w_buf, state_opt, active, pooled, batch):
+                w2, opt2, loss, g = dense_core(
+                    fs.unpack_stack(w_buf), state_opt, pooled, batch,
+                    active=active)
+                return fs.pack_stack(w2), opt2, loss, g
+        else:
+            def dense_iter(state_w, state_opt, pooled, batch):
+                return dense_core(state_w, state_opt, pooled, batch)
+
+            def dense_iter_elastic(state_w, state_opt, active, pooled, batch):
+                return dense_core(state_w, state_opt, pooled, batch,
+                                  active=active)
+
+        self._dense_iter = jax.jit(dense_iter, donate_argnums=(0, 1))
+        self._dense_iter_elastic = jax.jit(
+            dense_iter_elastic, donate_argnums=(0, 1))
 
         def eval_batch(w, emb_state, batch):
             pooled = emb.lookup(emb_state, spec, batch["sparse"])
@@ -365,6 +411,36 @@ class HogwildSim:
         st = self.init_state() if state is None else state
         sc = self.sync_cfg
         elastic = self._elastic
+        cached = self.cache is not None
+        store: Optional[CachedStore] = None
+        batch_memo: Dict[int, Any] = {}
+        gid_memo: Dict[int, np.ndarray] = {}
+        if cached:
+            # the packed table moves behind the two-tier store for the run;
+            # merged() restores the canonical emb_state at the end, so
+            # resume/save/eval see exactly the uncached representation
+            store = CachedStore(st.emb_state, self.cache)
+            st.emb_state = None
+            offs = np.asarray(self.spec.offsets)
+
+        def _get_batch(it: int):
+            if not cached:
+                return self.make_batch(it)
+            if it not in batch_memo:
+                batch_memo[it] = self.make_batch(it)
+            return batch_memo[it]
+
+        def _gids(it: int) -> np.ndarray:
+            # packed GLOBAL row ids of iteration ``it``'s batch — the peek:
+            # the one-pass stream is a pure function of the iteration
+            # counter, so "the next K queued batches" are regenerated, not
+            # raced (memoized across the prefetch horizon)
+            if it not in gid_memo:
+                idx = np.asarray(_get_batch(it)["sparse"]).reshape(
+                    -1, self.cfg.n_sparse_features, self.cfg.multi_hot)
+                gid_memo[it] = idx + offs[None, :, None]
+            return gid_memo[it]
+
         losses: List[float] = []
         replica_losses: List[np.ndarray] = []
         sync_count = 0
@@ -382,23 +458,52 @@ class HogwildSim:
                     reason = ev[2] if len(ev) > 2 else ""
                     st = self._apply_membership_event(st, kind, slot, reason)
             active = self.membership.active_mask() if elastic else None
-            batch = self.make_batch(t)
-            if elastic:
-                st.w_stack, st.opt_stack, st.emb_state, loss_vec = (
+            batch = _get_batch(t)
+            if cached:
+                # deterministic lookahead: one prefetch round covering the
+                # horizon [t, t+K) at the iteration boundary — exactly what
+                # the threaded shadow thread does between syncs, quantized
+                if self.cache.lookahead:
+                    store.prefetch([_gids(t + j)
+                                    for j in range(self.cache.lookahead)])
+                gids = _gids(t)
+                pooled = store.lookup(gids).reshape(
+                    self.R, self.M, self.B, self.cfg.n_sparse_features, -1)
+                if elastic:
+                    st.w_stack, st.opt_stack, loss_out, g_pooled = (
+                        self._dense_iter_elastic(st.w_stack, st.opt_stack,
+                                                 jnp.asarray(active), pooled,
+                                                 batch))
+                else:
+                    st.w_stack, st.opt_stack, loss_out, g_pooled = (
+                        self._dense_iter(st.w_stack, st.opt_stack, pooled,
+                                         batch))
+                # standalone fused scatter-Adagrad on the hot tier, same
+                # (B*F, m)/(B*F, d) flattening as sparse_adagrad_update_fused
+                store.update(gids.reshape(-1, self.cfg.multi_hot),
+                             g_pooled.reshape(-1, self.cfg.embedding_dim),
+                             self.emb_lr)
+                for k in [k for k in gid_memo if k <= t]:
+                    del gid_memo[k]
+                    batch_memo.pop(k, None)
+            elif elastic:
+                st.w_stack, st.opt_stack, st.emb_state, loss_out = (
                     self._train_iter_elastic(st.w_stack, st.opt_stack,
                                              st.emb_state, jnp.asarray(active),
                                              batch))
-                lv = np.asarray(loss_vec)
+            else:
+                st.w_stack, st.opt_stack, st.emb_state, loss_out = (
+                    self._train_iter(st.w_stack, st.opt_stack, st.emb_state,
+                                     batch))
+            if elastic:
+                lv = np.asarray(loss_out)
                 replica_losses.append(lv)
                 # an all-dead cohort trains nothing: nan, not a mean of []
                 losses.append(float(lv[active].mean()) if active.any()
                               else float("nan"))
                 examples += int(active.sum()) * self.M * self.B
             else:
-                st.w_stack, st.opt_stack, st.emb_state, loss = self._train_iter(
-                    st.w_stack, st.opt_stack, st.emb_state, batch
-                )
-                losses.append(float(loss))
+                losses.append(float(loss_out))
                 examples += self.R * self.M * self.B
             if sc.mode == "fixed_rate":
                 if (t + 1) % sc.gap == 0 and (active is None or active.any()):
@@ -444,6 +549,10 @@ class HogwildSim:
                 on_iter(t, losses[-1])
             if log_every and (t + 1) % log_every == 0:
                 print(f"iter {t+1}: loss {np.mean(losses[-log_every:]):.5f}")
+        if cached:
+            # fold the hot tier back into the canonical packed state: the
+            # cache is invisible to save/eval/resume (and to the caller)
+            st.emb_state = store.merged()
         # replica-iterations actually trained (dead slots don't count):
         # identical to n_iters * R when membership never changes
         replica_iters = examples // (self.M * self.B)
@@ -454,6 +563,8 @@ class HogwildSim:
             "avg_sync_gap": (replica_iters / max(sync_count, 1)),
             "examples": examples,
         }
+        if cached:
+            out["cache_stats"] = store.stats.as_dict()
         if elastic:
             out["replica_losses"] = np.stack(replica_losses)
             out["membership_events"] = list(self.membership.events)
@@ -612,8 +723,13 @@ class ThreadedShadowRunner:
                  supervise: bool = True,
                  supervisor_config: Optional[SupervisorConfig] = None,
                  ps_snapshot_every: int = 2,
-                 shard_retry: Optional[emb_shards.ShardRetryPolicy] = None):
+                 shard_retry: Optional[emb_shards.ShardRetryPolicy] = None,
+                 cache: Optional[CacheConfig] = None):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
+        # Tiered embedding cache (DESIGN.md §11): each PS fronts its table
+        # with a two-tier store; the shadow thread (already the background
+        # worker) runs the lookahead prefetcher between syncs.
+        self.cache = cache.validate() if cache is not None else None
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
         self.R, self.B = n_trainers, batch_size
@@ -678,13 +794,18 @@ class ThreadedShadowRunner:
         self.supervisor: Optional[Supervisor] = None
         plan = self.plan
 
-        def train_one(w, opt_state, shard_tables, batch):
-            pooled = emb_shards.shard_lookup(plan, shard_tables, batch["sparse"])
+        def dense_one(w, opt_state, pooled, batch):
+            # downstream of the lookup — the cached path's jit (pooled came
+            # off the hot tiers via cached_lookup)
             loss, g_w, g_pooled = dlrm.dense_loss_and_grads(
                 w, batch["dense"], pooled, batch["labels"]
             )
             w, opt_state = optimizer.update(w, opt_state, g_w)
             return w, opt_state, loss, g_pooled
+
+        def train_one(w, opt_state, shard_tables, batch):
+            pooled = emb_shards.shard_lookup(plan, shard_tables, batch["sparse"])
+            return dense_one(w, opt_state, pooled, batch)
 
         def _make_shard_update(s: int):
             return jax.jit(lambda st, idx, g: emb_shards.shard_update(
@@ -702,9 +823,17 @@ class ThreadedShadowRunner:
                 )
                 return fs.pack(w), opt_state, loss, g_pooled
 
+            def dense_one_flat(w_plane, opt_state, pooled, batch):
+                w, opt_state, loss, g_pooled = dense_one(
+                    fs.unpack(w_plane), opt_state, pooled, batch
+                )
+                return fs.pack(w), opt_state, loss, g_pooled
+
             self._train_one = jax.jit(train_one_flat)
+            self._train_dense = jax.jit(dense_one_flat)
         else:
             self._train_one = jax.jit(train_one)
+            self._train_dense = jax.jit(dense_one)
         # The background round: a host callable from the algorithm that
         # mutates the per-trainer planes/pytrees in place (Algorithm 1).
         self._shadow_round = self.algo.make_shadow_round(self.sync_cfg, self.flat)
@@ -723,14 +852,22 @@ class ThreadedShadowRunner:
         w0 = dlrm.init_dense(self.cfg, kw)
         plane = self.flat.pack(w0) if self.engine == "flat" else w0
         opt0 = self.opt.init(w0)
-        embs = emb_shards.EmbeddingShards.init(self.plan, ke)
+        embs = emb_shards.EmbeddingShards.init(self.plan, ke, cache=self.cache)
         for it in range(iters):
             batch = ctr.gen_batch(self.cfg, self.teacher, self.seed, it, self.B)
-            plane, opt0, _, g_pooled = self._train_one(
-                plane, opt0, embs.tables(), batch)
-            for s in range(self.n_emb_shards):
-                embs.states[s] = self._emb_updates[s](
-                    embs.states[s], batch["sparse"], g_pooled)
+            if self.cache is not None:
+                sparse_np = np.asarray(batch["sparse"])
+                pooled = embs.cached_lookup(sparse_np)
+                plane, opt0, _, g_pooled = self._train_dense(
+                    plane, opt0, pooled, batch)
+                for s in range(self.n_emb_shards):
+                    embs.cached_update(s, sparse_np, g_pooled, self.emb_lr)
+            else:
+                plane, opt0, _, g_pooled = self._train_one(
+                    plane, opt0, embs.tables(), batch)
+                for s in range(self.n_emb_shards):
+                    embs.states[s] = self._emb_updates[s](
+                        embs.states[s], batch["sparse"], g_pooled)
         # the background/foreground sync round is its own jitted program
         # (retraced per live count): warm it at the initial cohort size on
         # throwaway state, or the FIRST measured round pays the trace —
@@ -805,7 +942,8 @@ class ThreadedShadowRunner:
         self.opt_states = [self.opt.init(w0) for _ in range(self.R)]
         # Per-PS Hogwild states, seed-identical to the packed single table.
         self.emb = emb_shards.EmbeddingShards.init(self.plan, ke,
-                                                   retry=self.shard_retry)
+                                                   retry=self.shard_retry,
+                                                   cache=self.cache)
         self.done = threading.Event()
         self.examples = 0
         self.sync_count = 0
@@ -870,6 +1008,51 @@ class ThreadedShadowRunner:
             # resolve it at call time, after the threads have started
             if sup is not None:
                 sup.beat(name)
+
+        # Lookahead prefetch (DESIGN.md §11): each trainer's stream is a pure
+        # function of (seed + slot, iteration), so the next K queued batches
+        # per live trainer are PEEKED — regenerated on the host, memoized
+        # across rounds — and their per-shard miss sets staged cold->hot by
+        # the background worker between syncs. A trainer that outruns the
+        # horizon pays a counted synchronous promotion, never a stall of
+        # anyone else.
+        _peek_memo: Dict[Tuple[int, int], np.ndarray] = {}
+        _prefetch_gate = threading.Lock()
+
+        def _prefetch_step() -> None:
+            if self.cache is None or self.cache.lookahead == 0:
+                return
+            if not _prefetch_gate.acquire(blocking=False):
+                return  # another incarnation (restart race) is mid-round
+            try:
+                horizons: List[List[np.ndarray]] = [
+                    [] for _ in range(self.n_emb_shards)]
+                for i in range(self.R):
+                    if not self._alive[i]:
+                        continue
+                    base = self.iter_count[i]
+                    for j in range(self.cache.lookahead):
+                        it = base + j
+                        if it >= iters_per_trainer:
+                            break
+                        idx = _peek_memo.get((i, it))
+                        if idx is None:
+                            idx = np.asarray(ctr.gen_batch(
+                                self.cfg, self.teacher, self.seed + i, it,
+                                self.B)["sparse"])
+                            _peek_memo[(i, it)] = idx
+                        for s in range(self.n_emb_shards):
+                            horizons[s].append(
+                                emb_shards._route_np(self.plan, s, idx))
+                for k in [k for k in _peek_memo
+                          if k[1] < self.iter_count[k[0]]]:
+                    del _peek_memo[k]  # trained past it: peek no longer queued
+                for s in range(self.n_emb_shards):
+                    store = self.emb.stores[s]
+                    if store is not None and self.emb.health[s]:
+                        store.prefetch(horizons[s])
+            finally:
+                _prefetch_gate.release()
 
         def _round_over_active() -> int:
             # The round runs over the LIVE planes only: the matching/mean/PS
@@ -1066,10 +1249,20 @@ class ThreadedShadowRunner:
                 batch = ctr.gen_batch(
                     self.cfg, self.teacher, self.seed + i, it, self.B
                 )
-                # Lock-free read of the shared per-PS tables (Hogwild).
-                w, opt_state, loss, g_pooled = self._train_one(
-                    self.w[i], self.opt_states[i], self.emb.tables(), batch
-                )
+                if self.cache is not None:
+                    # hot-tier lookup through the per-PS caches (a miss that
+                    # beat the prefetch horizon promotes synchronously —
+                    # counted, never a stall of another trainer)
+                    sparse_np = np.asarray(batch["sparse"])
+                    pooled = self.emb.cached_lookup(sparse_np)
+                    w, opt_state, loss, g_pooled = self._train_dense(
+                        self.w[i], self.opt_states[i], pooled, batch
+                    )
+                else:
+                    # Lock-free read of the shared per-PS tables (Hogwild).
+                    w, opt_state, loss, g_pooled = self._train_one(
+                        self.w[i], self.opt_states[i], self.emb.tables(), batch
+                    )
                 self.w[i], self.opt_states[i] = w, opt_state
                 # Lock-free read-modify-write PER SHARD: concurrent writers to
                 # different PSs proceed independently; writers to the same PS
@@ -1086,8 +1279,12 @@ class ThreadedShadowRunner:
                         # shard takes the plain lock-free swap; a failed one
                         # retries with backoff then DROPS the update (counted)
                         # — training never blocks on a dead PS
-                        self.emb.try_update(s, self._emb_updates[s],
-                                            batch["sparse"], g_pooled)
+                        if self.cache is not None:
+                            self.emb.cached_update(s, sparse_np, g_pooled,
+                                                   self.emb_lr)
+                        else:
+                            self.emb.try_update(s, self._emb_updates[s],
+                                                batch["sparse"], g_pooled)
                 losses[i].append(float(loss))
                 self.iter_count[i] = it + 1
                 # busy time stops HERE, before any barrier wait: the per-slot
@@ -1144,8 +1341,12 @@ class ThreadedShadowRunner:
                 else:
                     time.sleep(0.001)
                 self._shadow_rounds = r + 1
-                # the shadow thread is already the background worker: PS
-                # snapshots ride its cadence (O(1) reference grabs)
+                # the shadow thread is already the background worker: the
+                # cache's lookahead prefetch rides BETWEEN the sync rounds
+                # (stage promotions/evictions while trainers compute), and
+                # PS snapshots ride its cadence (O(1) reference grabs;
+                # O(hot_rows) merged() drains in cached mode)
+                _prefetch_step()
                 if self._shadow_rounds % self.ps_snapshot_every == 0:
                     self.emb.snapshot_all()
                 # the controller rides the shadow cadence: membership is
@@ -1194,9 +1395,10 @@ class ThreadedShadowRunner:
             # PS chaos injection + timed recovery ride the supervisor's
             # watch loop (its clock domain is the policy's: perf_counter).
             if fr:
-                # no shadow thread to ride: background PS snapshots take the
-                # watch-loop cadence instead (still O(1) reference grabs)
+                # no shadow thread to ride: the lookahead prefetch and the
+                # background PS snapshots take the watch-loop cadence instead
                 self._tick_count += 1
+                _prefetch_step()
                 if self._tick_count % 10 == 0:
                     self.emb.snapshot_all()
             for s, at in self.fault.ps_fail_at.items():
@@ -1346,6 +1548,9 @@ class ThreadedShadowRunner:
             "shard_events": list(self.emb.events),
             "dropped_updates": list(self.emb.dropped_updates),
             "stale_lookups": list(self.emb.stale_lookups),
+            # tiered-cache telemetry (DESIGN.md §11; {} when cache is off)
+            "cache_stats": (self.emb.cache_stats()
+                            if self.cache is not None else {}),
             "sync_rounds": self._shadow_rounds,
             "sync_restarts": sync_restarts,
             "sync_count_at_restart": list(self._sync_count_at_restart),

@@ -27,7 +27,19 @@ lost; lookups transparently fall back to the latest snapshot (a bounded-
 staleness read — training on surviving shards never blocks) and updates
 routed at it retry with backoff under ``ShardRetryPolicy`` and are then
 *dropped* (counted — the measured staleness cost). ``recover_shard``
-rehydrates the shard from its snapshot and it rejoins the routing plan."""
+rehydrates the shard from its snapshot and it rejoins the routing plan.
+
+Tiered cache (DESIGN.md §11): pass a ``CacheConfig`` and each PS fronts its
+contiguous table with a ``embeddings/cache.py`` two-tier store — a device-
+resident hot-row tier the unchanged fused kernels run on, a host-resident
+cold store, and an atomically published routing table. Lookups go through
+``cached_lookup`` (per-shard hot-tier kernel launches, bitwise-identical to
+the full-table path), updates through ``cached_update`` (same health/retry/
+drop ladder as ``try_update``). The cache is invisible above the canonical
+view: ``snapshot_all`` and ``to_packed`` merge hot+cold back into the full
+table, so PS failure, recovery, checkpoints, and the sync oracle see
+exactly what they saw before — at the price that a snapshot drains the hot
+tier (O(hot_rows) device reads) instead of being an O(1) reference grab."""
 from __future__ import annotations
 
 import threading
@@ -39,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.embeddings.cache import CacheConfig, CachedStore
 from repro.embeddings.table import (
     TableSpec,
     bin_pack,
@@ -119,6 +132,15 @@ def _route(plan: ShardPlan, s: int, idx: jnp.ndarray) -> jnp.ndarray:
     loc = jnp.take(idx, jnp.asarray(feats), axis=1)
     offs = jnp.asarray([plan.feature_local_offset[f] for f in feats], jnp.int32)
     return loc + offs[None, :, None]
+
+
+def _route_np(plan: ShardPlan, s: int, idx: np.ndarray) -> np.ndarray:
+    """Host-side ``_route``: the cache layer and the prefetcher index numpy
+    routing tables, so the remap must not round-trip through the device."""
+    feats = np.asarray(plan.bins[s])
+    offs = np.asarray([plan.feature_local_offset[f] for f in plan.bins[s]],
+                      np.int32)
+    return np.take(idx, feats, axis=1) + offs[None, :, None]
 
 
 def shard_lookup(
@@ -210,17 +232,27 @@ class EmbeddingShards:
     Thread model: trainers call ``tables``/``try_update`` lock-free (list
     reads are atomic under the GIL; states are immutable jnp arrays swapped
     wholesale); health/snapshot transitions take ``_lock``. ``init`` seeds
-    generation-0 snapshots, so recovery is always possible."""
+    generation-0 snapshots, so recovery is always possible.
+
+    Cached mode (``cache`` set, DESIGN.md §11): each healthy shard is
+    fronted by a ``CachedStore`` and the hot path moves to
+    ``cached_lookup``/``cached_update`` (``tables``/``try_update`` raise —
+    mixing the two views would fork the shard state). Everything above the
+    hot path is unchanged: snapshots, failure, recovery, and ``to_packed``
+    all go through the store's ``merged()`` canonical view, so the failure
+    domain and checkpoints cannot tell the cache exists."""
 
     def __init__(self, plan: ShardPlan, states: List[Params],
-                 retry: Optional[ShardRetryPolicy] = None):
+                 retry: Optional[ShardRetryPolicy] = None,
+                 cache: Optional[CacheConfig] = None):
         self.plan = plan
-        self.states: List[Optional[Params]] = list(states)
         self.retry = (retry or ShardRetryPolicy()).validate()
+        self.cache = cache.validate() if cache is not None else None
         n = plan.n_shards
         self.health: List[bool] = [True] * n
         # snapshots are reference grabs of the immutable per-shard states —
-        # O(1), taken by the background worker (see snapshot_all)
+        # O(1), taken by the background worker (see snapshot_all). In cached
+        # mode a snapshot instead drains the hot tier (merged(), O(hot_rows)).
         self.snapshots: List[Params] = list(states)
         self.snapshot_t: List[float] = [time.perf_counter()] * n
         self.dropped_updates: List[int] = [0] * n
@@ -228,20 +260,33 @@ class EmbeddingShards:
         self.events: List[ShardEvent] = []
         self.failed_at: Dict[int, float] = {}  # shard -> perf_counter of fail
         self._lock = threading.Lock()
+        if self.cache is None:
+            self.states: List[Optional[Params]] = list(states)
+            self.stores: List[Optional[CachedStore]] = [None] * n
+        else:
+            # The stores OWN the live values; states[] stays None so any
+            # uncached-path access fails loudly instead of reading a fork.
+            self.states = [None] * n
+            self.stores = [CachedStore(st, self.cache) for st in states]
 
     @classmethod
     def init(cls, plan: ShardPlan, key: jax.Array,
-             retry: Optional[ShardRetryPolicy] = None) -> "EmbeddingShards":
+             retry: Optional[ShardRetryPolicy] = None,
+             cache: Optional[CacheConfig] = None) -> "EmbeddingShards":
         # Seed-identical to the single-table engine: init the packed
         # collection once, then split by the plan.
         return cls(plan, shard_states(plan, init_tables(plan.spec, key)),
-                   retry=retry)
+                   retry=retry, cache=cache)
 
     # -- hot-path routing ----------------------------------------------------
     def tables(self) -> Tuple[jnp.ndarray, ...]:
         """Lock-free snapshot of the per-shard tables (Hogwild read). A
         failed shard serves its latest background snapshot — a bounded-
         staleness read instead of a blocked trainer."""
+        if self.cache is not None:
+            raise RuntimeError(
+                "cached mode: use cached_lookup (tables() would read the "
+                "stale full-table copy, not the live hot tier)")
         out = []
         for s in range(self.plan.n_shards):
             st = self.states[s]
@@ -261,6 +306,10 @@ class EmbeddingShards:
         exponential backoff inside ``ShardRetryPolicy``'s budget, then drops
         the update (returns False; the drop is the measured staleness cost —
         a trainer must never block unboundedly on a dead PS)."""
+        if self.cache is not None:
+            raise RuntimeError(
+                "cached mode: use cached_update (try_update would write the "
+                "stale full-table copy, not the live hot tier)")
         retry = self.retry
         deadline = time.perf_counter() + retry.timeout_s
         backoff = retry.backoff_s
@@ -282,15 +331,93 @@ class EmbeddingShards:
         self.dropped_updates[s] += 1
         return False
 
+    # -- cached hot path (DESIGN.md §11) -------------------------------------
+    def cached_lookup(self, idx: np.ndarray) -> jnp.ndarray:
+        """Plan-routed sum-pooled lookup through the per-shard tiered
+        caches: idx (B, F, m) LOCAL-per-feature ids -> (B, F, dim), the
+        exact ``shard_lookup`` contract (bitwise, tests/test_cache.py). One
+        fused hot-tier launch per healthy shard; a failed shard answers
+        from its snapshot's full table (the same bounded-staleness read as
+        ``tables()``, counted in ``stale_lookups``)."""
+        if self.cache is None:
+            raise RuntimeError("cached_lookup requires cache= at init")
+        idx = np.asarray(idx)
+        outs = []
+        for s in range(self.plan.n_shards):
+            store = self.stores[s]
+            if store is not None and self.health[s]:
+                outs.append(store.lookup(_route_np(self.plan, s, idx)))
+            else:
+                self.stale_lookups[s] += 1
+                outs.append(embedding_bag_op(
+                    self.snapshots[s]["table"],
+                    _route(self.plan, s, jnp.asarray(idx))))
+        pooled = jnp.concatenate(outs, axis=1)  # features in bins order
+        inv = np.argsort(np.asarray(self.plan.feature_order))
+        return jnp.take(pooled, jnp.asarray(inv), axis=1)
+
+    def cached_update(self, s: int, idx: np.ndarray, g_pooled: jnp.ndarray,
+                      lr: float, eps: float = 1e-8) -> bool:
+        """Route one Hogwild write at shard ``s`` through its tiered cache:
+        same health ladder as ``try_update`` (retry with backoff against a
+        failed shard, then a counted drop), with the inner write landing on
+        the hot tier via the store's optimistic swap. idx is the full
+        (B, F, m) batch; this routes shard ``s``'s features and gradient
+        planes exactly like ``shard_update``."""
+        if self.cache is None:
+            raise RuntimeError("cached_update requires cache= at init")
+        idx = np.asarray(idx)
+        m, d = idx.shape[-1], g_pooled.shape[-1]
+        loc = _route_np(self.plan, s, idx).reshape(-1, m)
+        g = jnp.take(g_pooled, jnp.asarray(self.plan.bins[s]),
+                     axis=1).reshape(-1, d)
+        retry = self.retry
+        deadline = time.perf_counter() + retry.timeout_s
+        backoff = retry.backoff_s
+        for attempt in range(retry.retries + 1):
+            store = self.stores[s]
+            if self.health[s] and store is not None:
+                # the store's own bounded retry handles migration races; a
+                # False here is already counted in its dropped_updates
+                return store.update(loc, g, lr)
+            if attempt == retry.retries or time.perf_counter() >= deadline:
+                break
+            time.sleep(min(backoff, max(deadline - time.perf_counter(), 0.0)))
+            backoff *= 2.0
+        self.dropped_updates[s] += 1
+        return False
+
+    def cache_stats(self) -> Dict[str, int]:
+        """Summed ``CacheStats`` across the live per-shard stores."""
+        total: Dict[str, int] = {}
+        for store in self.stores:
+            if store is None:
+                continue
+            for k, v in store.stats.as_dict().items():
+                total[k] = total.get(k, 0) + v
+        return total
+
     # -- failure-domain transitions ------------------------------------------
     def snapshot_all(self, reason: str = "") -> None:
         """Background snapshot of every healthy shard (reference grabs of
         the immutable states — O(n_shards), no copies). The shadow thread
         calls this every few rounds; the snapshot is what a failed shard
-        serves and what recovery rehydrates from."""
+        serves and what recovery rehydrates from.
+
+        Cached mode: the snapshot is ``stores[s].merged()`` — hot+cold
+        folded back into the canonical table, so recovery and checkpoints
+        stay cache-invisible. That costs O(hot_rows) device reads per shard
+        instead of an O(1) reference grab; still the background worker's
+        bill, never a trainer's."""
         now = time.perf_counter()
         with self._lock:
             for s in range(self.plan.n_shards):
+                if self.cache is not None:
+                    store = self.stores[s]
+                    if self.health[s] and store is not None:
+                        self.snapshots[s] = store.merged()
+                        self.snapshot_t[s] = now
+                    continue
                 st = self.states[s]
                 if self.health[s] and st is not None:
                     self.snapshots[s] = st
@@ -304,6 +431,7 @@ class EmbeddingShards:
                 return  # already down
             self.health[s] = False
             self.states[s] = None
+            self.stores[s] = None  # cached mode: both tiers die with the PS
             self.failed_at[s] = time.perf_counter()
             self.events.append(
                 ShardEvent("ps_fail", s, self.failed_at[s], reason))
@@ -316,7 +444,13 @@ class EmbeddingShards:
         with self._lock:
             if self.health[s]:
                 return  # already up
-            self.states[s] = self.snapshots[s]
+            if self.cache is not None:
+                # rebuild the tiered store from the canonical snapshot — a
+                # background cache-warm migration (placement restarts from
+                # the default; the prefetcher re-derives it within a round)
+                self.stores[s] = CachedStore(self.snapshots[s], self.cache)
+            else:
+                self.states[s] = self.snapshots[s]
             self.health[s] = True
             self.failed_at.pop(s, None)
             self.events.append(
@@ -327,7 +461,14 @@ class EmbeddingShards:
 
     def to_packed(self) -> Params:
         """The engine-independent packed {"table", "acc"} view. A failed
-        shard contributes its snapshot (the best surviving copy)."""
-        states = [st if st is not None else self.snapshots[s]
-                  for s, st in enumerate(self.states)]
+        shard contributes its snapshot (the best surviving copy). Cached
+        shards contribute ``merged()`` — the cache-invisibility contract:
+        checkpoints and the sync oracle see the canonical full tables."""
+        if self.cache is not None:
+            states = [store.merged() if store is not None
+                      else self.snapshots[s]
+                      for s, store in enumerate(self.stores)]
+        else:
+            states = [st if st is not None else self.snapshots[s]
+                      for s, st in enumerate(self.states)]
         return packed_state(self.plan, states)

@@ -31,18 +31,22 @@ def main():
 
     cfg = reduced(get_config(args.arch))
     key = jax.random.PRNGKey(args.seed)
-    params = spmd.init_params(cfg, key)
+    # independent streams: reusing one key would correlate the prompts (and
+    # the vlm/audio prefix noise) with the weight init
+    k_init, k_prompt, k_prefix = jax.random.split(key, 3)
+    params = spmd.init_params(cfg, k_init)
     n_prefix = cfg.frontend.n_tokens if cfg.family == "vlm" else 0
     s_max = n_prefix + args.prompt_len + args.gen
     B = args.batch
 
-    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab_size)
+    prompts = jax.random.randint(k_prompt, (B, args.prompt_len), 0, cfg.vocab_size)
     batch = {"tokens": prompts}
     if cfg.family == "vlm":
         batch["prefix_embeds"] = jax.random.normal(
-            key, (B, cfg.frontend.n_tokens, cfg.d_model)) * 0.1
+            k_prefix, (B, cfg.frontend.n_tokens, cfg.d_model)) * 0.1
     if cfg.family == "audio":
-        batch["frames"] = jax.random.normal(key, (B, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
+        batch["frames"] = jax.random.normal(
+            k_prefix, (B, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
 
     prefill = jax.jit(spmd.make_prefill_step(cfg, s_max))
     decode = jax.jit(spmd.make_decode_step(cfg))

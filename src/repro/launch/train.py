@@ -41,6 +41,7 @@ from repro.core.membership import FaultSpec
 from repro.core.runners import HogwildSim, ThreadedShadowRunner
 from repro.core.scheduler import PolicyConfig, StragglerPolicy
 from repro.core.sync import SyncConfig
+from repro.embeddings.cache import CacheConfig
 
 
 def _parse_slot_map(spec, cast):
@@ -69,9 +70,17 @@ def run_dlrm(args) -> dict:
     sync_cfg = SyncConfig(algo=args.algo, mode=args.mode, gap=args.sync_gap,
                           alpha=args.alpha, delay=args.sync_delay)
     opt = optim.make(args.optimizer, args.lr)
+    # Tiered embedding cache (DESIGN.md §11): --cache-rows N keeps only N
+    # rows of each store device-resident; --lookahead K peeks K queued
+    # batches so the background prefetcher hides the cold misses.
+    cache = None
+    if args.cache_rows is not None:
+        cache = CacheConfig(hot_rows=args.cache_rows, lookahead=args.lookahead)
     print(f"DLRM {'tiny' if args.tiny else 'full'}: {cfg.n_sparse_features} sparse features, "
           f"{cfg.n_embedding_rows:,} embedding rows; "
-          f"ELP = {elp(args.batch_size, args.threads, args.trainers):,}")
+          f"ELP = {elp(args.batch_size, args.threads, args.trainers):,}"
+          + (f"; cache hot_rows={args.cache_rows} lookahead={args.lookahead}"
+             if cache else ""))
     if args.auto_demote and not args.threaded:
         raise SystemExit(
             "--auto-demote requires --threaded: the deterministic sim has no "
@@ -108,8 +117,14 @@ def run_dlrm(args) -> dict:
         runner = ThreadedShadowRunner(
             cfg, sync_cfg, n_trainers=args.trainers, batch_size=args.batch_size,
             optimizer=opt, seed=args.seed, sync_sleep_s=args.sync_sleep,
-            fault_spec=fault, straggler_policy=policy)
+            fault_spec=fault, straggler_policy=policy, cache=cache)
         out = runner.run(args.iters)
+        if out["cache_stats"]:
+            cs = out["cache_stats"]
+            hits = cs["hit_rows"] / max(cs["hit_rows"] + cs["miss_rows"], 1)
+            print(f"cache: hit_rate={hits:.3f} stalls={cs['stall_lookups']}"
+                  f"/{cs['lookups']} prefetched={cs['prefetch_rows']} "
+                  f"migrated={(cs['bytes_h2d'] + cs['bytes_d2h'])/1e6:.2f}MB")
         print(f"EPS={out['eps']:.0f} (window {out['eps_window']:.0f})  "
               f"avg_sync_gap={out['avg_sync_gap']:.2f} "
               f"iters/trainer={out['iter_count']} "
@@ -134,7 +149,8 @@ def run_dlrm(args) -> dict:
                              "supervision_events", "shard_events")}
     sim = HogwildSim(cfg, sync_cfg, n_trainers=args.trainers, n_threads=args.threads,
                      batch_size=args.batch_size, optimizer=opt, seed=args.seed,
-                     schedule=_parse_schedule(args.membership_schedule))
+                     schedule=_parse_schedule(args.membership_schedule),
+                     cache=cache)
     st0 = None
     if args.restore:
         st0 = sim.load_state(args.restore)
@@ -148,6 +164,12 @@ def run_dlrm(args) -> dict:
     print(f"train loss {np.mean(out['train_loss'][:10]):.5f} -> "
           f"{np.mean(out['train_loss'][-10:]):.5f}; eval {ev:.5f}; "
           f"avg_sync_gap {out['avg_sync_gap']:.2f}; EPS(sim wall) {examples/wall:.0f}")
+    if "cache_stats" in out:
+        cs = out["cache_stats"]
+        hits = cs["hit_rows"] / max(cs["hit_rows"] + cs["miss_rows"], 1)
+        print(f"cache: hit_rate={hits:.3f} stalls={cs['stall_lookups']}"
+              f"/{cs['lookups']} prefetched={cs['prefetch_rows']} "
+              f"migrated={(cs['bytes_h2d'] + cs['bytes_d2h'])/1e6:.2f}MB")
     if args.save:
         # engine-independent elastic checkpoint: dense replicas as the named
         # pytree (not the flat engine's packed buffer) + opaque algo state
@@ -263,6 +285,12 @@ def main():
     d.add_argument("--probation", type=float, default=1.0,
                    help="seconds a demoted slot must probe healthy before "
                         "re-admission")
+    d.add_argument("--cache-rows", type=int, default=None,
+                   help="tiered embedding cache: device-resident hot rows "
+                        "per store (absent = whole table on device)")
+    d.add_argument("--lookahead", type=int, default=2,
+                   help="batches the background prefetcher peeks ahead "
+                        "(0 = no prefetch; cold rows stall synchronously)")
 
     l = sub.add_parser("lm")
     l.add_argument("--arch", choices=list(ARCH_IDS), default="minicpm-2b")

@@ -1,0 +1,422 @@
+"""Tiered embedding cache (embeddings/cache.py, DESIGN.md §11).
+
+Three layers:
+
+* **Store unit layer** — ``CacheConfig`` validation, routing-table
+  invariants (every row routed to exactly one (tier, slot)) across a
+  migration-heavy stream, LFU eviction never dropping a row with a pending
+  Adagrad update (writeback-before-reuse), the counted synchronous stall
+  path at ``lookahead=0``, and the hot-tier-too-small config error.
+
+* **Bitwise-parity layer** — the cache is a PURE placement optimization:
+  hot-tier kernel launches and ``merged()`` reconstruction are bitwise-
+  identical to the same stream through the full-table kernels, at the
+  store, at ``EmbeddingShards`` (``cached_lookup``/``cached_update`` vs
+  ``shard_lookup``/``shard_update``), and through a whole ``HogwildSim``
+  run (cache-on trajectory == cache-off trajectory, flat and pytree
+  engines, elastic included).
+
+* **Composition layer** — PR 6's failure domain with the cache on: fail ->
+  snapshot-fallback lookups -> recover rebuilds the store from the
+  canonical snapshot; plus the uncached fail->recover round-trip parity
+  pin (the rehydration path itself). Threaded smoke: a real-thread run
+  with per-PS caches, live prefetch, and an injected PS failure completes
+  and returns canonical packed state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.core.membership import FaultSpec
+from repro.core.runners import HogwildSim, ThreadedShadowRunner
+from repro.core.supervision import SupervisorConfig
+from repro.core.sync import SyncConfig
+from repro.data import ctr
+from repro.embeddings import table as emb
+from repro.embeddings.cache import (
+    CacheConfig,
+    CachedStore,
+    LookaheadPrefetcher,
+)
+from repro.embeddings.shards import (
+    EmbeddingShards,
+    _route_np,
+    packed_state,
+    plan_shards,
+    shard_lookup,
+    shard_update,
+)
+from repro.kernels.embedding_bag.ops import embedding_bag_op
+from repro.kernels.sparse_adagrad.ops import sparse_adagrad_op
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.timeout(300)
+
+CFG = dlrm_ctr.tiny()
+
+
+def _store(n=128, d=8, hot=32, lookahead=2, seed=0, **kw):
+    key = jax.random.PRNGKey(seed)
+    state = {
+        "table": jax.random.normal(key, (n, d), jnp.float32),
+        "acc": jnp.abs(jax.random.normal(jax.random.fold_in(key, 1),
+                                         (n, d))) * 0.1,
+    }
+    cfg = CacheConfig(hot_rows=hot, lookahead=lookahead, **kw)
+    return CachedStore(state, cfg), state
+
+
+def _zipf_batch(i, n, B=16, m=4):
+    r = np.random.default_rng(i)
+    u = r.random((B, m))
+    return np.minimum((u * u * n).astype(np.int64), n - 1)  # skewed stream
+
+
+# ---------------------------------------------------------------------------
+# CacheConfig
+# ---------------------------------------------------------------------------
+
+def test_config_exactly_one_budget():
+    with pytest.raises(ValueError, match="exactly one"):
+        CacheConfig().validate()
+    with pytest.raises(ValueError, match="exactly one"):
+        CacheConfig(hot_rows=8, hot_frac=0.5).validate()
+    assert CacheConfig(hot_rows=8).validate().hot_rows == 8
+    assert CacheConfig(hot_frac=0.25).validate().hot_frac == 0.25
+
+
+@pytest.mark.parametrize("kw", [dict(hot_rows=0), dict(hot_frac=0.0),
+                                dict(hot_frac=1.5),
+                                dict(hot_rows=4, lookahead=-1),
+                                dict(hot_rows=4, decay=0.0),
+                                dict(hot_rows=4, update_retries=-1)])
+def test_config_rejects_bad_values(kw):
+    with pytest.raises(ValueError):
+        CacheConfig(**kw).validate()
+
+
+def test_config_resolves_hot_rows():
+    assert CacheConfig(hot_frac=0.25).resolve_hot_rows(1000) == 250
+    assert CacheConfig(hot_rows=4000).resolve_hot_rows(1000) == 1000  # clamp
+    assert CacheConfig(hot_frac=1e-9).resolve_hot_rows(1000) == 1  # floor
+
+
+# ---------------------------------------------------------------------------
+# Routing invariants + migration
+# ---------------------------------------------------------------------------
+
+def test_routing_invariants_across_migrations():
+    """Every row routed to exactly one (tier, slot) through a stream that
+    forces promotions, evictions, and sync stalls."""
+    store, _ = _store(n=96, hot=24, lookahead=1)
+    store.check_invariants()
+    for it in range(12):
+        idx = _zipf_batch(it, 96, B=5)  # working set <= 20 rows < 24 slots
+        store.prefetch([np.unique(_zipf_batch(it + 1, 96, B=5))])
+        store.check_invariants()
+        store.lookup(idx)
+        store.check_invariants()
+        store.update(idx.reshape(-1, 4), jnp.ones((idx.size // 4, 8)) * 0.01,
+                     0.05)
+        store.check_invariants()
+    r = store.state.routing
+    hot_rows = np.flatnonzero(r.slot >= 0)
+    assert len(hot_rows) <= store.hot_budget
+    # the inverse map agrees row-for-row (exactly one slot per hot row)
+    assert np.array_equal(np.sort(r.hot_row[r.hot_row >= 0]),
+                          np.sort(hot_rows))
+
+
+def test_hot_tier_too_small_is_a_config_error():
+    store, _ = _store(n=64, hot=4)
+    idx = np.arange(16).reshape(1, 16)  # 16 unique rows > 4 slots
+    with pytest.raises(ValueError, match="hot tier too small"):
+        store.lookup(idx)
+
+
+def test_stall_path_counted_at_zero_lookahead():
+    """lookahead=0: no prefetch — cold rows pay the counted synchronous
+    promotion and the result is still exact."""
+    store, state = _store(n=64, hot=16, lookahead=0)
+    idx = np.asarray([[60, 61], [62, 63]])  # all cold under initial placement
+    out = store.lookup(idx)
+    ref = embedding_bag_op(state["table"], jnp.asarray(idx))
+    assert (np.asarray(out) == np.asarray(ref)).all()
+    assert store.stats.stall_lookups == 1
+    assert store.stats.miss_rows == 4
+    pf = LookaheadPrefetcher(store, lambda j: np.asarray([0, 1]))
+    assert pf.step() == {"promoted": 0}  # lookahead=0 never prefetches
+
+
+def test_eviction_writes_back_pending_updates():
+    """A hot row carrying an un-drained Adagrad update is written back
+    (table AND acc) before its slot is reused — never dropped."""
+    store, state = _store(n=64, hot=8, lookahead=1)
+    hot0 = np.asarray([[0, 1, 2, 3]])
+    g = jnp.full((1, 8), 0.25)
+    assert store.update(hot0.reshape(-1, 4), g, lr=0.1)
+    # force rows 0..3 out of the tier: prefetch 8 disjoint cold rows
+    store.prefetch([np.arange(40, 48)])
+    assert store.state.routing.slot[0] < 0  # actually evicted
+    ref_t, ref_a = sparse_adagrad_op(
+        state["table"], state["acc"], jnp.asarray(hot0.reshape(-1, 4)), g,
+        lr=0.1)
+    merged = store.merged()
+    assert (np.asarray(merged["table"]) == np.asarray(ref_t)).all()
+    assert (np.asarray(merged["acc"]) == np.asarray(ref_a)).all()
+    assert store.stats.writeback_rows >= 4
+
+
+def test_store_stream_bitwise_vs_full_table():
+    """The headline contract: 20 skewed batches of lookup+update through a
+    25%-budget store are BITWISE the full-table kernel stream, with the
+    prefetcher actively migrating rows throughout."""
+    n = 256
+    store, state = _store(n=n, hot=n // 4, lookahead=2)
+    ref_t, ref_a = state["table"], state["acc"]
+    key = jax.random.PRNGKey(7)
+    for it in range(20):
+        idx = _zipf_batch(it, n)
+        pf = LookaheadPrefetcher(store, lambda j, it=it: _zipf_batch(it + j, n))
+        pf.step()
+        got = store.lookup(idx)
+        want = embedding_bag_op(ref_t, jnp.asarray(idx))
+        assert (np.asarray(got) == np.asarray(want)).all(), f"lookup iter {it}"
+        g = jax.random.normal(jax.random.fold_in(key, it), (idx.shape[0], 8))
+        ref_t, ref_a = sparse_adagrad_op(ref_t, ref_a, jnp.asarray(idx), g,
+                                         lr=0.05)
+        assert store.update(idx, g, 0.05)
+        store.check_invariants()
+    merged = store.merged()
+    assert (np.asarray(merged["table"]) == np.asarray(ref_t)).all()
+    assert (np.asarray(merged["acc"]) == np.asarray(ref_a)).all()
+    s = store.stats
+    assert s.prefetch_rows > 0 and s.evict_rows > 0  # migration really ran
+    hit_rate = s.hit_rows / (s.hit_rows + s.miss_rows)
+    assert hit_rate > 0.5  # lookahead=1+ should make most rows resident
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingShards cached mode
+# ---------------------------------------------------------------------------
+
+def _mk_shards(cache=None, seed=3, n_shards=3):
+    spec = emb.spec_from_config(CFG)
+    plan = plan_shards(spec, n_shards, 64)
+    return plan, EmbeddingShards.init(plan, jax.random.PRNGKey(seed),
+                                      cache=cache)
+
+
+def test_cached_shards_bitwise_vs_uncached():
+    plan, un = _mk_shards()
+    _, ca = _mk_shards(cache=CacheConfig(hot_frac=0.25, lookahead=2))
+    teacher = ctr.make_teacher(CFG, seed=5)
+    key = jax.random.PRNGKey(11)
+    for t in range(6):
+        idx = np.asarray(ctr.gen_batch(CFG, teacher, 0, t, 16)["sparse"])
+        for s in range(plan.n_shards):
+            ca.stores[s].prefetch([_route_np(plan, s, np.asarray(
+                ctr.gen_batch(CFG, teacher, 0, t + j, 16)["sparse"]))
+                for j in range(2)])
+        p_un = shard_lookup(plan, un.tables(), jnp.asarray(idx))
+        p_ca = ca.cached_lookup(idx)
+        assert (np.asarray(p_un) == np.asarray(p_ca)).all(), f"iter {t}"
+        g = jax.random.normal(jax.random.fold_in(key, t),
+                              (16, CFG.n_sparse_features, CFG.embedding_dim))
+        for s in range(plan.n_shards):
+            assert un.try_update(
+                s, lambda st, *a: shard_update(plan, s, st, *a),
+                jnp.asarray(idx), g, 0.05)
+            assert ca.cached_update(s, idx, g, 0.05)
+            ca.stores[s].check_invariants()
+    pu, pc = un.to_packed(), ca.to_packed()
+    assert (np.asarray(pu["table"]) == np.asarray(pc["table"])).all()
+    assert (np.asarray(pu["acc"]) == np.asarray(pc["acc"])).all()
+
+
+def test_cached_mode_guards_uncached_hot_path():
+    _, ca = _mk_shards(cache=CacheConfig(hot_frac=0.5))
+    with pytest.raises(RuntimeError, match="cached_lookup"):
+        ca.tables()
+    with pytest.raises(RuntimeError, match="cached_update"):
+        ca.try_update(0, lambda st: st)
+    _, un = _mk_shards()
+    with pytest.raises(RuntimeError, match="cache="):
+        un.cached_lookup(np.zeros((1, CFG.n_sparse_features, CFG.multi_hot),
+                                  np.int64))
+    with pytest.raises(RuntimeError, match="cache="):
+        un.cached_update(0, np.zeros((1, CFG.n_sparse_features,
+                                      CFG.multi_hot), np.int64),
+                         jnp.zeros((1, CFG.n_sparse_features,
+                                    CFG.embedding_dim)), 0.05)
+
+
+def test_cached_shards_fail_recover_composition():
+    """PR 6 x PR 7: fail a cached shard -> snapshot-fallback lookups and
+    dropped updates while down -> recover rebuilds the tiered store from
+    the canonical snapshot, packed view bitwise-preserved."""
+    plan, ca = _mk_shards(cache=CacheConfig(hot_frac=0.25, lookahead=1))
+    teacher = ctr.make_teacher(CFG, seed=9)
+    idx = np.asarray(ctr.gen_batch(CFG, teacher, 0, 0, 16)["sparse"])
+    g = jnp.ones((16, CFG.n_sparse_features, CFG.embedding_dim)) * 0.01
+    for s in range(plan.n_shards):
+        ca.cached_update(s, idx, g, 0.05)
+    ca.snapshot_all()
+    ref = ca.to_packed()
+    ca.fail_shard(1, "chaos")
+    assert ca.stores[1] is None
+    out = ca.cached_lookup(idx)  # shard 1 answers from its snapshot
+    assert np.isfinite(np.asarray(out)).all()
+    assert ca.stale_lookups[1] >= 1
+    assert not ca.cached_update(1, idx, g, 0.05)  # retry ladder -> drop
+    assert ca.dropped_updates[1] >= 1
+    ca.recover_shard(1)
+    assert ca.stores[1] is not None
+    got = ca.to_packed()
+    assert (np.asarray(got["table"]) == np.asarray(ref["table"])).all()
+    assert (np.asarray(got["acc"]) == np.asarray(ref["acc"])).all()
+    ca.stores[1].check_invariants()
+    # the recovered store is live again: updates land
+    assert ca.cached_update(1, idx, g, 0.05)
+
+
+def test_uncached_fail_recover_round_trip_parity():
+    """PR 6 rehydration pin (no cache): after fail_shard + recover_shard,
+    to_packed() equals the snapshot-rehydrated tables BITWISE — including
+    live updates landed on the surviving shards while the victim was down."""
+    plan, shards = _mk_shards()
+    teacher = ctr.make_teacher(CFG, seed=13)
+    idx = jnp.asarray(ctr.gen_batch(CFG, teacher, 0, 0, 16)["sparse"])
+    g = jnp.ones((16, CFG.n_sparse_features, CFG.embedding_dim)) * 0.01
+    for s in range(plan.n_shards):
+        shards.try_update(s, lambda st, *a: shard_update(plan, s, st, *a),
+                          idx, g, 0.05)
+    shards.snapshot_all()
+    victim = 1
+    shards.fail_shard(victim, "injected")
+    # survivors keep landing updates while the victim is down
+    for s in range(plan.n_shards):
+        shards.try_update(s, lambda st, *a: shard_update(plan, s, st, *a),
+                          idx, g, 0.05)
+    shards.recover_shard(victim)
+    got = shards.to_packed()
+    expect = packed_state(plan, [
+        shards.snapshots[s] if s == victim else shards.states[s]
+        for s in range(plan.n_shards)])
+    assert (np.asarray(got["table"]) == np.asarray(expect["table"])).all()
+    assert (np.asarray(got["acc"]) == np.asarray(expect["acc"])).all()
+    # and the recovered state IS the snapshot (bitwise), not a re-init
+    assert (np.asarray(shards.states[victim]["table"]) ==
+            np.asarray(shards.snapshots[victim]["table"])).all()
+
+
+# ---------------------------------------------------------------------------
+# HogwildSim: cache-on == cache-off, bitwise
+# ---------------------------------------------------------------------------
+
+def _sim(cache, engine="flat", seed=1, **kw):
+    return HogwildSim(
+        CFG, SyncConfig(algo="easgd", gap=4, delay=1, engine=engine),
+        n_trainers=2, n_threads=2, batch_size=8,
+        optimizer=optim.make("adagrad", 0.02), seed=seed, cache=cache, **kw)
+
+
+@pytest.mark.parametrize("engine", ["flat", "pytree"])
+def test_sim_trajectory_bitwise_cache_on_off(engine):
+    out_u = _sim(None, engine).run(8)
+    out_c = _sim(CacheConfig(hot_frac=0.25, lookahead=2), engine).run(8)
+    assert out_u["train_loss"] == out_c["train_loss"]
+    eu, ec = out_u["state"].emb_state, out_c["state"].emb_state
+    assert (np.asarray(eu["table"]) == np.asarray(ec["table"])).all()
+    assert (np.asarray(eu["acc"]) == np.asarray(ec["acc"])).all()
+    wu = np.asarray(jax.tree.leaves(out_u["state"].w_stack)[0])
+    wc = np.asarray(jax.tree.leaves(out_c["state"].w_stack)[0])
+    assert (wu == wc).all()
+    cs = out_c["cache_stats"]
+    assert cs["prefetch_rows"] > 0 and cs["stall_lookups"] == 0
+
+
+def test_sim_trajectory_bitwise_zero_lookahead():
+    """The stall path is exact too: lookahead=0 promotes synchronously on
+    every cold hit yet the trajectory stays bitwise-identical."""
+    out_u = _sim(None).run(5)
+    out_c = _sim(CacheConfig(hot_frac=0.3, lookahead=0)).run(5)
+    assert out_u["train_loss"] == out_c["train_loss"]
+    assert out_c["cache_stats"]["stall_lookups"] > 0  # really took stalls
+
+
+def test_sim_elastic_trajectory_bitwise():
+    sched = [(2, "leave", 1), (4, "join", 1)]
+    o_u = _sim(None, schedule=sched, seed=6).run(6)
+    o_c = _sim(CacheConfig(hot_frac=0.3, lookahead=1),
+               schedule=sched, seed=6).run(6)
+    assert np.array_equal(o_u["replica_losses"], o_c["replica_losses"])
+    assert (np.asarray(o_u["state"].emb_state["table"]) ==
+            np.asarray(o_c["state"].emb_state["table"])).all()
+
+
+def test_sim_cached_state_roundtrip():
+    """merged() restores the canonical emb_state at run end: save/resume
+    across a cached run matches an uncached run resumed the same way."""
+    sim_u, sim_c = _sim(None, seed=4), _sim(
+        CacheConfig(hot_frac=0.25, lookahead=1), seed=4)
+    st_u = sim_u.run(4)["state"]
+    st_c = sim_c.run(4)["state"]
+    out_u = sim_u.run(3, state=st_u)
+    out_c = sim_c.run(3, state=st_c)
+    assert out_u["train_loss"] == out_c["train_loss"]
+    assert (np.asarray(out_u["state"].emb_state["table"]) ==
+            np.asarray(out_c["state"].emb_state["table"])).all()
+
+
+# ---------------------------------------------------------------------------
+# ThreadedShadowRunner composition
+# ---------------------------------------------------------------------------
+
+def _runner(cache, fault=None, **kw):
+    sup = (SupervisorConfig(heartbeat_deadline_s=1.0, check_interval_s=0.01,
+                            backoff_s=0.05, max_restarts=3)
+           if fault is not None else None)
+    return ThreadedShadowRunner(
+        CFG, SyncConfig(algo="easgd", gap=2, engine="flat"),
+        n_trainers=2, batch_size=16, optimizer=optim.make("adagrad", 0.02),
+        seed=2, cache=cache, fault_spec=fault, supervisor_config=sup, **kw)
+
+
+def test_threaded_cached_smoke():
+    r = _runner(CacheConfig(hot_frac=0.25, lookahead=2))
+    r.warmup()
+    out = r.run(6)
+    assert all(np.isfinite(out["train_loss"]))
+    assert out["iter_count"] == [6, 6]
+    assert out["cache_stats"]["lookups"] > 0
+    # a store-level optimistic-swap conflict may exhaust its retries (the
+    # shard ladder then retries the whole call) — but with every shard
+    # healthy no update may be LOST at the shard level
+    assert out["dropped_updates"] == [0] * len(out["dropped_updates"])
+    # the packed view is canonical: full table shape, all rows finite
+    packed = out["emb_state"]
+    assert packed["table"].shape == (CFG.n_embedding_rows, CFG.embedding_dim)
+    assert np.isfinite(np.asarray(packed["table"])).all()
+
+
+def test_threaded_cached_ps_fail_recover():
+    """Cache x failure domain in the real-thread runner: a PS dies mid-run
+    (both tiers lost), serves snapshot reads, recovers by rebuilding its
+    tiered store — the run completes with canonical packed output."""
+    fault = FaultSpec(ps_fail_at={0: 2}, ps_recover_after_s=0.2)
+    r = _runner(CacheConfig(hot_frac=0.3, lookahead=1), fault=fault)
+    r.warmup()
+    out = r.run(8)
+    kinds = [e.kind for e in out["shard_events"]]
+    assert "ps_fail" in kinds and "ps_recover" in kinds
+    assert all(np.isfinite(out["train_loss"]))
+    assert np.isfinite(np.asarray(out["emb_state"]["table"])).all()
+    # the store behind every healthy shard satisfies the routing invariants
+    for s, store in enumerate(r.emb.stores):
+        if store is not None:
+            store.check_invariants()

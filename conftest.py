@@ -2,10 +2,61 @@
 and provide a minimal `hypothesis` fallback when the real package is absent
 (the container does not ship it; tests only use `given` + `settings` +
 `st.floats`/`st.integers`). The fallback runs each property test over a
-deterministic sample grid — the real hypothesis, when installed, wins."""
+deterministic sample grid — the real hypothesis, when installed, wins.
+
+Also installs a ``threading.excepthook`` so an uncaught exception in a
+helper thread FAILS the test that spawned it (the default behavior prints
+to stderr and lets join() succeed — a silently half-dead run looks green).
+Tests that deliberately crash a bare thread opt out with
+``@pytest.mark.allow_thread_exceptions``."""
 import os
 import random
 import sys
+import threading
+import traceback
+
+import pytest
+
+# (thread name, "Type: msg", formatted traceback) per uncaught exception —
+# drained by the autouse fixture below, attributed to the running test.
+_THREAD_EXCEPTIONS = []
+_ORIG_THREAD_EXCEPTHOOK = threading.excepthook
+
+
+def _record_thread_exception(args):
+    name = args.thread.name if args.thread is not None else "<unknown>"
+    _THREAD_EXCEPTIONS.append((
+        name,
+        f"{args.exc_type.__name__}: {args.exc_value}",
+        "".join(traceback.format_exception(
+            args.exc_type, args.exc_value, args.exc_traceback)),
+    ))
+    _ORIG_THREAD_EXCEPTHOOK(args)  # keep the stderr trace for live debugging
+
+
+threading.excepthook = _record_thread_exception
+
+
+@pytest.fixture(autouse=True)
+def fail_on_thread_exceptions(request):
+    """Any exception that escapes a helper thread during a test fails THAT
+    test. Attribution is by time window (threads report to the test that was
+    running when they died), which is exact for the join-before-assert style
+    every threaded suite here uses."""
+    start = len(_THREAD_EXCEPTIONS)
+    yield
+    leaked = _THREAD_EXCEPTIONS[start:]
+    del _THREAD_EXCEPTIONS[start:]
+    if not leaked:
+        return
+    if request.node.get_closest_marker("allow_thread_exceptions"):
+        return
+    detail = "\n".join(
+        f"--- thread {name!r}: {head}\n{tb}" for name, head, tb in leaked)
+    pytest.fail(
+        f"{len(leaked)} uncaught exception(s) in helper threads:\n{detail}",
+        pytrace=False,
+    )
 
 
 def pytest_configure(config):
@@ -18,6 +69,11 @@ def pytest_configure(config):
         "markers",
         "timeout(seconds): per-test wall-clock ceiling "
         "(enforced by pytest-timeout when installed)",
+    )
+    config.addinivalue_line(
+        "markers",
+        "allow_thread_exceptions: this test deliberately crashes a helper "
+        "thread; the thread-excepthook guard must not fail it",
     )
 
 _ROOT = os.path.dirname(os.path.abspath(__file__))

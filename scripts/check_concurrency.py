@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Machine-checked concurrency contracts over the free-threaded sync stack.
+
+Runs the DESIGN.md §12 static analyzer (guarded-by / swap-publish /
+no-blocking-under-lock / unannotated-shared-state) over ``src/repro`` and
+exits non-zero on any violation. CI runs this next to the test suite; a
+contract regression fails the build before it can flake a threaded test.
+
+    python scripts/check_concurrency.py              # check the tree
+    python scripts/check_concurrency.py --self-test  # prove each contract
+                                                     # class still detects a
+                                                     # seeded violation
+    python scripts/check_concurrency.py --explain    # code legend
+"""
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis.contracts import CODES  # noqa: E402
+from repro.analysis.static_check import check_path, check_source  # noqa: E402
+
+# One deliberately-broken snippet per contract class. The self-test seeds
+# each through the analyzer and fails if the expected code is NOT reported —
+# the analyzer itself is under test, so a refactor that quietly blinds a
+# pass cannot land green.
+_SEEDED = {
+    "GB01": """
+import threading
+
+class Meter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0  # guarded-by: _lock
+
+    def add(self, n):
+        self.total += n  # store outside the lock
+""",
+    "SP01": """
+import threading
+
+class Table:
+    def __init__(self):
+        self._lock = threading.Lock()
+        # swap-published
+        self.state = {"v": 0}
+
+    def bump(self):
+        self.state["v"] = 1  # in-place element write, not a rebind
+""",
+    "BL01": """
+import threading
+import time
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def step(self):
+        with self._lock:
+            time.sleep(0.1)
+""",
+    "SH01": """
+import threading
+
+class Runner:
+    def __init__(self):
+        self.count = 0
+
+    def start(self):
+        t = threading.Thread(target=self.body)
+        t.start()
+
+    def body(self):
+        self.count += 1
+
+    def read(self):
+        self.count += 1
+        return self.count
+""",
+    "CT01": """
+import threading
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.v = 0  # hogwild-race: maybe
+""",
+}
+
+
+def self_test() -> int:
+    failed = []
+    for code, src in sorted(_SEEDED.items()):
+        got = {v.code for v in check_source(src, f"<seeded-{code}>")}
+        status = "detected" if code in got else "MISSED"
+        print(f"  {code}: seeded violation {status} (reported: {sorted(got)})")
+        if code not in got:
+            failed.append(code)
+    if failed:
+        print(f"self-test FAILED: {failed} not detected")
+        return 1
+    print(f"self-test passed: all {len(_SEEDED)} contract classes detect")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    default=[os.path.join(_ROOT, "src", "repro")],
+                    help="files or directories to check (default: src/repro)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="seed one violation per contract class and verify "
+                         "the analyzer reports each")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the violation-code legend and exit")
+    args = ap.parse_args(argv)
+    if args.explain:
+        for code, what in sorted(CODES.items()):
+            print(f"  {code}  {what}")
+        return 0
+    if args.self_test:
+        return self_test()
+    violations = []
+    for path in args.paths:
+        violations.extend(check_path(path))
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(f"{len(violations)} concurrency-contract violation(s)")
+        return 1
+    print("concurrency contracts: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Machine-checked concurrency contracts for the free-threaded sync stack.
+
+ShadowSync is a deliberately racy program: Hogwild lock-free PS reads
+coexist with lock-guarded meters, Condition barriers, and atomically
+swap-published immutable states. The invariants that make that safe used
+to live only in comments; this package makes them machine-checked.
+
+- ``contracts``    — the annotation grammar (``# guarded-by: <lock>`` et
+  al.), the per-class shared-state registry, and the kernel/blocking call
+  tables the checkers consult.
+- ``static_check`` — an AST pass over ``src/repro`` enforcing guarded-by,
+  swap-publish, and no-blocking-under-lock (DESIGN.md §12).
+- ``lockdep``      — a test-time instrumented ``threading.Lock`` /
+  ``Condition`` that records the acquisition graph, fails on lock-order
+  cycles, and catches held-lock blocking calls the static pass can't see.
+
+Run the static pass via ``scripts/check_concurrency.py`` (wired into the
+CI ``analyze`` job).
+"""
+
+from repro.analysis.contracts import (
+    Directive,
+    Violation,
+    parse_directives,
+)
+from repro.analysis.static_check import check_path, check_source
+
+__all__ = [
+    "Directive",
+    "Violation",
+    "parse_directives",
+    "check_path",
+    "check_source",
+]

@@ -1,0 +1,361 @@
+"""Concurrency-contract grammar and registries (DESIGN.md §12).
+
+The static checker reads *directives* — structured trailing / standalone
+comments — out of each source file and binds them to fields, statements,
+or functions:
+
+    # guarded-by: <lock>         every access to the field must hold <lock>
+    # guarded-by-writes: <lock>  stores/mutations must hold <lock>; lock-free
+                                 reads are part of the contract (Hogwild)
+    # swap-published             the field is only ever REBOUND to a freshly
+                                 built immutable value — never mutated in place
+    # swap-published: elements   fixed-slot container: elements are wholesale
+                                 rebound (x[i] = fresh); deeper mutation is a
+                                 violation
+    # hogwild-race: ok — <why>   on a field declaration: deliberately lock-free
+                                 by design; on any other statement: waive the
+                                 guarded-by check for that one statement
+    # holds-lock: <lock>         on a def: every caller holds <lock>; the body
+                                 is analyzed as if inside `with <lock>`
+    # lock-blocking: ok — <why>  on a def or statement: waive the
+                                 no-blocking-under-lock check there
+
+Several directives may share one comment, separated by ';'. Lock names are
+the dotted source text of the lock expression with a leading ``self.``
+stripped, so ``with self._state_lock:`` discharges ``guarded-by:
+_state_lock`` and a closure lock ``ex_lock`` is named literally.
+
+The registries below are the per-class contract table the issue calls for:
+``SHARED_CLASSES`` marks classes whose instances are handed across threads
+even though they spawn none themselves (every public method is then a
+potential thread entry point), and records the one-line justification for
+each pure-annotation (waiver) resolution. ``KERNEL_CALLS`` / ``BLOCKING``
+name the calls the no-blocking-under-lock pass treats as dispatch or
+blocking.
+"""
+
+from __future__ import annotations
+
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Directive model
+# ---------------------------------------------------------------------------
+
+# Directive kinds, as they appear in source. `hogwild-race` and
+# `lock-blocking` take an "ok" argument (with optional " — reason" tail);
+# the guarded/holds kinds take a lock name; swap-published takes an
+# optional "elements".
+KINDS = (
+    "guarded-by",
+    "guarded-by-writes",
+    "swap-published",
+    "hogwild-race",
+    "holds-lock",
+    "lock-blocking",
+)
+
+_DIRECTIVE_RE = re.compile(
+    r"(?P<kind>guarded-by-writes|guarded-by|swap-published|hogwild-race"
+    r"|holds-lock|lock-blocking)"
+    r"(?:\s*:\s*(?P<arg>[^;#]*))?"
+)
+
+
+@dataclass(frozen=True)
+class Directive:
+    """One parsed annotation, bound to the physical line it sits on."""
+
+    kind: str
+    arg: str  # lock name, "elements", "ok", or "ok — reason"
+    line: int  # 1-based physical line of the comment token
+    trailing: bool  # True: shares the line with code; False: standalone
+    reason: str = ""  # text after an em/double dash in the arg, if any
+
+    @property
+    def lock(self) -> str:
+        """The lock name for guarded-by / guarded-by-writes / holds-lock."""
+        return self.arg
+
+    def is_ok(self) -> bool:
+        return self.arg.split("—")[0].split("--")[0].strip().lower() == "ok"
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One contract violation. ``code`` is stable for tests/CI grepping."""
+
+    code: str  # GB01 | SP01 | BL01 | SH01 | CT01
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+# Human-readable legend, used by scripts/check_concurrency.py --explain.
+CODES: Dict[str, str] = {
+    "GB01": "guarded field accessed outside its declared lock",
+    "SP01": "swap-published field mutated in place (must be rebound wholesale)",
+    "BL01": "blocking call / kernel dispatch while holding a lock",
+    "SH01": "shared mutable attribute with no concurrency annotation",
+    "CT01": "malformed or misplaced contract annotation",
+}
+
+
+def _split_reason(raw: str) -> Tuple[str, str]:
+    """Split "ok — reason" / "ok -- reason" into (head, reason)."""
+    for sep in ("—", "--"):
+        if sep in raw:
+            head, _, tail = raw.partition(sep)
+            return head.strip(), tail.strip()
+    return raw.strip(), ""
+
+
+def parse_directives(source: str, path: str = "<string>") -> List[Directive]:
+    """Extract every contract directive from ``source``.
+
+    Uses the tokenizer (not regexes over raw lines) so directives inside
+    string literals are never picked up, and so we can tell trailing
+    comments (code precedes them on the line) from standalone ones.
+    """
+    out: List[Directive] = []
+    code_lines: set[int] = set()
+    comments: List[Tuple[int, str]] = []
+    try:
+        toks = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except tokenize.TokenError:
+        return out
+    for tok in toks:
+        if tok.type == tokenize.COMMENT:
+            comments.append((tok.start[0], tok.string))
+        elif tok.type not in (
+            tokenize.NL,
+            tokenize.NEWLINE,
+            tokenize.INDENT,
+            tokenize.DEDENT,
+            tokenize.ENDMARKER,
+        ):
+            for ln in range(tok.start[0], tok.end[0] + 1):
+                code_lines.add(ln)
+    for line, text in comments:
+        body = text.lstrip("#").strip()
+        for part in body.split(";"):
+            m = _DIRECTIVE_RE.match(part.strip())
+            if not m or m.start() != 0:
+                continue
+            kind = m.group("kind")
+            raw_arg = (m.group("arg") or "").strip()
+            arg, reason = _split_reason(raw_arg)
+            out.append(
+                Directive(
+                    kind=kind,
+                    arg=arg,
+                    line=line,
+                    trailing=line in code_lines,
+                    reason=reason,
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Field contracts (what a directive resolves to once bound to a field)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FieldContract:
+    """Resolved concurrency contract for one attribute / closure variable."""
+
+    name: str
+    guarded_by: Optional[str] = None  # all accesses under this lock
+    guarded_writes: Optional[str] = None  # stores under this lock, reads free
+    swap_published: bool = False
+    swap_elements: bool = False  # "swap-published: elements"
+    hogwild_ok: bool = False
+    decl_lines: List[int] = field(default_factory=list)
+
+    def merge(self, d: Directive) -> Optional[str]:
+        """Fold one more directive in; return an error string on conflict."""
+        if d.kind == "guarded-by":
+            if self.guarded_by not in (None, d.lock):
+                return f"conflicting guarded-by locks for '{self.name}'"
+            self.guarded_by = d.lock
+        elif d.kind == "guarded-by-writes":
+            if self.guarded_writes not in (None, d.lock):
+                return f"conflicting guarded-by-writes locks for '{self.name}'"
+            self.guarded_writes = d.lock
+        elif d.kind == "swap-published":
+            self.swap_published = True
+            if d.arg == "elements":
+                self.swap_elements = True
+            elif d.arg not in ("", "elements"):
+                return f"swap-published takes no argument or 'elements', got '{d.arg}'"
+        elif d.kind == "hogwild-race":
+            if not d.is_ok():
+                return f"hogwild-race directive must say 'ok', got '{d.arg}'"
+            self.hogwild_ok = True
+        else:
+            return f"directive '{d.kind}' cannot annotate a field"
+        self.decl_lines.append(d.line)
+        return None
+
+    @property
+    def annotated(self) -> bool:
+        return bool(
+            self.guarded_by or self.guarded_writes or self.swap_published or self.hogwild_ok
+        )
+
+
+# ---------------------------------------------------------------------------
+# Per-class contract table
+# ---------------------------------------------------------------------------
+
+# Classes whose instances are shared across threads even though the class
+# itself spawns none: the runners hand them to trainer / shadow / monitor /
+# supervisor threads. For these, every public method is treated as a
+# distinct thread entry point, so any mutable attribute reached from >= 2
+# methods needs an annotation. Classes that DO spawn threads
+# (ThreadedShadowRunner, Supervisor, PrefetchLoader) are picked up
+# automatically from their Thread(...) call sites and need no registration.
+SHARED_CLASSES: Dict[str, str] = {
+    "Membership": "slot status table read by every thread, mutated via _transition",
+    "EPSMeter": "global examples/s meter: trainers add, monitor/scheduler read",
+    "SlotEPS": "per-slot pace meters: owner slot ticks, scheduler reads",
+    "StragglerPolicy": "scheduler observed from monitor + supervision ticks, read by trainers",
+    "Supervisor": "heartbeats arrive from every supervised thread",
+    "EmbeddingShards": "PS shard table: trainers look up, shadow updates, supervisor heals",
+    "CachedStore": "two-tier store: trainer lookups race the prefetcher's migrations",
+}
+
+# One-line justifications for every pure-annotation (waiver) resolution on
+# the current tree — the issue requires each to be recorded here. Keys are
+# "<module>.<Class>.<field>" or "<module>.<scope>" for statement waivers.
+WAIVER_JUSTIFICATIONS: Dict[str, str] = {
+    # --- hogwild-race: ok fields -----------------------------------------
+    "runners.ThreadedShadowRunner._w0": "written once before any thread starts; read-only after",
+    "runners.ThreadedShadowRunner.emb": "bound pre-spawn in run(); rebinding after spawn is a bug",
+    "runners.ThreadedShadowRunner.iter_count": "slot-owned counters; cross-slot reads are pacing "
+    "hints where staleness is tolerable",
+    "runners.ThreadedShadowRunner._shadow_rounds": "single logical writer (generation-fenced "
+    "shadow incarnation); reads are post-join or advisory",
+    "runners.ThreadedShadowRunner._sync_excs": "append-only post-mortem log; list.append is "
+    "atomic under the GIL",
+    "runners.ThreadedShadowRunner._sync_degraded": "single bool store from the give-up hook; "
+    "read post-join",
+    "runners.ThreadedShadowRunner._sync_stalled": "same single-store post-join contract as "
+    "_sync_degraded",
+    "runners.ThreadedShadowRunner._sync_crash_t": "same single-store post-join contract as "
+    "_sync_degraded",
+    "runners.ThreadedShadowRunner._sync_count_at_restart": "restart hook (one supervision "
+    "thread) appends; read post-join",
+    "runners.ThreadedShadowRunner._ps_injected": "only the supervision tick callback touches "
+    "it, and ticks are serialized by the single supervisor thread",
+    "runners.ThreadedShadowRunner._tick_count": "same single-tick-owner contract as "
+    "_ps_injected",
+    "runners.ThreadedShadowRunner.slot_eps": "slot-owned meters: owner slot ticks its cell, "
+    "scheduler reads are pacing hints (SlotEPS is itself in SHARED_CLASSES)",
+    "runners.run.losses": "slot-owned lists; merged only after join",
+    "runners.run.trainer_wall": "slot-owned wall-clock cells; read after join",
+    "membership.Membership.events": "appends under _lock; external readers snapshot via list()",
+    "elp.EPSMeter._buckets": "single-writer deque; eps() snapshots via list(deque) which is "
+    "atomic under the GIL (documented thread model in elp.py)",
+    "elp.SlotEPS._busy": "slot-owned virtual clocks: only the owner slot ticks its cell",
+    "elp.SlotEPS._meters": "fixed list of per-slot meters: only owner slot i mutates "
+    "_meters[i]; scheduler reads others' eps() as a pacing hint",
+    "supervision.Supervisor.events": "single supervision thread appends; readers snapshot "
+    "post-run",
+    "supervision.Supervisor._thread": "start/stop are caller-serialized lifecycle methods",
+    "shards.EmbeddingShards.dropped_updates": "lossy-by-design failure counters; element += "
+    "races only ever under-count",
+    "shards.EmbeddingShards.stale_lookups": "same lossy counter contract as dropped_updates",
+    "shards.EmbeddingShards.states": "lock-free Hogwild element swap; try_update re-checks "
+    "shard health post-dispatch so a racing failover only drops (never corrupts) the write",
+    "cache.CachedStore.freq": "frequency stats feed eviction ranking only; lost increments "
+    "shift ranks, never correctness",
+    "cache.CachedStore._pinned": "prefetcher rebinds a fresh mask wholesale; trainers read "
+    "whichever mask is current (stale pin set costs one extra cold fetch, never correctness)",
+    "cache.CachedStore.stats": "hit/miss counters are diagnostic; torn increments tolerated",
+    # --- lock-blocking: ok scopes ----------------------------------------
+    "runners.ThreadedShadowRunner._bootstrap_join": "admission must be atomic with the "
+    "membership transition; joins are rare and bounded (one stack + on_join hook)",
+    "runners.run._prefetch_step": "the non-blocking _prefetch_gate IS the round's mutual "
+    "exclusion — no other thread can wait on it",
+    "cache.CachedStore._apply_migration": "migration scatters are bounded row copies; doing "
+    "them optimistically would break eviction-writeback-before-slot-reuse exactness",
+}
+
+# Callables treated as kernel dispatch / device work by the
+# no-blocking-under-lock pass, beyond anything bound from jax.jit(...) or
+# called via a jnp./jax. dotted path. Matched on the final attribute /
+# name segment of the call.
+KERNEL_CALLS = frozenset(
+    {
+        # fused Pallas kernels + their jit'd wrappers
+        "embedding_bag_op",
+        "sparse_adagrad_op",
+        # PS shard device paths
+        "shard_lookup",
+        "shard_update",
+        "try_update",
+        # tiered-cache device paths
+        "prefetch",
+        "merged",
+        "lookup",
+        "update",
+        # algorithm lifecycle hooks that stack/scatter device arrays
+        "on_join",
+        "on_join_flat",
+        "land_flat",
+        "land_elastic",
+        "_shadow_round",
+        # a whole background sync round is kernel dispatch wholesale
+        "_round_over_active",
+        # building a CachedStore moves whole tables host->device
+        "CachedStore",
+    }
+)
+
+# Call tails that look like kernel/blocking names but are known-safe.
+KERNEL_ALLOW_PREFIXES = frozenset({"os.path", "dict", "meta", "total", "info"})
+
+# Blocking primitives: sleeping, joining a thread, waiting on a barrier or
+# condition (waiting on the *held* condition is legal — Condition.wait
+# releases its lock while blocked).
+BLOCKING_QUALNAMES = frozenset({"time.sleep"})
+BLOCKING_METHODS = frozenset({"join", "wait"})
+
+# Method names that mutate their receiver in place. Used both to decide a
+# field is "mutable" for the unannotated-shared check and to flag in-place
+# mutation through swap-published fields. `put`/`get`/`join` (queue.Queue)
+# and `note`/`observe` (domain verbs) are deliberately absent.
+MUTATOR_METHODS = frozenset(
+    {
+        "append",
+        "appendleft",
+        "extend",
+        "insert",
+        "remove",
+        "pop",
+        "popleft",
+        "clear",
+        "add",
+        "discard",
+        "update",
+        "setdefault",
+        "set",
+        "sort",
+        "reverse",
+    }
+)
+
+# Keyword names whose callable arguments become thread entry points
+# (Supervisor.register(..., restart=..., on_give_up=...),
+# SupervisorConfig(tick=...), Thread(target=...)).
+CALLABLE_KWARGS = frozenset({"target", "restart", "tick", "on_give_up"})

@@ -99,8 +99,7 @@ def _active_rows(active) -> jnp.ndarray:
 @functools.lru_cache(maxsize=None)
 def _land_jit(algo: "SyncAlgorithm", cfg) -> Callable:
     """Cached jit of an algorithm's pytree oracle (mask traced)."""
-    return jax.jit(lambda stack, state, snap, mask:
-                   algo.land(stack, state, snap, mask, cfg))
+    return jax.jit(lambda stack, state, snap, mask: algo.land(stack, state, snap, mask, cfg))
 
 
 def _stack_planes(ws: List[jnp.ndarray]) -> jnp.ndarray:
@@ -132,13 +131,26 @@ class SyncAlgorithm:
     def init_state(self, w0: Pytree, cfg: "S.SyncConfig") -> Any:
         return None
 
-    def land(self, stack: Pytree, state: Any, snap: Optional[Pytree],
-             mask: Optional[jnp.ndarray], cfg: "S.SyncConfig") -> Tuple[Pytree, Any]:
+    def land(
+        self,
+        stack: Pytree,
+        state: Any,
+        snap: Optional[Pytree],
+        mask: Optional[jnp.ndarray],
+        cfg: "S.SyncConfig",
+    ) -> Tuple[Pytree, Any]:
         raise NotImplementedError
 
-    def land_elastic(self, stack: Pytree, state: Any, snap: Optional[Pytree],
-                     mask, active, cfg: "S.SyncConfig",
-                     launch_active=None) -> Tuple[Pytree, Any]:
+    def land_elastic(
+        self,
+        stack: Pytree,
+        state: Any,
+        snap: Optional[Pytree],
+        mask,
+        active,
+        cfg: "S.SyncConfig",
+        launch_active=None,
+    ) -> Tuple[Pytree, Any]:
         """Membership-aware pytree landing (host-level hook, not jitted).
 
         ``mask`` is the fired mask, ``active`` the CURRENT membership mask,
@@ -154,21 +166,21 @@ class SyncAlgorithm:
         return _land_jit(self, cfg)(stack, state, snap, eff_arr)
 
     # -- elastic membership lifecycle (DESIGN.md §8) --------------------------
-    def on_join(self, stack: Pytree, slot: int, state: Any, active,
-                cfg: "S.SyncConfig") -> Tuple[Pytree, Any]:
+    def on_join(
+        self, stack: Pytree, slot: int, state: Any, active, cfg: "S.SyncConfig"
+    ) -> Tuple[Pytree, Any]:
         """Bootstrap a joining replica slot from the live cohort (pytree
         engine). ``active`` is the membership mask BEFORE the join — the new
         slot is not yet in it. Default: the live replica mean."""
         mean = S.masked_replica_mean(stack, jnp.asarray(active))
         return S.tree_set(stack, slot, mean), state
 
-    def on_join_flat(self, buf: jnp.ndarray, slot: int, state: Any, active,
-                     cfg: "S.SyncConfig", fs: FlatSpace
-                     ) -> Tuple[jnp.ndarray, Any]:
+    def on_join_flat(
+        self, buf: jnp.ndarray, slot: int, state: Any, active, cfg: "S.SyncConfig", fs: FlatSpace
+    ) -> Tuple[jnp.ndarray, Any]:
         """Flat-engine join bootstrap. Default: fused live-mean kernel into
         the joining slot's plane — one launch, dead rows never streamed."""
-        mean = ma_ops.replica_mean_rows_op(buf, _active_rows(active),
-                                           block=fs.block)
+        mean = ma_ops.replica_mean_rows_op(buf, _active_rows(active), block=fs.block)
         return buf.at[slot].set(mean), state
 
     def on_leave(self, state: Any, slot: int, cfg: "S.SyncConfig") -> Any:
@@ -177,27 +189,38 @@ class SyncAlgorithm:
         algorithms that shard state by replica must override."""
         return state
 
-    def on_leave_flat(self, state: Any, slot: int, cfg: "S.SyncConfig",
-                      fs: FlatSpace) -> Any:
+    def on_leave_flat(self, state: Any, slot: int, cfg: "S.SyncConfig", fs: FlatSpace) -> Any:
         return self.on_leave(state, slot, cfg)
 
     # -- flat engine ----------------------------------------------------------
-    def init_state_flat(self, plane0: jnp.ndarray, cfg: "S.SyncConfig",
-                        fs: FlatSpace) -> Any:
+    def init_state_flat(self, plane0: jnp.ndarray, cfg: "S.SyncConfig", fs: FlatSpace) -> Any:
         return self.init_state(fs.unpack(plane0), cfg)
 
-    def launch_snapshot_flat(self, buf: jnp.ndarray, mask, cfg: "S.SyncConfig",
-                             fs: FlatSpace, state: Any = None,
-                             active=None) -> jnp.ndarray:
+    def launch_snapshot_flat(
+        self,
+        buf: jnp.ndarray,
+        mask,
+        cfg: "S.SyncConfig",
+        fs: FlatSpace,
+        state: Any = None,
+        active=None,
+    ) -> jnp.ndarray:
         """Fallback: one contiguous copy of the whole replica buffer.
         ``state`` is the algorithm's opaque state at launch time (gossip uses
         it to pick the round's participant rows); ``active`` the membership
         mask at launch."""
         return flatspace.snapshot(buf)
 
-    def land_flat(self, buf: jnp.ndarray, state: Any, snap, mask,
-                  cfg: "S.SyncConfig", fs: FlatSpace,
-                  active=None) -> Tuple[jnp.ndarray, Any]:
+    def land_flat(
+        self,
+        buf: jnp.ndarray,
+        state: Any,
+        snap,
+        mask,
+        cfg: "S.SyncConfig",
+        fs: FlatSpace,
+        active=None,
+    ) -> Tuple[jnp.ndarray, Any]:
         """Fallback: unpack -> pytree oracle -> repack, inside one jit."""
         if active is None:
             fn = _flat_fallback(self, cfg, fs)
@@ -212,16 +235,16 @@ class SyncAlgorithm:
         return fs.pack_stack(new), state
 
     # -- ThreadedShadowRunner background round --------------------------------
-    def make_shadow_round(self, cfg: "S.SyncConfig", fs: Optional[FlatSpace]
-                          ) -> Callable[[List, Any], Tuple[Any, int]]:
+    def make_shadow_round(
+        self, cfg: "S.SyncConfig", fs: Optional[FlatSpace]
+    ) -> Callable[[List, Any], Tuple[Any, int]]:
         """Returns round(ws, state) -> (state, n_syncs); mutates ``ws`` (the
         per-trainer planes or pytrees) in place. Fallback: stack, land against
         the current state (no snapshot — the threaded shadow reads live), and
         slice back."""
         if fs is not None:
             def rnd(ws, state):
-                buf, state = self.land_flat(_stack_planes(ws), state, None,
-                                            None, cfg, fs)
+                buf, state = self.land_flat(_stack_planes(ws), state, None, None, cfg, fs)
                 for i in range(len(ws)):
                     ws[i] = buf[i]
                 return state, 1
@@ -252,15 +275,13 @@ class SyncAlgorithm:
         # fallback flat engine does the same work as the pytree path
         return self.pytree_sync_bytes(r, n)
 
-    def flat_ref_fns(self, cfg: "S.SyncConfig", fs: FlatSpace
-                     ) -> Tuple[Callable, Callable]:
+    def flat_ref_fns(self, cfg: "S.SyncConfig", fs: FlatSpace) -> Tuple[Callable, Callable]:
         """(snapshot_fn(buf) -> snap, land_fn(buf, state, snap) -> (buf, state)):
         jitted, NON-donating, all-replicas-fired oracle versions of the flat
         cycle — what sync_bench times on CPU (Pallas targets TPU; interpret-
         mode timing is not meaningful)."""
         def land(buf, state, snap):
-            new, state = self.land(fs.unpack_stack(buf), state,
-                                   fs.unpack_stack(snap), None, cfg)
+            new, state = self.land(fs.unpack_stack(buf), state, fs.unpack_stack(snap), None, cfg)
             return fs.pack_stack(new), state
 
         return jax.jit(lambda buf: buf.copy()), jax.jit(land)
@@ -294,8 +315,9 @@ def register(algo, *, override: bool = False) -> SyncAlgorithm:
     if not algo.name:
         raise ValueError(f"{type(algo).__name__} must set a non-empty .name")
     if algo.name in _REGISTRY and not override:
-        raise ValueError(f"sync algorithm {algo.name!r} already registered "
-                         "(pass override=True to replace)")
+        raise ValueError(
+            f"sync algorithm {algo.name!r} already registered " "(pass override=True to replace)"
+        )
     _REGISTRY[algo.name] = algo
     return cls if cls is not None else algo
 
@@ -308,8 +330,9 @@ def get(name: str) -> SyncAlgorithm:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(f"unknown sync algorithm {name!r}; "
-                       f"registered: {list(names())}") from None
+        raise KeyError(
+            f"unknown sync algorithm {name!r}; " f"registered: {list(names())}"
+        ) from None
 
 
 def names() -> Tuple[str, ...]:
@@ -350,8 +373,9 @@ class EASGD(SyncAlgorithm):
             if fired.size == 0:
                 return buf, state
             fired = jnp.asarray(fired, jnp.int32)
-            return easgd_ops.easgd_round_op(buf, state, _gather(buf, fired),
-                                            fired, cfg.alpha, block=fs.block)
+            return easgd_ops.easgd_round_op(
+                buf, state, _gather(buf, fired), fired, cfg.alpha, block=fs.block
+            )
         snap_rows, ids = snap
         ids = np.asarray(ids, np.int64)
         # a slot that died mid-flight neither moves the PS nor lands
@@ -359,12 +383,11 @@ class EASGD(SyncAlgorithm):
         if not keep.any():
             return buf, state
         if not keep.all():
-            snap_rows = _gather(snap_rows,
-                                jnp.asarray(np.flatnonzero(keep), jnp.int32))
+            snap_rows = _gather(snap_rows, jnp.asarray(np.flatnonzero(keep), jnp.int32))
             ids = ids[keep]
-        return easgd_ops.easgd_round_op(buf, state, snap_rows,
-                                        jnp.asarray(ids, jnp.int32), cfg.alpha,
-                                        block=fs.block)
+        return easgd_ops.easgd_round_op(
+            buf, state, snap_rows, jnp.asarray(ids, jnp.int32), cfg.alpha, block=fs.block
+        )
 
     def on_join(self, stack, slot, state, active, cfg):
         # a joiner adopts the sync-PS copy — the centralized consensus point
@@ -375,8 +398,7 @@ class EASGD(SyncAlgorithm):
 
     def make_shadow_round(self, cfg, fs):
         if fs is not None:
-            pair = lambda ps, w: easgd_ops.easgd_pair_flat_op(
-                ps, w, cfg.alpha, block=fs.block)
+            pair = lambda ps, w: easgd_ops.easgd_pair_flat_op(ps, w, cfg.alpha, block=fs.block)
         else:
             pair = jax.jit(lambda ps, w: S.easgd_pair_update(ps, w, cfg.alpha))
 
@@ -415,8 +437,8 @@ class EASGD(SyncAlgorithm):
 @functools.lru_cache(maxsize=None)
 def _ma_elastic_jit(algo: "MA", cfg) -> Callable:
     return jax.jit(lambda stack, state, snap, active, launch_active: (
-        S.ma_round(stack, cfg.alpha, snapshot=snap, active=launch_active,
-                   land_active=active), state))
+        S.ma_round(stack, cfg.alpha, snapshot=snap, active=launch_active, land_active=active), state
+    ))
 
 
 @register
@@ -428,8 +450,7 @@ class MA(SyncAlgorithm):
     def land(self, stack, state, snap, mask, cfg):
         return S.ma_round(stack, cfg.alpha, snapshot=snap), state
 
-    def land_elastic(self, stack, state, snap, mask, active, cfg,
-                     launch_active=None):
+    def land_elastic(self, stack, state, snap, mask, active, cfg, launch_active=None):
         if active is None and launch_active is None:
             return super().land_elastic(stack, state, snap, mask, active, cfg)
         # mean over the LAUNCH-time live set (that is what the background
@@ -437,26 +458,25 @@ class MA(SyncAlgorithm):
         if launch_active is None:
             launch_active = active
         return _ma_elastic_jit(self, cfg)(
-            stack, state, snap,
+            stack,
+            state,
+            snap,
             None if active is None else jnp.asarray(active),
-            jnp.asarray(launch_active))
+            jnp.asarray(launch_active),
+        )
 
     def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None, active=None):
         if active is None:
             return ma_ops.replica_mean_op(buf, block=fs.block)
-        return ma_ops.replica_mean_rows_op(buf, _active_rows(active),
-                                           block=fs.block)
+        return ma_ops.replica_mean_rows_op(buf, _active_rows(active), block=fs.block)
 
     def land_flat(self, buf, state, snap, mask, cfg, fs, active=None):
         if active is None:
-            mean = snap if snap is not None else ma_ops.replica_mean_op(
-                buf, block=fs.block)
+            mean = snap if snap is not None else ma_ops.replica_mean_op(buf, block=fs.block)
             return ma_ops.ma_sync_op(buf, mean, cfg.alpha, block=fs.block), state
         rows = _active_rows(active)
-        mean = snap if snap is not None else ma_ops.replica_mean_rows_op(
-            buf, rows, block=fs.block)
-        return ma_ops.ma_sync_rows_op(buf, mean, rows, cfg.alpha,
-                                      block=fs.block), state
+        mean = snap if snap is not None else ma_ops.replica_mean_rows_op(buf, rows, block=fs.block)
+        return ma_ops.ma_sync_rows_op(buf, mean, rows, cfg.alpha, block=fs.block), state
 
     def make_shadow_round(self, cfg, fs):
         if fs is not None:
@@ -465,9 +485,11 @@ class MA(SyncAlgorithm):
             # CURRENT plane — trainers kept moving while the mean was in
             # flight (paper §3.3).
             plane_mean = jax.jit(lambda *planes: ma_ops.replica_mean_op(
-                jnp.stack(planes), block=fs.block))
+                jnp.stack(planes), block=fs.block
+            ))
             pullback = jax.jit(lambda plane, mean: ma_ops.ma_sync_op(
-                plane[None], mean, cfg.alpha, block=fs.block)[0])
+                plane[None], mean, cfg.alpha, block=fs.block
+            )[0])
 
             def rnd(ws, state):
                 mean = plane_mean(*ws)
@@ -495,9 +517,10 @@ class MA(SyncAlgorithm):
         return 4 * ((rn + n) + (2 * rn + n))
 
     def flat_ref_fns(self, cfg, fs):
-        return (jax.jit(replica_mean_ref),
-                jax.jit(lambda buf, st_, mean:
-                        (ma_update_ref(buf, mean, cfg.alpha), st_)))
+        return (
+            jax.jit(replica_mean_ref),
+            jax.jit(lambda buf, st_, mean: (ma_update_ref(buf, mean, cfg.alpha), st_)),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -506,11 +529,19 @@ class MA(SyncAlgorithm):
 
 @functools.lru_cache(maxsize=None)
 def _bmuf_elastic_jit(algo: "BMUF", cfg) -> Callable:
-    return jax.jit(lambda stack, state, snap, active, launch_active:
-                   S.bmuf_round(stack, state, cfg.alpha, eta=cfg.eta,
-                                block_momentum=cfg.block_momentum,
-                                nesterov=cfg.nesterov, snapshot=snap,
-                                active=launch_active, land_active=active))
+    return jax.jit(
+        lambda stack, state, snap, active, launch_active: S.bmuf_round(
+            stack,
+            state,
+            cfg.alpha,
+            eta=cfg.eta,
+            block_momentum=cfg.block_momentum,
+            nesterov=cfg.nesterov,
+            snapshot=snap,
+            active=launch_active,
+            land_active=active,
+        )
+    )
 
 
 def _bmuf_plane_step(mean, wg, vel, cfg):
@@ -532,57 +563,79 @@ class BMUF(SyncAlgorithm):
         return S.BMUFState.init(w0)
 
     def land(self, stack, state, snap, mask, cfg):
-        return S.bmuf_round(stack, state, cfg.alpha, eta=cfg.eta,
-                            block_momentum=cfg.block_momentum,
-                            nesterov=cfg.nesterov, snapshot=snap)
+        return S.bmuf_round(
+            stack,
+            state,
+            cfg.alpha,
+            eta=cfg.eta,
+            block_momentum=cfg.block_momentum,
+            nesterov=cfg.nesterov,
+            snapshot=snap,
+        )
 
     def init_state_flat(self, plane0, cfg, fs):
-        return S.BMUFState(w_global=jnp.copy(plane0),
-                           velocity=jnp.zeros((fs.n_rows, LANE), jnp.float32))
+        return S.BMUFState(
+            w_global=jnp.copy(plane0), velocity=jnp.zeros((fs.n_rows, LANE), jnp.float32)
+        )
 
-    def land_elastic(self, stack, state, snap, mask, active, cfg,
-                     launch_active=None):
+    def land_elastic(self, stack, state, snap, mask, active, cfg, launch_active=None):
         if active is None and launch_active is None:
             return super().land_elastic(stack, state, snap, mask, active, cfg)
         if launch_active is None:
             launch_active = active
         return _bmuf_elastic_jit(self, cfg)(
-            stack, state, snap,
+            stack,
+            state,
+            snap,
             None if active is None else jnp.asarray(active),
-            jnp.asarray(launch_active))
+            jnp.asarray(launch_active),
+        )
 
     def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None, active=None):
         if active is None:
             return ma_ops.replica_mean_op(buf, block=fs.block)
-        return ma_ops.replica_mean_rows_op(buf, _active_rows(active),
-                                           block=fs.block)
+        return ma_ops.replica_mean_rows_op(buf, _active_rows(active), block=fs.block)
 
     def land_flat(self, buf, state, snap, mask, cfg, fs, active=None):
         if active is None:
-            mean = snap if snap is not None else ma_ops.replica_mean_op(
-                buf, block=fs.block)
+            mean = snap if snap is not None else ma_ops.replica_mean_op(buf, block=fs.block)
             new, wg, vel = bmuf_ops.bmuf_sync_op(
-                buf, mean, state.w_global, state.velocity, cfg.alpha,
-                eta=cfg.eta, block_momentum=cfg.block_momentum,
-                nesterov=cfg.nesterov, block=fs.block)
+                buf,
+                mean,
+                state.w_global,
+                state.velocity,
+                cfg.alpha,
+                eta=cfg.eta,
+                block_momentum=cfg.block_momentum,
+                nesterov=cfg.nesterov,
+                block=fs.block,
+            )
             return new, S.BMUFState(w_global=wg, velocity=vel)
         rows = _active_rows(active)
-        mean = snap if snap is not None else ma_ops.replica_mean_rows_op(
-            buf, rows, block=fs.block)
+        mean = snap if snap is not None else ma_ops.replica_mean_rows_op(buf, rows, block=fs.block)
         new, wg, vel = bmuf_ops.bmuf_sync_rows_op(
-            buf, mean, state.w_global, state.velocity, rows, cfg.alpha,
-            eta=cfg.eta, block_momentum=cfg.block_momentum,
-            nesterov=cfg.nesterov, block=fs.block)
+            buf,
+            mean,
+            state.w_global,
+            state.velocity,
+            rows,
+            cfg.alpha,
+            eta=cfg.eta,
+            block_momentum=cfg.block_momentum,
+            nesterov=cfg.nesterov,
+            block=fs.block,
+        )
         return new, S.BMUFState(w_global=wg, velocity=vel)
 
     def make_shadow_round(self, cfg, fs):
         if fs is not None:
             plane_mean = jax.jit(lambda *planes: ma_ops.replica_mean_op(
-                jnp.stack(planes), block=fs.block))
-            state_step = jax.jit(
-                lambda mean, wg, vel: _bmuf_plane_step(mean, wg, vel, cfg))
+                jnp.stack(planes), block=fs.block
+            ))
+            state_step = jax.jit(lambda mean, wg, vel: _bmuf_plane_step(mean, wg, vel, cfg))
             pullback = jax.jit(lambda plane, look: ma_ops.ma_sync_op(
-                plane[None], look, cfg.alpha, block=fs.block)[0])
+                plane[None], look, cfg.alpha, block=fs.block
+            )[0])
 
             def rnd(ws, state):
                 # real block momentum in the background: mean -> N-sized
@@ -595,8 +648,13 @@ class BMUF(SyncAlgorithm):
                 return S.BMUFState(w_global=wg, velocity=vel), 1
         else:
             land = jax.jit(lambda stack, st_: S.bmuf_round(
-                stack, st_, cfg.alpha, eta=cfg.eta,
-                block_momentum=cfg.block_momentum, nesterov=cfg.nesterov))
+                stack,
+                st_,
+                cfg.alpha,
+                eta=cfg.eta,
+                block_momentum=cfg.block_momentum,
+                nesterov=cfg.nesterov,
+            ))
 
             def rnd(ws, state):
                 new, state = land(_stack_trees(ws), state)
@@ -618,9 +676,15 @@ class BMUF(SyncAlgorithm):
     def flat_ref_fns(self, cfg, fs):
         def land(buf, state, mean):
             new, wg, vel = bmuf_update_ref(
-                buf, mean, state.w_global, state.velocity, cfg.alpha,
-                eta=cfg.eta, block_momentum=cfg.block_momentum,
-                nesterov=cfg.nesterov)
+                buf,
+                mean,
+                state.w_global,
+                state.velocity,
+                cfg.alpha,
+                eta=cfg.eta,
+                block_momentum=cfg.block_momentum,
+                nesterov=cfg.nesterov,
+            )
             return new, S.BMUFState(w_global=wg, velocity=vel)
 
         return jax.jit(replica_mean_ref), jax.jit(land)
@@ -673,8 +737,9 @@ def _ring_partner_active_np(active: np.ndarray, shift: int) -> List[int]:
     return partner
 
 
-def _gossip_participants_np(mask: Optional[np.ndarray], R: int, shift: int,
-                            active: Optional[np.ndarray] = None):
+def _gossip_participants_np(
+    mask: Optional[np.ndarray], R: int, shift: int, active: Optional[np.ndarray] = None
+):
     """Participant rows of a gossip round, host-side (flat-engine operands).
 
     A ring pair is ACTIVE when either member's shadow clock fired — the
@@ -691,10 +756,10 @@ def _gossip_participants_np(mask: Optional[np.ndarray], R: int, shift: int,
         m = np.ones((R,), bool) if mask is None else np.asarray(mask).astype(bool)
     else:
         partner = _ring_partner_active_np(active, shift)
-        m = (np.ones((R,), bool) if mask is None
-             else np.asarray(mask).astype(bool)) & np.asarray(active, bool)
-    rows = [i for i in range(R)
-            if partner[i] != i and (m[i] or m[partner[i]])]
+        m = (
+            np.ones((R,), bool) if mask is None else np.asarray(mask).astype(bool)
+        ) & np.asarray(active, bool)
+    rows = [i for i in range(R) if partner[i] != i and (m[i] or m[partner[i]])]
     pos = {rid: k for k, rid in enumerate(rows)}
     self_pos = [pos[i] for i in rows]
     partner_pos = [pos[partner[i]] for i in rows]
@@ -758,8 +823,7 @@ class Gossip(SyncAlgorithm):
 
         return jax.tree.map(land_leaf, stack, src), state + 1
 
-    def land_elastic(self, stack, state, snap, mask, active, cfg,
-                     launch_active=None):
+    def land_elastic(self, stack, state, snap, mask, active, cfg, launch_active=None):
         if active is None and launch_active is None:
             return super().land_elastic(stack, state, snap, mask, active, cfg)
         if launch_active is None:
@@ -769,8 +833,12 @@ class Gossip(SyncAlgorithm):
         mask_arr = (jnp.asarray(np.asarray(launch_active, bool)) if mask is None
                     else jnp.asarray(np.asarray(mask, bool)))
         new = _gossip_elastic_jit(self, cfg)(
-            stack, snap, mask_arr, jnp.asarray(partner, jnp.int32),
-            None if active is None else jnp.asarray(active))
+            stack,
+            snap,
+            mask_arr,
+            jnp.asarray(partner, jnp.int32),
+            None if active is None else jnp.asarray(active),
+        )
         return new, state + 1
 
     def launch_snapshot_flat(self, buf, mask, cfg, fs, state=None, active=None):
@@ -781,16 +849,14 @@ class Gossip(SyncAlgorithm):
         # picks its partner at launch). Under elastic membership the ring is
         # drawn over the live slots only.
         rows, self_pos, partner_pos = _gossip_participants_np(
-            mask, buf.shape[0], 0 if state is None else int(state),
-            active=active)
-        return (_gather(buf, jnp.asarray(rows, jnp.int32)),
-                rows, self_pos, partner_pos)
+            mask, buf.shape[0], 0 if state is None else int(state), active=active
+        )
+        return (_gather(buf, jnp.asarray(rows, jnp.int32)), rows, self_pos, partner_pos)
 
     def land_flat(self, buf, state, snap, mask, cfg, fs, active=None):
         if snap is None:  # fixed-rate: pair and gather at landing time (the
             # round op donates ``buf``, so the snapshot must be separate)
-            snap = self.launch_snapshot_flat(buf, mask, cfg, fs, state,
-                                             active=active)
+            snap = self.launch_snapshot_flat(buf, mask, cfg, fs, state, active=active)
         snap_rows, rows, self_pos, partner_pos = snap
         new_state = state + 1
         if active is not None and rows:
@@ -804,20 +870,24 @@ class Gossip(SyncAlgorithm):
         if not rows:
             return buf, new_state
         new = gossip_ops.gossip_round_op(
-            buf, snap_rows, jnp.asarray(rows, jnp.int32),
+            buf,
+            snap_rows,
+            jnp.asarray(rows, jnp.int32),
             jnp.asarray(self_pos, jnp.int32),
-            jnp.asarray(partner_pos, jnp.int32), cfg.alpha, block=fs.block)
+            jnp.asarray(partner_pos, jnp.int32),
+            cfg.alpha,
+            block=fs.block,
+        )
         return new, new_state
 
     def make_shadow_round(self, cfg, fs):
         if fs is not None:
-            pair = lambda a, b: gossip_ops.gossip_pair_flat_op(
-                a, b, cfg.alpha, block=fs.block)
+            pair = lambda a, b: gossip_ops.gossip_pair_flat_op(a, b, cfg.alpha, block=fs.block)
         else:
             def pair_tree(a, b):
                 mix = jax.tree.map(
-                    lambda x, y: 0.5 * (x.astype(jnp.float32)
-                                        + y.astype(jnp.float32)), a, b)
+                    lambda x, y: 0.5 * (x.astype(jnp.float32) + y.astype(jnp.float32)), a, b
+                )
                 return S.lerp(a, mix, cfg.alpha), S.lerp(b, mix, cfg.alpha)
 
             pair = jax.jit(pair_tree)
@@ -850,8 +920,9 @@ class Gossip(SyncAlgorithm):
             ids = jnp.arange(R, dtype=jnp.int32)
             partner = _ring_partner(R, state)
             mix = 0.5 * (snap + snap[partner])
-            new = jnp.where((partner != ids)[:, None, None],
-                            (1.0 - cfg.alpha) * buf + cfg.alpha * mix, buf)
+            new = jnp.where(
+                (partner != ids)[:, None, None], (1.0 - cfg.alpha) * buf + cfg.alpha * mix, buf
+            )
             return new, state + 1
 
         return jax.jit(lambda buf: buf.copy()), jax.jit(land)

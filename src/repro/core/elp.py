@@ -44,7 +44,7 @@ class EPSMeter:
 
     def __post_init__(self) -> None:
         self._t0 = self.clock()
-        self._buckets = deque()
+        self._buckets = deque()  # hogwild-race: ok — single writer, readers snapshot
 
     def _evict(self, now: float) -> None:
         # strictly-older-than-window: a bucket exactly at the cutoff is kept
@@ -97,10 +97,10 @@ class SlotEPS:
             raise ValueError(f"need n_slots >= 1, got {n_slots}")
         self.n_slots = int(n_slots)
         self.window_s = float(window_s)
-        self._busy = [0.0] * self.n_slots
+        self._busy = [0.0] * self.n_slots  # hogwild-race: ok — slot-owned cells
+        # hogwild-race: ok — slot-owned meters: only owner slot i mutates _meters[i]
         self._meters = [
-            EPSMeter(window_s=window_s, clock=self._make_clock(i))
-            for i in range(self.n_slots)
+            EPSMeter(window_s=window_s, clock=self._make_clock(i)) for i in range(self.n_slots)
         ]
 
     def _make_clock(self, slot: int) -> Callable[[], float]:

@@ -65,8 +65,7 @@ class FlatSpace:
             raise ValueError("FlatSpace needs at least one leaf")
         shapes = tuple(tuple(l.shape) for l in leaves)
         dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
-        packable = {jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16),
-                    jnp.dtype(jnp.float16)}
+        packable = {jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)}
         bad = sorted({str(d) for d in dtypes if d not in packable})
         if bad:
             raise TypeError(
@@ -95,9 +94,7 @@ class FlatSpace:
     def pack(self, tree: Pytree) -> jnp.ndarray:
         """Pytree -> contiguous (n_rows, LANE) fp32 plane."""
         leaves = jax.tree_util.tree_leaves(tree)
-        flat = jnp.concatenate(
-            [l.reshape(-1).astype(jnp.float32) for l in leaves]
-        )
+        flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
         flat = jnp.pad(flat, (0, self.slots - self.total))
         return flat.reshape(self.n_rows, LANE)
 
@@ -115,9 +112,7 @@ class FlatSpace:
         """Pytree with leading replica dim R -> (R, n_rows, LANE) fp32 buffer."""
         leaves = jax.tree_util.tree_leaves(stack)
         R = leaves[0].shape[0]
-        flat = jnp.concatenate(
-            [l.reshape(R, -1).astype(jnp.float32) for l in leaves], axis=1
-        )
+        flat = jnp.concatenate([l.reshape(R, -1).astype(jnp.float32) for l in leaves], axis=1)
         flat = jnp.pad(flat, ((0, 0), (0, self.slots - self.total)))
         return flat.reshape(R, self.n_rows, LANE)
 

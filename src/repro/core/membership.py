@@ -88,13 +88,16 @@ class Membership:
         if R_max is None:
             R_max = n_active
         if not 0 < n_active <= R_max:
-            raise ValueError(f"need 0 < n_active <= R_max, "
-                             f"got n_active={n_active}, R_max={R_max}")
+            raise ValueError(
+                f"need 0 < n_active <= R_max, " f"got n_active={n_active}, R_max={R_max}"
+            )
         self.R_max = int(R_max)
-        self._status = np.full((self.R_max,), DEAD, np.int8)
+        self._status = np.full((self.R_max,), DEAD, np.int8)  # guarded-by: _lock
         self._status[:n_active] = ACTIVE
-        self._epoch = 0
+        self._epoch = 0  # guarded-by: _lock
         self._lock = threading.Lock()
+        # guarded-by-writes: _lock — appends serialized; readers take len()
+        # prefixes of an append-only list, which is safe under the GIL.
         self.events: List[MembershipEvent] = []
 
     @classmethod
@@ -111,7 +114,8 @@ class Membership:
     # -- reads ---------------------------------------------------------------
     @property
     def epoch(self) -> int:
-        return self._epoch
+        with self._lock:
+            return self._epoch
 
     def status(self, slot: int) -> str:
         with self._lock:
@@ -135,8 +139,9 @@ class Membership:
             return self._epoch, self._status == ACTIVE
 
     # -- transitions ---------------------------------------------------------
-    def _transition(self, slot: int, allowed: Iterable[int], to: int,
-                    kind: str, reason: str = "") -> MembershipEvent:
+    def _transition(
+        self, slot: int, allowed: Iterable[int], to: int, kind: str, reason: str = ""
+    ) -> MembershipEvent:
         if not 0 <= slot < self.R_max:
             raise ValueError(f"slot {slot} out of range [0, {self.R_max})")
         with self._lock:
@@ -148,8 +153,7 @@ class Membership:
                     f"{[_STATUS_NAMES[a] for a in allowed]})")
             self._status[slot] = to
             self._epoch += 1
-            ev = MembershipEvent(kind, slot, self._epoch, reason,
-                                 time.perf_counter())
+            ev = MembershipEvent(kind, slot, self._epoch, reason, time.perf_counter())
             self.events.append(ev)
             return ev
 
@@ -178,15 +182,14 @@ class Membership:
         status changes, no epoch bump; ``slot`` is -1 for cohort-level
         events and the shard id for ``ps_*`` events."""
         with self._lock:
-            ev = MembershipEvent(kind, slot, self._epoch, reason,
-                                 time.perf_counter())
+            ev = MembershipEvent(kind, slot, self._epoch, reason, time.perf_counter())
             self.events.append(ev)
             return ev
 
     def __repr__(self) -> str:
-        s = "".join({DEAD: ".", ACTIVE: "A", JOINING: "j"}[int(x)]
-                    for x in self._status)
-        return f"Membership(R_max={self.R_max}, epoch={self._epoch}, [{s}])"
+        with self._lock:
+            s = "".join({DEAD: ".", ACTIVE: "A", JOINING: "j"}[int(x)] for x in self._status)
+            return f"Membership(R_max={self.R_max}, epoch={self._epoch}, [{s}])"
 
 
 # ---------------------------------------------------------------------------
@@ -208,8 +211,9 @@ class MembershipSchedule:
     def __init__(self, events: Sequence[Tuple[int, str, int]]):
         for t, kind, slot in events:
             if kind not in _SCHEDULE_KINDS:
-                raise ValueError(f"unknown schedule event kind {kind!r}; "
-                                 f"one of {_SCHEDULE_KINDS}")
+                raise ValueError(
+                    f"unknown schedule event kind {kind!r}; " f"one of {_SCHEDULE_KINDS}"
+                )
             if t < 0 or slot < 0:
                 raise ValueError(f"bad schedule entry {(t, kind, slot)}")
         self._events = sorted(events, key=lambda e: e[0])
@@ -283,29 +287,31 @@ class FaultSpec:
                 raise ValueError(
                     f"straggler_until names slot {slot} but "
                     f"straggler_sleep_s does not degrade it")
-        for name, d in (("straggler_sleep_s", self.straggler_sleep_s),
-                        ("straggler_until", self.straggler_until),
-                        ("crash_at", self.crash_at),
-                        ("join_at", self.join_at),
-                        ("raise_at", self.raise_at)):
+        for name, d in (
+            ("straggler_sleep_s", self.straggler_sleep_s),
+            ("straggler_until", self.straggler_until),
+            ("crash_at", self.crash_at),
+            ("join_at", self.join_at),
+            ("raise_at", self.raise_at),
+        ):
             for slot in d:
                 if not 0 <= slot < R_max:
-                    raise ValueError(f"{name} slot {slot} out of range "
-                                     f"[0, {R_max})")
-        for name, v in (("sync_crash_at", self.sync_crash_at),
-                        ("sync_stall_at", self.sync_stall_at)):
+                    raise ValueError(f"{name} slot {slot} out of range " f"[0, {R_max})")
+        for name, v in (
+            ("sync_crash_at", self.sync_crash_at), ("sync_stall_at", self.sync_stall_at)
+        ):
             if v is not None and v < 0:
                 raise ValueError(f"{name} must be >= 0, got {v}")
         if self.sync_stall_s <= 0:
-            raise ValueError(f"sync_stall_s must be > 0, got "
-                             f"{self.sync_stall_s}")
+            raise ValueError(f"sync_stall_s must be > 0, got " f"{self.sync_stall_s}")
         if self.ps_recover_after_s < 0:
-            raise ValueError(f"ps_recover_after_s must be >= 0, got "
-                             f"{self.ps_recover_after_s}")
+            raise ValueError(f"ps_recover_after_s must be >= 0, got " f"{self.ps_recover_after_s}")
         for shard, it in self.ps_fail_at.items():
             if shard < 0 or it < 0:
-                raise ValueError(f"bad ps_fail_at entry {shard}:{it} "
-                                 f"(shard and iteration must be >= 0; the "
-                                 f"runner validates shard ids against its "
-                                 f"plan)")
+                raise ValueError(
+                    f"bad ps_fail_at entry {shard}:{it} "
+                    f"(shard and iteration must be >= 0; the "
+                    f"runner validates shard ids against its "
+                    f"plan)"
+                )
         return self

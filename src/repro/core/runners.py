@@ -103,9 +103,7 @@ Pytree = Any
 
 def _dense_flatspace(cfg) -> FlatSpace:
     """Layout of the DLRM dense replica space, from shapes only (no init)."""
-    shapes = jax.eval_shape(
-        lambda: dlrm.init_dense(cfg, jax.random.PRNGKey(0))
-    )
+    shapes = jax.eval_shape(lambda: dlrm.init_dense(cfg, jax.random.PRNGKey(0)))
     return FlatSpace.from_tree(shapes)
 
 
@@ -139,8 +137,7 @@ class HogwildSim:
         emb_lr: float = 0.05,
         seed: int = 0,
         membership: Optional[Membership] = None,
-        schedule: Optional[Union[MembershipSchedule,
-                                 Sequence[Tuple[int, str, int]]]] = None,
+        schedule: Optional[Union[MembershipSchedule, Sequence[Tuple[int, str, int]]]] = None,
         cache: Optional[CacheConfig] = None,
     ):
         self.cfg = cfg
@@ -167,8 +164,9 @@ class HogwildSim:
                 cap = max(cap, schedule.max_slot() + 1)
             membership = Membership(n_trainers, R_max=cap)
         if membership.R_max < n_trainers:
-            raise ValueError(f"membership capacity {membership.R_max} < "
-                             f"n_trainers {n_trainers}")
+            raise ValueError(
+                f"membership capacity {membership.R_max} < " f"n_trainers {n_trainers}"
+            )
         self.membership = membership
         self.R, self.M, self.B = membership.R_max, n_threads, batch_size
         self.opt = optimizer
@@ -218,12 +216,10 @@ class HogwildSim:
 
                 w2 = jax.tree.map(keep, w2, state_w)
                 opt2 = jax.tree.map(keep, opt2, state_opt)
-                g_pooled = jnp.where(
-                    active.reshape((R, 1, 1, 1, 1)), g_pooled, 0.0)
+                g_pooled = jnp.where(active.reshape((R, 1, 1, 1, 1)), g_pooled, 0.0)
             # elastic callers get the per-replica loss vector (the host masks
             # dead slots out of the reported mean and the join tests read it)
-            return w2, opt2, (loss if active is not None
-                              else jnp.mean(loss)), g_pooled
+            return w2, opt2, (loss if active is not None else jnp.mean(loss)), g_pooled
 
         def train_core(state_w, state_opt, emb_state, batch, active=None):
             # batch leaves: (R, M, B, ...)
@@ -232,15 +228,13 @@ class HogwildSim:
                 emb_state, spec, idx.reshape(-1, cfg.n_sparse_features, cfg.multi_hot)
             )
             pooled = pooled.reshape(self.R, self.M, self.B, cfg.n_sparse_features, -1)
-            w2, opt2, loss, g_pooled = dense_core(
-                state_w, state_opt, pooled, batch, active=active)
+            w2, opt2, loss, g_pooled = dense_core(state_w, state_opt, pooled, batch, active=active)
             # Hogwild on the single embedding copy: every trainer/thread applies
             # immediately; one fused scatter-Adagrad kernel launch implements
             # the duplicate-row accumulate.
             flat_idx = idx.reshape(-1, cfg.n_sparse_features, cfg.multi_hot)
             flat_g = g_pooled.reshape(-1, cfg.n_sparse_features, cfg.embedding_dim)
-            emb2 = emb.sparse_adagrad_update_fused(
-                emb_state, spec, flat_idx, flat_g, self.emb_lr)
+            emb2 = emb.sparse_adagrad_update_fused(emb_state, spec, flat_idx, flat_g, self.emb_lr)
             return w2, opt2, emb2, loss
 
         sc = self.sync_cfg
@@ -258,8 +252,7 @@ class HogwildSim:
 
             def train_iter_elastic(w_buf, state_opt, emb_state, active, batch):
                 w2, opt2, emb2, loss = train_core(
-                    fs.unpack_stack(w_buf), state_opt, emb_state, batch,
-                    active=active
+                    fs.unpack_stack(w_buf), state_opt, emb_state, batch, active=active
                 )
                 return fs.pack_stack(w2), opt2, emb2, loss
 
@@ -269,8 +262,7 @@ class HogwildSim:
             train_iter = train_core
 
             def train_iter_elastic(state_w, state_opt, emb_state, active, batch):
-                return train_core(state_w, state_opt, emb_state, batch,
-                                  active=active)
+                return train_core(state_w, state_opt, emb_state, batch, active=active)
 
             # pytree landing: one jit over the algorithm's oracle (retraces
             # only per snap/mask None-ness — a handful of structures). The
@@ -281,8 +273,7 @@ class HogwildSim:
             )
 
         self._train_iter = jax.jit(train_iter, donate_argnums=(0, 1, 2))
-        self._train_iter_elastic = jax.jit(
-            train_iter_elastic, donate_argnums=(0, 1, 2))
+        self._train_iter_elastic = jax.jit(train_iter_elastic, donate_argnums=(0, 1, 2))
 
         # Cached-mode dense programs: pooled arrives as an input (the hot-
         # tier lookup ran standalone) and the sparse update runs standalone
@@ -291,26 +282,23 @@ class HogwildSim:
             fs = self.flat
 
             def dense_iter(w_buf, state_opt, pooled, batch):
-                w2, opt2, loss, g = dense_core(
-                    fs.unpack_stack(w_buf), state_opt, pooled, batch)
+                w2, opt2, loss, g = dense_core(fs.unpack_stack(w_buf), state_opt, pooled, batch)
                 return fs.pack_stack(w2), opt2, loss, g
 
             def dense_iter_elastic(w_buf, state_opt, active, pooled, batch):
                 w2, opt2, loss, g = dense_core(
-                    fs.unpack_stack(w_buf), state_opt, pooled, batch,
-                    active=active)
+                    fs.unpack_stack(w_buf), state_opt, pooled, batch, active=active
+                )
                 return fs.pack_stack(w2), opt2, loss, g
         else:
             def dense_iter(state_w, state_opt, pooled, batch):
                 return dense_core(state_w, state_opt, pooled, batch)
 
             def dense_iter_elastic(state_w, state_opt, active, pooled, batch):
-                return dense_core(state_w, state_opt, pooled, batch,
-                                  active=active)
+                return dense_core(state_w, state_opt, pooled, batch, active=active)
 
         self._dense_iter = jax.jit(dense_iter, donate_argnums=(0, 1))
-        self._dense_iter_elastic = jax.jit(
-            dense_iter_elastic, donate_argnums=(0, 1))
+        self._dense_iter_elastic = jax.jit(dense_iter_elastic, donate_argnums=(0, 1))
 
         def eval_batch(w, emb_state, batch):
             pooled = emb.lookup(emb_state, spec, batch["sparse"])
@@ -341,9 +329,7 @@ class HogwildSim:
         """One-pass stream: (R*M) distinct shards per iteration."""
         n = self.R * self.M
         b = ctr.gen_batch(self.cfg, self.teacher, self.seed, it, self.B * n)
-        return jax.tree.map(
-            lambda x: x.reshape(self.R, self.M, self.B, *x.shape[1:]), b
-        )
+        return jax.tree.map(lambda x: x.reshape(self.R, self.M, self.B, *x.shape[1:]), b)
 
     # -- sync scheduling ----------------------------------------------------
     def _shadow_schedule(self, t: int) -> np.ndarray:
@@ -352,8 +338,9 @@ class HogwildSim:
         offs = (np.arange(self.R) * gap) // max(self.R, 1)
         return ((t + offs) % gap) == 0
 
-    def _launch_snapshot(self, st: SimState, mask: np.ndarray,
-                         active: Optional[np.ndarray] = None) -> Pytree:
+    def _launch_snapshot(
+        self, st: SimState, mask: np.ndarray, active: Optional[np.ndarray] = None
+    ) -> Pytree:
         """State captured when a background sync launches (lands `delay` later).
 
         Flat engine: the algorithm picks its own compact form — a fired-rows
@@ -364,13 +351,14 @@ class HogwildSim:
         """
         if self.engine == "flat":
             return self.algo.launch_snapshot_flat(
-                st.w_stack, mask, self.sync_cfg, self.flat, st.algo_state,
-                active=active)
+                st.w_stack, mask, self.sync_cfg, self.flat, st.algo_state, active=active
+            )
         # pytree: real deep copy (train_iter donates its buffers)
         return jax.tree.map(jnp.copy, st.w_stack)
 
-    def _apply_membership_event(self, st: SimState, kind: str, slot: int,
-                                reason: str = "") -> SimState:
+    def _apply_membership_event(
+        self, st: SimState, kind: str, slot: int, reason: str = ""
+    ) -> SimState:
         """One schedule transition, at an iteration boundary. Joins bootstrap
         through the algorithm's ``on_join`` hook (live mean / PS copy) with a
         fresh optimizer slot; leaves/fails dispatch ``on_leave``. Nothing
@@ -392,17 +380,24 @@ class HogwildSim:
         if donors.any():  # no live donors -> keep the slot's current weights
             if self.engine == "flat":
                 st.w_stack, st.algo_state = self.algo.on_join_flat(
-                    st.w_stack, slot, st.algo_state, donors, sc, fs)
+                    st.w_stack, slot, st.algo_state, donors, sc, fs
+                )
             else:
                 st.w_stack, st.algo_state = self.algo.on_join(
-                    st.w_stack, slot, st.algo_state, jnp.asarray(donors), sc)
+                    st.w_stack, slot, st.algo_state, jnp.asarray(donors), sc
+                )
         st.opt_stack = S.tree_set(st.opt_stack, slot, self._opt0)
         self.membership.activate(slot)
         return st
 
-    def run(self, n_iters: int, *, log_every: int = 0,
-            on_iter: Optional[Callable[[int, float], None]] = None,
-            state: Optional[SimState] = None) -> Dict[str, Any]:
+    def run(
+        self,
+        n_iters: int,
+        *,
+        log_every: int = 0,
+        on_iter: Optional[Callable[[int, float], None]] = None,
+        state: Optional[SimState] = None,
+    ) -> Dict[str, Any]:
         """Train ``n_iters`` iterations. ``state`` resumes a prior run (e.g.
         an elastic ``load_state``): iteration numbering — and therefore the
         one-pass batch stream, the shadow-clock offsets, and the membership
@@ -437,7 +432,8 @@ class HogwildSim:
             # raced (memoized across the prefetch horizon)
             if it not in gid_memo:
                 idx = np.asarray(_get_batch(it)["sparse"]).reshape(
-                    -1, self.cfg.n_sparse_features, self.cfg.multi_hot)
+                    -1, self.cfg.n_sparse_features, self.cfg.multi_hot
+                )
                 gid_memo[it] = idx + offs[None, :, None]
             return gid_memo[it]
 
@@ -464,43 +460,42 @@ class HogwildSim:
                 # horizon [t, t+K) at the iteration boundary — exactly what
                 # the threaded shadow thread does between syncs, quantized
                 if self.cache.lookahead:
-                    store.prefetch([_gids(t + j)
-                                    for j in range(self.cache.lookahead)])
+                    store.prefetch([_gids(t + j) for j in range(self.cache.lookahead)])
                 gids = _gids(t)
                 pooled = store.lookup(gids).reshape(
-                    self.R, self.M, self.B, self.cfg.n_sparse_features, -1)
+                    self.R, self.M, self.B, self.cfg.n_sparse_features, -1
+                )
                 if elastic:
-                    st.w_stack, st.opt_stack, loss_out, g_pooled = (
-                        self._dense_iter_elastic(st.w_stack, st.opt_stack,
-                                                 jnp.asarray(active), pooled,
-                                                 batch))
+                    st.w_stack, st.opt_stack, loss_out, g_pooled = self._dense_iter_elastic(
+                        st.w_stack, st.opt_stack, jnp.asarray(active), pooled, batch
+                    )
                 else:
                     st.w_stack, st.opt_stack, loss_out, g_pooled = (
-                        self._dense_iter(st.w_stack, st.opt_stack, pooled,
-                                         batch))
+                        self._dense_iter(st.w_stack, st.opt_stack, pooled, batch)
+                    )
                 # standalone fused scatter-Adagrad on the hot tier, same
                 # (B*F, m)/(B*F, d) flattening as sparse_adagrad_update_fused
-                store.update(gids.reshape(-1, self.cfg.multi_hot),
-                             g_pooled.reshape(-1, self.cfg.embedding_dim),
-                             self.emb_lr)
+                store.update(
+                    gids.reshape(-1, self.cfg.multi_hot),
+                    g_pooled.reshape(-1, self.cfg.embedding_dim),
+                    self.emb_lr,
+                )
                 for k in [k for k in gid_memo if k <= t]:
                     del gid_memo[k]
                     batch_memo.pop(k, None)
             elif elastic:
-                st.w_stack, st.opt_stack, st.emb_state, loss_out = (
-                    self._train_iter_elastic(st.w_stack, st.opt_stack,
-                                             st.emb_state, jnp.asarray(active),
-                                             batch))
+                st.w_stack, st.opt_stack, st.emb_state, loss_out = self._train_iter_elastic(
+                    st.w_stack, st.opt_stack, st.emb_state, jnp.asarray(active), batch
+                )
             else:
                 st.w_stack, st.opt_stack, st.emb_state, loss_out = (
-                    self._train_iter(st.w_stack, st.opt_stack, st.emb_state,
-                                     batch))
+                    self._train_iter(st.w_stack, st.opt_stack, st.emb_state, batch)
+                )
             if elastic:
                 lv = np.asarray(loss_out)
                 replica_losses.append(lv)
                 # an all-dead cohort trains nothing: nan, not a mean of []
-                losses.append(float(lv[active].mean()) if active.any()
-                              else float("nan"))
+                losses.append(float(lv[active].mean()) if active.any() else float("nan"))
                 examples += int(active.sum()) * self.M * self.B
             else:
                 losses.append(float(loss_out))
@@ -516,10 +511,10 @@ class HogwildSim:
                     # while the sync was in flight is simply skipped (an
                     # all-dead cohort drops the landing entirely)
                     if active is None or active.any():
-                        st = self._apply_sync(st, snap, mask, active=active,
-                                              launch_active=launch_active)
-                        sync_count += (int(mask.sum()) if mask is not None
-                                       else self.R)
+                        st = self._apply_sync(
+                            st, snap, mask, active=active, launch_active=launch_active
+                        )
+                        sync_count += (int(mask.sum()) if mask is not None else self.R)
                     pending = None
                 if pending is None:
                     mask = self._shadow_schedule(t + 1)
@@ -537,13 +532,17 @@ class HogwildSim:
                             # exactly that shape).
                             snap = (self._launch_snapshot(st, mask, active)
                                     if self.engine == "flat" else st.w_stack)
-                            st = self._apply_sync(st, snap, mask, active=active,
-                                                  launch_active=active)
+                            st = self._apply_sync(
+                                st, snap, mask, active=active, launch_active=active
+                            )
                             sync_count += int(mask.sum())
                         else:
-                            pending = (t + 1 + sc.delay,
-                                       self._launch_snapshot(st, mask, active),
-                                       mask, active)
+                            pending = (
+                                t + 1 + sc.delay,
+                                self._launch_snapshot(st, mask, active),
+                                mask,
+                                active,
+                            )
             st.step = t + 1
             if on_iter:
                 on_iter(t, losses[-1])
@@ -570,8 +569,7 @@ class HogwildSim:
             out["membership_events"] = list(self.membership.events)
         return out
 
-    def _apply_sync(self, st: SimState, snap, mask, active=None,
-                    launch_active=None) -> SimState:
+    def _apply_sync(self, st: SimState, snap, mask, active=None, launch_active=None) -> SimState:
         """Land one background sync: the algorithm owns the semantics (one
         fused kernel launch on the flat engine; the jitted pytree oracle
         otherwise). ``snap=None`` means fixed-rate — sync against the current
@@ -580,16 +578,21 @@ class HogwildSim:
         (None == not elastic)."""
         if self.engine == "flat":
             st.w_stack, st.algo_state = self.algo.land_flat(
-                st.w_stack, st.algo_state, snap, mask, self.sync_cfg, self.flat,
-                active=active)
+                st.w_stack, st.algo_state, snap, mask, self.sync_cfg, self.flat, active=active
+            )
         elif active is None:
             mask_arr = None if mask is None else jnp.asarray(mask)
-            st.w_stack, st.algo_state = self._land_py(
-                st.w_stack, st.algo_state, snap, mask_arr)
+            st.w_stack, st.algo_state = self._land_py(st.w_stack, st.algo_state, snap, mask_arr)
         else:
             st.w_stack, st.algo_state = self.algo.land_elastic(
-                st.w_stack, st.algo_state, snap, mask, active, self.sync_cfg,
-                launch_active=launch_active)
+                st.w_stack,
+                st.algo_state,
+                snap,
+                mask,
+                active,
+                self.sync_cfg,
+                launch_active=launch_active,
+            )
         return st
 
     def replica_params(self, st: SimState, i: int) -> Pytree:
@@ -609,14 +612,23 @@ class HogwildSim:
     def _state_tree(self, st: SimState) -> Dict[str, Any]:
         """Engine-independent on-disk form: dense replicas as the named
         pytree stack, embedding + optimizer + opaque algorithm state."""
-        return {"w": self.dense_stack(st), "opt": st.opt_stack,
-                "emb": st.emb_state, "algo": st.algo_state}
+        return {
+            "w": self.dense_stack(st),
+            "opt": st.opt_stack,
+            "emb": st.emb_state,
+            "algo": st.algo_state,
+        }
 
-    def save_state(self, path: str, st: SimState,
-                   metadata: Optional[Dict[str, Any]] = None) -> None:
-        meta = {"step": st.step, "algo": self.sync_cfg.algo,
-                "engine": self.engine, "R": self.R,
-                "active_mask": [bool(b) for b in self.membership.active_mask()]}
+    def save_state(
+        self, path: str, st: SimState, metadata: Optional[Dict[str, Any]] = None
+    ) -> None:
+        meta = {
+            "step": st.step,
+            "algo": self.sync_cfg.algo,
+            "engine": self.engine,
+            "R": self.R,
+            "active_mask": [bool(b) for b in self.membership.active_mask()],
+        }
         meta.update(metadata or {})
         ckpt.save(path, self._state_tree(st), metadata=meta)
 
@@ -644,12 +656,9 @@ class HogwildSim:
         # else (e.g. embedding rows from a different config) must raise
         replica_stacked = lambda k: k == "w" or k.startswith("w/") \
             or k == "opt" or k.startswith("opt/")
-        tree, meta, resized = ckpt.restore_elastic(path, like,
-                                                   may_resize=replica_stacked)
-        w_stack = (self.flat.pack_stack(tree["w"]) if self.engine == "flat"
-                   else tree["w"])
-        st = SimState(w_stack, tree["opt"], tree["emb"], tree["algo"],
-                      int(meta.get("step", 0)))
+        tree, meta, resized = ckpt.restore_elastic(path, like, may_resize=replica_stacked)
+        w_stack = (self.flat.pack_stack(tree["w"]) if self.engine == "flat" else tree["w"])
+        st = SimState(w_stack, tree["opt"], tree["emb"], tree["algo"], int(meta.get("step", 0)))
         saved_R = int(meta.get("R", self.R))
         # donors = the restored cohort: rows live at SAVE time (and present
         # after any truncation)
@@ -667,15 +676,18 @@ class HogwildSim:
             if donors.any():
                 if self.engine == "flat":
                     st.w_stack, st.algo_state = self.algo.on_join_flat(
-                        st.w_stack, slot, st.algo_state, donors, sc, fs)
+                        st.w_stack, slot, st.algo_state, donors, sc, fs
+                    )
                 else:
                     st.w_stack, st.algo_state = self.algo.on_join(
-                        st.w_stack, slot, st.algo_state, jnp.asarray(donors), sc)
+                        st.w_stack, slot, st.algo_state, jnp.asarray(donors), sc
+                    )
             st.opt_stack = S.tree_set(st.opt_stack, slot, self._opt0)
         return st
 
-    def evaluate(self, st: SimState, n_batches: int = 20, batch_size: int = 4096,
-                 replica: int = 0) -> float:
+    def evaluate(
+        self, st: SimState, n_batches: int = 20, batch_size: int = 4096, replica: int = 0
+    ) -> float:
         """Paper protocol: evaluate the FIRST trainer's replica."""
         w = self.replica_params(st, replica)
         tot = 0.0
@@ -712,19 +724,28 @@ class ThreadedShadowRunner:
     pull-backs (MA), the full block-momentum global step (BMUF), or rotating
     pairwise exchanges (gossip)."""
 
-    def __init__(self, cfg, sync_cfg: S.SyncConfig, *, n_trainers: int,
-                 batch_size: int, optimizer: Optimizer, emb_lr: float = 0.05,
-                 seed: int = 0, sync_sleep_s: float = 0.0,
-                 n_emb_shards: Optional[int] = None,
-                 fault_spec: Optional[FaultSpec] = None,
-                 membership: Optional[Membership] = None,
-                 eps_window_s: float = 2.0,
-                 straggler_policy: Optional[StragglerPolicy] = None,
-                 supervise: bool = True,
-                 supervisor_config: Optional[SupervisorConfig] = None,
-                 ps_snapshot_every: int = 2,
-                 shard_retry: Optional[emb_shards.ShardRetryPolicy] = None,
-                 cache: Optional[CacheConfig] = None):
+    def __init__(
+        self,
+        cfg,
+        sync_cfg: S.SyncConfig,
+        *,
+        n_trainers: int,
+        batch_size: int,
+        optimizer: Optimizer,
+        emb_lr: float = 0.05,
+        seed: int = 0,
+        sync_sleep_s: float = 0.0,
+        n_emb_shards: Optional[int] = None,
+        fault_spec: Optional[FaultSpec] = None,
+        membership: Optional[Membership] = None,
+        eps_window_s: float = 2.0,
+        straggler_policy: Optional[StragglerPolicy] = None,
+        supervise: bool = True,
+        supervisor_config: Optional[SupervisorConfig] = None,
+        ps_snapshot_every: int = 2,
+        shard_retry: Optional[emb_shards.ShardRetryPolicy] = None,
+        cache: Optional[CacheConfig] = None,
+    ):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
         # Tiered embedding cache (DESIGN.md §11): each PS fronts its table
         # with a two-tier store; the shadow thread (already the background
@@ -744,16 +765,20 @@ class ThreadedShadowRunner:
         # shadow thread each round (mode="shadow") or by a lightweight
         # monitor thread (mode="fixed_rate", which has no shadow thread).
         if straggler_policy is not None and straggler_policy.n_slots != n_trainers:
-            raise ValueError(f"straggler_policy watches "
-                             f"{straggler_policy.n_slots} slots, runner has "
-                             f"{n_trainers} trainers")
+            raise ValueError(
+                f"straggler_policy watches "
+                f"{straggler_policy.n_slots} slots, runner has "
+                f"{n_trainers} trainers"
+            )
         self.policy = straggler_policy
         if membership is None:
             membership = Membership.from_mask(
-                [i not in self.fault.join_at for i in range(n_trainers)])
+                [i not in self.fault.join_at for i in range(n_trainers)]
+            )
         if membership.R_max != n_trainers:
-            raise ValueError(f"membership capacity {membership.R_max} != "
-                             f"n_trainers {n_trainers}")
+            raise ValueError(
+                f"membership capacity {membership.R_max} != " f"n_trainers {n_trainers}"
+            )
         self.membership = membership
         self.eps_window_s = eps_window_s
         self.spec = emb.spec_from_config(cfg)
@@ -771,26 +796,29 @@ class ThreadedShadowRunner:
         # ps_fail_at) rides the supervisor's watch loop, so a FaultSpec that
         # kills the sync thread or a PS requires supervise=True.
         self.supervise = bool(supervise)
-        self.supervisor_config = (supervisor_config
-                                  or SupervisorConfig()).validate()
+        self.supervisor_config = (supervisor_config or SupervisorConfig()).validate()
         if ps_snapshot_every < 1:
-            raise ValueError(f"ps_snapshot_every must be >= 1, got "
-                             f"{ps_snapshot_every}")
+            raise ValueError(f"ps_snapshot_every must be >= 1, got " f"{ps_snapshot_every}")
         self.ps_snapshot_every = int(ps_snapshot_every)
         self.shard_retry = shard_retry
         for s in self.fault.ps_fail_at:
             if not 0 <= s < self.n_emb_shards:
-                raise ValueError(f"ps_fail_at names shard {s}, but the plan "
-                                 f"has {self.n_emb_shards} embedding shards")
-        sync_chaos = (self.fault.sync_crash_at is not None
-                      or self.fault.sync_stall_at is not None)
+                raise ValueError(
+                    f"ps_fail_at names shard {s}, but the plan "
+                    f"has {self.n_emb_shards} embedding shards"
+                )
+        sync_chaos = (self.fault.sync_crash_at is not None or self.fault.sync_stall_at is not None)
         if sync_chaos and self.sync_cfg.mode == "fixed_rate":
-            raise ValueError("sync_crash_at / sync_stall_at target the "
-                             "shadow thread; mode='fixed_rate' has none")
+            raise ValueError(
+                "sync_crash_at / sync_stall_at target the "
+                "shadow thread; mode='fixed_rate' has none"
+            )
         if (sync_chaos or self.fault.ps_fail_at) and not self.supervise:
-            raise ValueError("FaultSpec injects sync/PS chaos, but "
-                             "supervise=False — the supervisor is both the "
-                             "injection clock and the recovery path")
+            raise ValueError(
+                "FaultSpec injects sync/PS chaos, but "
+                "supervise=False — the supervisor is both the "
+                "injection clock and the recovery path"
+            )
         self.supervisor: Optional[Supervisor] = None
         plan = self.plan
 
@@ -808,11 +836,9 @@ class ThreadedShadowRunner:
             return dense_one(w, opt_state, pooled, batch)
 
         def _make_shard_update(s: int):
-            return jax.jit(lambda st, idx, g: emb_shards.shard_update(
-                plan, s, st, idx, g, emb_lr))
+            return jax.jit(lambda st, idx, g: emb_shards.shard_update(plan, s, st, idx, g, emb_lr))
 
-        self._emb_updates = [_make_shard_update(s)
-                             for s in range(self.n_emb_shards)]
+        self._emb_updates = [_make_shard_update(s) for s in range(self.n_emb_shards)]
 
         if self.engine == "flat":
             fs = self.flat
@@ -858,38 +884,36 @@ class ThreadedShadowRunner:
             if self.cache is not None:
                 sparse_np = np.asarray(batch["sparse"])
                 pooled = embs.cached_lookup(sparse_np)
-                plane, opt0, _, g_pooled = self._train_dense(
-                    plane, opt0, pooled, batch)
+                plane, opt0, _, g_pooled = self._train_dense(plane, opt0, pooled, batch)
                 for s in range(self.n_emb_shards):
                     embs.cached_update(s, sparse_np, g_pooled, self.emb_lr)
             else:
-                plane, opt0, _, g_pooled = self._train_one(
-                    plane, opt0, embs.tables(), batch)
+                plane, opt0, _, g_pooled = self._train_one(plane, opt0, embs.tables(), batch)
                 for s in range(self.n_emb_shards):
-                    embs.states[s] = self._emb_updates[s](
-                        embs.states[s], batch["sparse"], g_pooled)
+                    embs.states[s] = self._emb_updates[s](embs.states[s], batch["sparse"], g_pooled)
         # the background/foreground sync round is its own jitted program
         # (retraced per live count): warm it at the initial cohort size on
         # throwaway state, or the FIRST measured round pays the trace —
         # inside the controller's detection window
         n_live = max(int(self.membership.active_ids().size), 1)
         if self.engine == "flat":
-            algo_state = self.algo.init_state_flat(plane, self.sync_cfg,
-                                                   self.flat)
+            algo_state = self.algo.init_state_flat(plane, self.sync_cfg, self.flat)
         else:
             algo_state = self.algo.init_state(w0, self.sync_cfg)
         self._shadow_round([plane] * n_live, algo_state)
 
+    # holds-lock: _state_lock
     def _dispatch_on_leave(self, slot: int) -> None:
         """Engine-dispatched algorithm hook for a departing slot. Caller
         holds ``_state_lock``."""
         if self.engine == "flat":
             self.algo_state = self.algo.on_leave_flat(
-                self.algo_state, slot, self.sync_cfg, self.flat)
+                self.algo_state, slot, self.sync_cfg, self.flat
+            )
         else:
-            self.algo_state = self.algo.on_leave(
-                self.algo_state, slot, self.sync_cfg)
+            self.algo_state = self.algo.on_leave(self.algo_state, slot, self.sync_cfg)
 
+    # holds-lock: _state_lock
     def _admit_slot(self, slot: int, reason: str = "") -> None:
         """join -> bootstrap -> activate, the one admission sequence (used
         by the join_at fault path and policy re-admission). Caller holds
@@ -898,6 +922,9 @@ class ThreadedShadowRunner:
         self._bootstrap_join(slot)
         self.membership.activate(slot)
 
+    # holds-lock: _state_lock; lock-blocking: ok — admission must be atomic
+    # with the membership transition; joins are rare and bounded (one stack
+    # + on_join hook over the live cohort)
     def _bootstrap_join(self, i: int) -> None:
         """Bootstrap a joining slot through the algorithm's ``on_join`` hook
         (live mean / PS copy) with a fresh optimizer state. Called between
@@ -916,13 +943,15 @@ class ThreadedShadowRunner:
         if self.engine == "flat":
             buf = jnp.stack([self.w[j] for j in donor_ids] + [self.w[i]])
             buf, self.algo_state = self.algo.on_join_flat(
-                buf, slot, self.algo_state, active, self.sync_cfg, self.flat)
+                buf, slot, self.algo_state, active, self.sync_cfg, self.flat
+            )
             self.w[i] = buf[slot]
         else:
             trees = [self.w[j] for j in donor_ids] + [self.w[i]]
             stack = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
             stack, self.algo_state = self.algo.on_join(
-                stack, slot, self.algo_state, jnp.asarray(active), self.sync_cfg)
+                stack, slot, self.algo_state, jnp.asarray(active), self.sync_cfg
+            )
             self.w[i] = S.tree_slice(stack, slot)
         self.opt_states[i] = self.opt.init(self._w0)
 
@@ -930,51 +959,63 @@ class ThreadedShadowRunner:
         key = jax.random.PRNGKey(self.seed)
         kw, ke = jax.random.split(key)
         w0 = dlrm.init_dense(self.cfg, kw)
-        self._w0 = w0
+        self._w0 = w0  # hogwild-race: ok — written once pre-spawn, read-only after
         if self.engine == "flat":
             plane0 = self.flat.pack(w0)
+            # swap-published: elements — slot planes rebound wholesale
+            # (trainer i publishes w[i]; the sync round republishes the cohort)
             self.w: List[Pytree] = [plane0.copy() for _ in range(self.R)]
-            self.algo_state = self.algo.init_state_flat(
-                plane0, self.sync_cfg, self.flat)
+            # guarded-by: _state_lock
+            self.algo_state = self.algo.init_state_flat(plane0, self.sync_cfg, self.flat)
         else:
+            # swap-published: elements
             self.w = [jax.tree.map(lambda x: x.copy(), w0) for _ in range(self.R)]
-            self.algo_state = self.algo.init_state(w0, self.sync_cfg)
+            self.algo_state = self.algo.init_state(w0, self.sync_cfg)  # guarded-by: _state_lock
+        # swap-published: elements — fresh optimizer state per publish
         self.opt_states = [self.opt.init(w0) for _ in range(self.R)]
         # Per-PS Hogwild states, seed-identical to the packed single table.
-        self.emb = emb_shards.EmbeddingShards.init(self.plan, ke,
-                                                   retry=self.shard_retry,
-                                                   cache=self.cache)
+        # hogwild-race: ok — bound once pre-spawn; rebinding after spawn is a bug
+        self.emb = emb_shards.EmbeddingShards.init(
+            self.plan, ke, retry=self.shard_retry, cache=self.cache
+        )
         self.done = threading.Event()
-        self.examples = 0
-        self.sync_count = 0
+        self.examples = 0  # guarded-by-writes: ex_lock — post-join reads are lock-free
+        self.sync_count = 0  # guarded-by-writes: _sync_lock — post-join reads are lock-free
         # Failure-domain bookkeeping (DESIGN.md §10): captured trainer
         # exceptions (re-raised with slot provenance after join), dead sync-
         # thread incarnations, restart/degradation state, PS chaos tracking.
-        self._trainer_excs: List[Tuple[int, BaseException]] = []
+        self._trainer_excs: List[Tuple[int, BaseException]] = []  # guarded-by-writes: _state_lock
+        # hogwild-race: ok — append-only post-mortem log, atomic under the GIL
         self._sync_excs: List[BaseException] = []
+        # hogwild-race: ok — single logical writer (generation-fenced shadow)
         self._shadow_rounds = 0
-        self._sync_degraded = False
-        self._sync_stalled = False
-        self._sync_crash_t: Optional[float] = None
+        self._sync_degraded = False  # hogwild-race: ok — single store, read post-join
+        self._sync_stalled = False  # hogwild-race: ok — same contract
+        self._sync_crash_t: Optional[float] = None  # hogwild-race: ok — same contract
+        # hogwild-race: ok — restart hook appends; read post-join
         self._sync_count_at_restart: List[int] = []
-        self._ps_injected: set = set()
-        self._tick_count = 0
+        self._ps_injected: set = set()  # hogwild-race: ok — supervision tick owns it
+        self._tick_count = 0  # hogwild-race: ok — supervision tick owns it
         self._sync_lock = threading.Lock()  # shadow/trainer threads both add
         # serializes algo_state transitions: the shadow round vs the rare
         # crash/join handlers (an unguarded read-modify-write could revert a
         # round's PS/consensus update with a stale copy)
         self._state_lock = threading.Lock()
+        # guarded-by-writes: ex_lock — adds share examples' lock; eps reads are lock-free
         self.eps_meter = EPSMeter(window_s=self.eps_window_s)
         # Per-slot meters on each trainer's BUSY clock (compute + injected
         # degradation, excluding barrier waits): under fixed_rate the barrier
         # equalizes everyone's wall-clock rate, so busy-time is the only
         # signal that identifies the straggler (core/scheduler.py).
-        self.slot_eps = SlotEPS(self.R, window_s=self.eps_window_s)
+        self.slot_eps = SlotEPS(self.R, window_s=self.eps_window_s)  # hogwild-race: ok — slot-owned
         # thread-alive flags: the controller must not judge a trainer that
         # merely FINISHED (its rate decays to zero) nor re-admit a ghost
+        # guarded-by-writes: _state_lock — cleared on trainer exit under the
+        # lock so _readmit's alive check is race-free; reads are advisory
         self._alive = [True] * self.R
-        self.iter_count = [0] * self.R
-        trainer_wall = [0.0] * self.R
+        self.iter_count = [0] * self.R  # hogwild-race: ok — slot-owned counters
+        trainer_wall = [0.0] * self.R  # hogwild-race: ok — slot-owned cells, read post-join
+        # hogwild-race: ok — slot-owned lists, merged post-join
         losses: List[List[float]] = [[] for _ in range(self.R)]
         ex_lock = threading.Lock()
         fr = self.sync_cfg.mode == "fixed_rate"
@@ -985,19 +1026,23 @@ class ThreadedShadowRunner:
             # fixed-rate failure mode, restated as fault tolerance) until the
             # straggler policy (if any) demotes it out of the barrier.
             self._fr_cond = threading.Condition()
+            # guarded-by: _fr_cond
             self._fr_registered = [bool(b) for b in self.membership.active_mask()]
             # per-slot arrival flags, not a counter: the barrier fires only
             # when every REGISTERED slot has arrived, so demoting a slot
             # that is already waiting cannot leave a stale arrival that
             # releases the round before the rest of the cohort shows up
-            self._fr_arrived = [False] * self.R
-            self._fr_gen = 0
+            self._fr_arrived = [False] * self.R  # guarded-by: _fr_cond
+            self._fr_gen = 0  # guarded-by: _fr_cond
+            # slot id of the thread elected to run the current round, while
+            # it runs OUTSIDE the condition; None when no round is in flight
+            self._fr_leader: Optional[int] = None  # guarded-by: _fr_cond
         initial_active = set(int(j) for j in self.membership.active_ids())
+        # guarded-by-writes: ex_lock — late joiners poll it lock-free
         self._initial_running = len(initial_active)
 
         def _progress() -> int:
-            return max((self.iter_count[j] for j in initial_active),
-                       default=iters_per_trainer)
+            return max((self.iter_count[j] for j in initial_active), default=iters_per_trainer)
 
         def _add_syncs(n: int) -> None:
             with self._sync_lock:
@@ -1016,7 +1061,7 @@ class ThreadedShadowRunner:
         # the background worker between syncs. A trainer that outruns the
         # horizon pays a counted synchronous promotion, never a stall of
         # anyone else.
-        _peek_memo: Dict[Tuple[int, int], np.ndarray] = {}
+        _peek_memo: Dict[Tuple[int, int], np.ndarray] = {}  # guarded-by: _prefetch_gate
         _prefetch_gate = threading.Lock()
 
         def _prefetch_step() -> None:
@@ -1025,8 +1070,7 @@ class ThreadedShadowRunner:
             if not _prefetch_gate.acquire(blocking=False):
                 return  # another incarnation (restart race) is mid-round
             try:
-                horizons: List[List[np.ndarray]] = [
-                    [] for _ in range(self.n_emb_shards)]
+                horizons: List[List[np.ndarray]] = [[] for _ in range(self.n_emb_shards)]
                 for i in range(self.R):
                     if not self._alive[i]:
                         continue
@@ -1038,18 +1082,18 @@ class ThreadedShadowRunner:
                         idx = _peek_memo.get((i, it))
                         if idx is None:
                             idx = np.asarray(ctr.gen_batch(
-                                self.cfg, self.teacher, self.seed + i, it,
-                                self.B)["sparse"])
+                                self.cfg, self.teacher, self.seed + i, it, self.B
+                            )["sparse"])
                             _peek_memo[(i, it)] = idx
                         for s in range(self.n_emb_shards):
-                            horizons[s].append(
-                                emb_shards._route_np(self.plan, s, idx))
-                for k in [k for k in _peek_memo
-                          if k[1] < self.iter_count[k[0]]]:
+                            horizons[s].append(emb_shards._route_np(self.plan, s, idx))
+                for k in [k for k in _peek_memo if k[1] < self.iter_count[k[0]]]:
                     del _peek_memo[k]  # trained past it: peek no longer queued
                 for s in range(self.n_emb_shards):
                     store = self.emb.stores[s]
                     if store is not None and self.emb.health[s]:
+                        # lock-blocking: ok — the non-blocking gate IS the
+                        # round's mutual exclusion; no thread ever waits on it
                         store.prefetch(horizons[s])
             finally:
                 _prefetch_gate.release()
@@ -1058,17 +1102,30 @@ class ThreadedShadowRunner:
             # The round runs over the LIVE planes only: the matching/mean/PS
             # exchange is drawn over membership.active_ids() — dead slots are
             # simply skipped, training never blocks on them.
+            #
+            # The round itself is kernel dispatch wholesale, so it must not
+            # run under _state_lock (no-blocking-under-lock, DESIGN.md §12):
+            # capture the cohort + algorithm state under the lock, run the
+            # round outside it, then publish only if neither moved in the
+            # meantime. A discarded round is harmless — by the isolation
+            # property the next round simply syncs strictly fresher planes.
             with self._state_lock:
+                epoch = self.membership.epoch
                 ids = self.membership.active_ids()
                 if ids.size == 0:
                     return 0
+                state_in = self.algo_state
                 sub = [self.w[j] for j in ids]
-                self.algo_state, n = self._shadow_round(sub, self.algo_state)
+            new_state, n = self._shadow_round(sub, state_in)
+            with self._state_lock:
+                if (self.membership.epoch != epoch or self.algo_state is not state_in):
+                    return 0  # membership/algo state moved under the round
+                self.algo_state = new_state
                 for k, j in enumerate(ids):
                     self.w[j] = sub[k]
                 return n
 
-        def _fr_ready_locked() -> bool:
+        def _fr_ready_locked() -> bool:  # holds-lock: _fr_cond
             regs = [j for j in range(self.R) if self._fr_registered[j]]
             return bool(regs) and all(self._fr_arrived[j] for j in regs)
 
@@ -1092,6 +1149,7 @@ class ThreadedShadowRunner:
                 self._fr_cond.notify_all()
 
         def _fr_sync_point(i: int) -> None:
+            run_round = False
             with self._fr_cond:
                 if not self._fr_registered[i]:
                     return  # demoted: train on, but never block the cohort
@@ -1099,9 +1157,13 @@ class ThreadedShadowRunner:
                 self._fr_arrived[i] = True
                 # wait until every REGISTERED slot arrived (a crash or
                 # demotion clears a registration and notifies, so the
-                # barrier re-evaluates over the remaining cohort)
-                while (self._fr_gen == gen and self._fr_registered[i]
-                       and not _fr_ready_locked()):
+                # barrier re-evaluates over the remaining cohort) AND no
+                # elected leader is still mid-round for this generation
+                while (
+                    self._fr_gen == gen
+                    and self._fr_registered[i]
+                    and not (_fr_ready_locked() and self._fr_leader is None)
+                ):
                     self._fr_cond.wait(timeout=0.05)
                     # parked at the barrier is intentional waiting, not a
                     # stall — keep the heartbeat fresh
@@ -1118,14 +1180,29 @@ class ThreadedShadowRunner:
                     self._fr_cond.notify_all()
                     return
                 if self._fr_gen == gen:
-                    # every registered slot is here: run the round for all
-                    n = _round_over_active()
-                    if n:
-                        _add_syncs(n)
+                    # every registered slot is here: this thread is elected
+                    # leader and runs the round for the whole cohort. The
+                    # election happens under the condition (single leader),
+                    # the round does NOT (no-blocking-under-lock) — the
+                    # leader flag keeps the cohort parked meanwhile.
+                    self._fr_leader = i
+                    run_round = True
+            if not run_round:
+                return
+            n = 0
+            try:
+                n = _round_over_active()
+            finally:
+                # the generation MUST advance even if the round raised,
+                # or the parked cohort would wait on a dead leader forever
+                with self._fr_cond:
                     for j in range(self.R):
                         self._fr_arrived[j] = False
+                    self._fr_leader = None
                     self._fr_gen += 1
                     self._fr_cond.notify_all()
+            if n:
+                _add_syncs(n)
 
         def _demote(slot: int, reason: str) -> None:
             """Policy demotion: active -> dead ("leave", with provenance).
@@ -1165,8 +1242,11 @@ class ThreadedShadowRunner:
             if policy is None:
                 return
             actions = policy.observe(
-                time.perf_counter(), self.slot_eps.eps_by_slot(),
-                self.membership.active_mask(), list(self._alive))
+                time.perf_counter(),
+                self.slot_eps.eps_by_slot(),
+                self.membership.active_mask(),
+                list(self._alive),
+            )
             for a in actions:
                 if a.kind == "demote":
                     _demote(a.slot, a.reason)
@@ -1185,8 +1265,7 @@ class ThreadedShadowRunner:
                 with self._state_lock:
                     self._trainer_excs.append((i, e))
                     if self.membership.status(i) != "dead":
-                        self.membership.fail(
-                            i, reason=f"exception: {type(e).__name__}: {e}")
+                        self.membership.fail(i, reason=f"exception: {type(e).__name__}: {e}")
                         self._dispatch_on_leave(i)
             finally:
                 # under _state_lock so _readmit's alive check is race-free
@@ -1210,8 +1289,7 @@ class ThreadedShadowRunner:
             if i in self.fault.join_at:
                 target = self.fault.join_at[i]
                 while _progress() < target:
-                    if (_progress() >= iters_per_trainer
-                            or self._initial_running == 0):
+                    if (_progress() >= iters_per_trainer or self._initial_running == 0):
                         return  # cohort finished (or all crashed) before the
                         # join point — never block run() on an unreachable join
                     _beat(f"trainer-{i}")  # waiting to join is not a stall
@@ -1231,8 +1309,7 @@ class ThreadedShadowRunner:
                 if boom is not None and it >= boom:
                     # injected software fault: an actual raise, exercising the
                     # capture -> membership.fail -> re-raise-after-join path
-                    raise RuntimeError(
-                        f"injected trainer fault at iteration {it}")
+                    raise RuntimeError(f"injected trainer fault at iteration {it}")
                 if crash is not None and it >= crash:
                     with self._state_lock:
                         # a slot the policy already demoted is dead in the
@@ -1246,9 +1323,7 @@ class ThreadedShadowRunner:
                 t_busy = time.perf_counter()
                 if sleep_s and (sleep_until is None or it < sleep_until):
                     time.sleep(sleep_s)  # injected degradation
-                batch = ctr.gen_batch(
-                    self.cfg, self.teacher, self.seed + i, it, self.B
-                )
+                batch = ctr.gen_batch(self.cfg, self.teacher, self.seed + i, it, self.B)
                 if self.cache is not None:
                     # hot-tier lookup through the per-PS caches (a miss that
                     # beat the prefetch horizon promotes synchronously —
@@ -1280,11 +1355,9 @@ class ThreadedShadowRunner:
                         # retries with backoff then DROPS the update (counted)
                         # — training never blocks on a dead PS
                         if self.cache is not None:
-                            self.emb.cached_update(s, sparse_np, g_pooled,
-                                                   self.emb_lr)
+                            self.emb.cached_update(s, sparse_np, g_pooled, self.emb_lr)
                         else:
-                            self.emb.try_update(s, self._emb_updates[s],
-                                                batch["sparse"], g_pooled)
+                            self.emb.try_update(s, self._emb_updates[s], batch["sparse"], g_pooled)
                 losses[i].append(float(loss))
                 self.iter_count[i] = it + 1
                 # busy time stops HERE, before any barrier wait: the per-slot
@@ -1318,8 +1391,7 @@ class ThreadedShadowRunner:
                         and r >= self.fault.sync_crash_at
                         and self._sync_crash_t is None):
                     self._sync_crash_t = time.perf_counter()
-                    raise RuntimeError(
-                        f"injected sync-thread crash at round {r}")
+                    raise RuntimeError(f"injected sync-thread crash at round {r}")
                 if (self.fault.sync_stall_at is not None
                         and r >= self.fault.sync_stall_at
                         and not self._sync_stalled):
@@ -1327,8 +1399,7 @@ class ThreadedShadowRunner:
                     # stale heartbeat, fence this incarnation, and restart
                     self._sync_stalled = True
                     t_end = time.perf_counter() + self.fault.sync_stall_s
-                    while (time.perf_counter() < t_end
-                           and not self.done.is_set()):
+                    while (time.perf_counter() < t_end and not self.done.is_set()):
                         time.sleep(0.01)
                     continue  # generation check above retires the zombie
                 _beat("shadow")
@@ -1404,8 +1475,7 @@ class ThreadedShadowRunner:
             for s, at in self.fault.ps_fail_at.items():
                 if s not in self._ps_injected and _progress() >= at:
                     self._ps_injected.add(s)
-                    self.emb.fail_shard(
-                        s, reason=f"injected PS failure at iteration {at}")
+                    self.emb.fail_shard(s, reason=f"injected PS failure at iteration {at}")
                     self.membership.note(
                         "ps_fail", -1,
                         f"embedding shard {s} down: live state lost, serving "
@@ -1413,14 +1483,13 @@ class ThreadedShadowRunner:
             now = time.perf_counter()
             for s in list(self.emb.failed_at):
                 t_fail = self.emb.failed_at.get(s)
-                if (t_fail is not None
-                        and now - t_fail >= self.fault.ps_recover_after_s):
+                if (t_fail is not None and now - t_fail >= self.fault.ps_recover_after_s):
                     self.emb.recover_shard(
-                        s, reason=f"rehydrated from snapshot after "
-                                  f"{now - t_fail:.2f}s down")
+                        s, reason=f"rehydrated from snapshot after " f"{now - t_fail:.2f}s down"
+                    )
                     self.membership.note(
-                        "ps_recover", -1,
-                        f"embedding shard {s} rejoined the routing plan")
+                        "ps_recover", -1, f"embedding shard {s} rejoined the routing plan"
+                    )
             # backup policy clock: membership decisions keep flowing even
             # while the thread that normally evaluates the policy (the
             # shadow thread) is the thing being restarted
@@ -1435,22 +1504,24 @@ class ThreadedShadowRunner:
                 _policy_step()
                 time.sleep(0.02)
 
-        sup = (Supervisor(self.supervisor_config, tick=_supervision_tick)
-               if self.supervise else None)
+        sup = (
+            Supervisor(self.supervisor_config, tick=_supervision_tick) if self.supervise else None
+        )
         self.supervisor = sup
         threads = [threading.Thread(target=trainer, args=(i,)) for i in range(self.R)]
-        shadow_t = None if fr else threading.Thread(target=shadow, args=(0,),
-                                                    daemon=True)
-        monitor_t = (threading.Thread(target=monitor, daemon=True)
-                     if fr and self.policy is not None else None)
+        shadow_t = None if fr else threading.Thread(target=shadow, args=(0,), daemon=True)
+        monitor_t = (
+            threading.Thread(target=monitor, daemon=True)
+            if fr and self.policy is not None
+            else None
+        )
         # register BEFORE starting anything: a fast-finishing thread must
         # never race its own registration (it deregisters itself on exit)
         if sup is not None:
             for i, t in enumerate(threads):
                 sup.register(f"trainer-{i}", t)  # watch-only
             if shadow_t is not None:
-                sup.register("shadow", shadow_t, restart=_restart_shadow,
-                             on_give_up=_sync_give_up)
+                sup.register("shadow", shadow_t, restart=_restart_shadow, on_give_up=_sync_give_up)
             if monitor_t is not None:
                 sup.register("monitor", monitor_t)
         t0 = time.perf_counter()
@@ -1487,15 +1558,14 @@ class ThreadedShadowRunner:
         if monitor_t is not None:
             monitor_t.join(timeout=5.0)
             if monitor_t.is_alive():
-                warnings.warn("monitor thread failed to exit within 5s at "
-                              "shutdown", RuntimeWarning)
+                warnings.warn(
+                    "monitor thread failed to exit within 5s at " "shutdown", RuntimeWarning
+                )
         # rehydrate any still-down PS so the returned packed state is the
         # best surviving copy and a subsequent run starts healthy
         for s in self.emb.down_shards():
             self.emb.recover_shard(s, reason="shutdown rehydrate")
-            self.membership.note(
-                "ps_recover", -1,
-                f"embedding shard {s} rehydrated at shutdown")
+            self.membership.note("ps_recover", -1, f"embedding shard {s} rehydrated at shutdown")
         final_fg_sync = False
         if self._sync_degraded and self.membership.active_ids().size > 0:
             # degradation ladder's last rung: one FOREGROUND sync so the run
@@ -1511,8 +1581,8 @@ class ThreadedShadowRunner:
             raise RuntimeError(
                 f"trainer thread (slot {i}) died with "
                 f"{type(e).__name__}: {e}"
-                + (f"; {others} more trainer exception(s) captured"
-                   if others else "")) from e
+                + (f"; {others} more trainer exception(s) captured" if others else "")
+            ) from e
         total_iters = sum(self.iter_count)
         if self.engine == "flat":
             w_out = [self.flat.unpack(p) for p in self.w]
@@ -1524,8 +1594,7 @@ class ThreadedShadowRunner:
             # SURVIVORS' pace, not an average diluted by the dead trainer
             "eps_window": self.eps_meter.eps,
             "wall_s": wall,
-            "train_loss": [float(np.mean(l[-50:])) if l else float("nan")
-                           for l in losses],
+            "train_loss": [float(np.mean(l[-50:])) if l else float("nan") for l in losses],
             "sync_count": self.sync_count,
             "avg_sync_gap": total_iters / max(self.sync_count, 1),
             "per_trainer_eps": [
@@ -1540,17 +1609,16 @@ class ThreadedShadowRunner:
                 for i in range(self.R)],
             "iter_count": list(self.iter_count),
             "membership_events": list(self.membership.events),
-            "policy_transitions": (list(self.policy.transitions)
-                                   if self.policy is not None else []),
+            "policy_transitions": (
+                list(self.policy.transitions) if self.policy is not None else []
+            ),
             # failure-domain telemetry (DESIGN.md §10)
-            "supervision_events": (list(sup.events) if sup is not None
-                                   else []),
+            "supervision_events": (list(sup.events) if sup is not None else []),
             "shard_events": list(self.emb.events),
             "dropped_updates": list(self.emb.dropped_updates),
             "stale_lookups": list(self.emb.stale_lookups),
             # tiered-cache telemetry (DESIGN.md §11; {} when cache is off)
-            "cache_stats": (self.emb.cache_stats()
-                            if self.cache is not None else {}),
+            "cache_stats": (self.emb.cache_stats() if self.cache is not None else {}),
             "sync_rounds": self._shadow_rounds,
             "sync_restarts": sync_restarts,
             "sync_count_at_restart": list(self._sync_count_at_restart),

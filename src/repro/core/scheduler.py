@@ -70,17 +70,18 @@ class PolicyConfig:
 
     def validate(self) -> "PolicyConfig":
         if not 0.0 < self.eps_floor_frac <= 1.0:
-            raise ValueError(f"eps_floor_frac must be in (0, 1], "
-                             f"got {self.eps_floor_frac}")
+            raise ValueError(f"eps_floor_frac must be in (0, 1], " f"got {self.eps_floor_frac}")
         if self.readmit_frac <= self.eps_floor_frac:
             raise ValueError(
                 f"readmit_frac ({self.readmit_frac}) must be > "
                 f"eps_floor_frac ({self.eps_floor_frac}) — the hysteresis "
                 f"band is what stops a borderline slot from flapping")
         if self.window_s <= 0 or self.probation_s < 0:
-            raise ValueError(f"need window_s > 0 and probation_s >= 0, got "
-                             f"window_s={self.window_s}, "
-                             f"probation_s={self.probation_s}")
+            raise ValueError(
+                f"need window_s > 0 and probation_s >= 0, got "
+                f"window_s={self.window_s}, "
+                f"probation_s={self.probation_s}"
+            )
         if self.min_active < 1:
             raise ValueError(f"min_active must be >= 1, got {self.min_active}")
         return self
@@ -114,35 +115,38 @@ class StragglerPolicy:
     in the threaded runner, the iteration counter in ``StragglerSchedule``).
     """
 
-    def __init__(self, config: Optional[PolicyConfig] = None,
-                 n_slots: int = 0):
+    def __init__(self, config: Optional[PolicyConfig] = None, n_slots: int = 0):
         self.config = (config or PolicyConfig()).validate()
         if n_slots < 1:
             raise ValueError(f"need n_slots >= 1, got {n_slots}")
         self.n_slots = int(n_slots)
+        # guarded-by-writes: _lock — fixed slot list; states move under _lock,
+        # lock-free reads (state/demoted_slots) see a coherent latest state
         self._slots = [_SlotState() for _ in range(self.n_slots)]
         # (now, slot, from_state, to_state) — observability + tests
-        self.transitions: List[Tuple[float, int, str, str]] = []
+        self.transitions: List[Tuple[float, int, str, str]] = []  # guarded-by-writes: _lock
         # observe() may be called from two threads (the shadow round AND the
         # supervisor's tick while the shadow thread is down/restarting)
         self._lock = threading.Lock()
 
     def demoted_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self._slots)
-                if s.state in (DEMOTED, PROBATION)]
+        return [i for i, s in enumerate(self._slots) if s.state in (DEMOTED, PROBATION)]
 
     def state(self, slot: int) -> str:
         return self._slots[slot].state
 
-    def _move(self, now: float, slot: int, to: str) -> None:
+    def _move(self, now: float, slot: int, to: str) -> None:  # holds-lock: _lock
         st = self._slots[slot]
         self.transitions.append((now, slot, st.state, to))
         st.state, st.since = to, now
 
-    def observe(self, now: float, eps_by_slot: Mapping[int, float],
-                active: Sequence[bool],
-                eligible: Optional[Sequence[bool]] = None,
-                ) -> List[PolicyAction]:
+    def observe(
+        self,
+        now: float,
+        eps_by_slot: Mapping[int, float],
+        active: Sequence[bool],
+        eligible: Optional[Sequence[bool]] = None,
+    ) -> List[PolicyAction]:
         """One controller round.
 
         ``active``: the membership mask (who is currently training AND
@@ -154,15 +158,18 @@ class StragglerPolicy:
         with self._lock:
             return self._observe_locked(now, eps_by_slot, active, eligible)
 
-    def _observe_locked(self, now: float, eps_by_slot: Mapping[int, float],
-                        active: Sequence[bool],
-                        eligible: Optional[Sequence[bool]],
-                        ) -> List[PolicyAction]:
+    # holds-lock: _lock
+    def _observe_locked(
+        self,
+        now: float,
+        eps_by_slot: Mapping[int, float],
+        active: Sequence[bool],
+        eligible: Optional[Sequence[bool]],
+    ) -> List[PolicyAction]:
         cfg = self.config
         if eligible is None:
             eligible = [True] * self.n_slots
-        live = [i for i in range(self.n_slots)
-                if i < len(active) and active[i] and eligible[i]]
+        live = [i for i in range(self.n_slots) if i < len(active) and active[i] and eligible[i]]
         # The median's base is the live cohort PLUS our own demoted slots,
         # so probation probes stay comparable to the cohort that demoted
         # them. One straggler among R cannot drag the median: it is the
@@ -213,8 +220,7 @@ class StragglerPolicy:
                 # when no OTHER eligible slot remains, the median degenerates
                 # to this slot's own rate and any pace would pass — hold it
                 # to the median it was demoted against instead
-                ref = (median if any(i != slot for i in base)
-                       else st.ref_eps)
+                ref = (median if any(i != slot for i in base) else st.ref_eps)
                 if ref <= 0.0 or eps < cfg.readmit_frac * ref:
                     if st.state == PROBATION:
                         self._move(now, slot, DEMOTED)
@@ -248,18 +254,20 @@ class StragglerSchedule(MembershipSchedule):
     rather than re-evaluating.
     """
 
-    def __init__(self, policy: StragglerPolicy,
-                 rates: Callable[[int, int], float],
-                 *, start_active: Optional[Sequence[bool]] = None):
+    def __init__(
+        self,
+        policy: StragglerPolicy,
+        rates: Callable[[int, int], float],
+        *,
+        start_active: Optional[Sequence[bool]] = None,
+    ):
         super().__init__([])
         self.policy = policy
         self.rates = rates
         n = policy.n_slots
-        self._active = ([True] * n if start_active is None
-                        else [bool(b) for b in start_active])
+        self._active = ([True] * n if start_active is None else [bool(b) for b in start_active])
         if len(self._active) != n:
-            raise ValueError(f"start_active has {len(self._active)} slots, "
-                             f"policy has {n}")
+            raise ValueError(f"start_active has {len(self._active)} slots, " f"policy has {n}")
         self._emitted: Dict[int, List[Tuple[str, int, str]]] = {}
         self._next_t = 0
 
@@ -272,8 +280,7 @@ class StragglerSchedule(MembershipSchedule):
         while self._next_t <= t:
             tt = self._next_t
             self._next_t += 1
-            eps = {s: float(self.rates(tt, s))
-                   for s in range(self.policy.n_slots)}
+            eps = {s: float(self.rates(tt, s)) for s in range(self.policy.n_slots)}
             out: List[Tuple[str, int, str]] = []
             for a in self.policy.observe(float(tt), eps, list(self._active)):
                 kind = "leave" if a.kind == "demote" else "join"
@@ -284,9 +291,9 @@ class StragglerSchedule(MembershipSchedule):
         return self._emitted.get(t, [])
 
     def __iter__(self):
-        return iter((t, kind, slot)
-                    for t, evs in sorted(self._emitted.items())
-                    for kind, slot, _ in evs)
+        return iter(
+            (t, kind, slot) for t, evs in sorted(self._emitted.items()) for kind, slot, _ in evs
+        )
 
     def __len__(self) -> int:
         return sum(len(v) for v in self._emitted.values())

@@ -29,8 +29,7 @@ Pytree = Any
 def _loss_fn(cfg: ArchConfig, remat_policy: str = "full") -> Callable:
     if cfg.family == "audio":
         return lambda p, b: whisper.loss_fn(p, cfg, b)
-    return lambda p, b: transformer.loss_fn(p, cfg, b, remat=True,
-                                            remat_policy=remat_policy)
+    return lambda p, b: transformer.loss_fn(p, cfg, b, remat=True, remat_policy=remat_policy)
 
 
 def init_params(cfg: ArchConfig, key) -> Pytree:
@@ -43,8 +42,9 @@ def stack_replicas(params: Pytree, n: int) -> Pytree:
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params)
 
 
-def _accum_grads(loss_fn: Callable, params: Pytree, batch: Pytree,
-                 n_microbatches: int, grad_dtype=jnp.float32) -> Tuple[Pytree, jnp.ndarray]:
+def _accum_grads(
+    loss_fn: Callable, params: Pytree, batch: Pytree, n_microbatches: int, grad_dtype=jnp.float32
+) -> Tuple[Pytree, jnp.ndarray]:
     """Gradient accumulation: scan over microbatches (batch dim split K-ways) so
     live activations scale with the microbatch, not the global batch. Grads
     accumulate in ``grad_dtype`` (fp32 default; bf16 is a hillclimb option that
@@ -71,9 +71,14 @@ def _accum_grads(loss_fn: Callable, params: Pytree, batch: Pytree,
     return jax.tree.map(lambda g: g / k, acc_g), acc_l / k
 
 
-def make_train_step(cfg: ArchConfig, opt: Optimizer, mode: str,
-                    n_microbatches: int = 1, grad_dtype: str = "float32",
-                    remat_policy: str = "full") -> Callable:
+def make_train_step(
+    cfg: ArchConfig,
+    opt: Optimizer,
+    mode: str,
+    n_microbatches: int = 1,
+    grad_dtype: str = "float32",
+    remat_policy: str = "full",
+) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, loss).
 
     mode="shadow": leaves carry a leading replica dim; grads stay replica-local.
@@ -123,8 +128,7 @@ def make_prefill_step(cfg: ArchConfig, s_max: int) -> Callable:
     if cfg.family == "audio":
         def prefill(params, batch):
             enc_out = whisper.encode(params, cfg, batch["frames"])
-            hidden = whisper.decode_full(params, cfg, batch["tokens"], enc_out,
-                                         return_hidden=True)
+            hidden = whisper.decode_full(params, cfg, batch["tokens"], enc_out, return_hidden=True)
             logits = hidden[:, -1, :] @ params["embed"]["table"].T
             cache = whisper.init_cache(cfg, batch["tokens"].shape[0], s_max)
             cross = whisper.build_cross_cache(params, cfg, enc_out)
@@ -134,7 +138,10 @@ def make_prefill_step(cfg: ArchConfig, s_max: int) -> Callable:
 
     def prefill(params, batch):
         return transformer.prefill(
-            params, cfg, batch["tokens"], s_max,
+            params,
+            cfg,
+            batch["tokens"],
+            s_max,
             prefix_embeds=batch.get("prefix_embeds"),
         )
 

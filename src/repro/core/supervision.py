@@ -66,18 +66,19 @@ class SupervisorConfig:
 
     def validate(self) -> "SupervisorConfig":
         if self.heartbeat_deadline_s <= 0:
-            raise ValueError(f"heartbeat_deadline_s must be > 0, got "
-                             f"{self.heartbeat_deadline_s}")
+            raise ValueError(
+                f"heartbeat_deadline_s must be > 0, got " f"{self.heartbeat_deadline_s}"
+            )
         if self.check_interval_s <= 0:
-            raise ValueError(f"check_interval_s must be > 0, got "
-                             f"{self.check_interval_s}")
+            raise ValueError(f"check_interval_s must be > 0, got " f"{self.check_interval_s}")
         if self.max_restarts < 0:
-            raise ValueError(f"max_restarts must be >= 0, got "
-                             f"{self.max_restarts}")
+            raise ValueError(f"max_restarts must be >= 0, got " f"{self.max_restarts}")
         if self.backoff_s < 0 or self.backoff_factor < 1.0:
-            raise ValueError(f"need backoff_s >= 0 and backoff_factor >= 1, "
-                             f"got backoff_s={self.backoff_s}, "
-                             f"backoff_factor={self.backoff_factor}")
+            raise ValueError(
+                f"need backoff_s >= 0 and backoff_factor >= 1, "
+                f"got backoff_s={self.backoff_s}, "
+                f"backoff_factor={self.backoff_factor}"
+            )
         return self
 
 
@@ -125,22 +126,35 @@ class Supervisor:
     lock (they start threads / take runner locks of their own).
     """
 
-    def __init__(self, config: Optional[SupervisorConfig] = None,
-                 *, clock: Callable[[], float] = time.perf_counter,
-                 tick: Optional[Callable[[], None]] = None):
+    def __init__(
+        self,
+        config: Optional[SupervisorConfig] = None,
+        *,
+        clock: Callable[[], float] = time.perf_counter,
+        tick: Optional[Callable[[], None]] = None,
+    ):
         self.config = (config or SupervisorConfig()).validate()
         self.clock = clock
         self.tick = tick
         self._lock = threading.Lock()
+        # guarded-by-writes: _lock — registry mutates under _lock; beat() and
+        # the name-keyed getters do lock-free dict reads (never iterate)
         self._sup: Dict[str, _Supervised] = {}
         self._stop = threading.Event()
+        # hogwild-race: ok — start/stop are caller-serialized lifecycle methods
         self._thread: Optional[threading.Thread] = None
+        # hogwild-race: ok — the single watch thread appends; readers snapshot post-run
         self.events: List[SupervisionEvent] = []
 
     # -- registry ------------------------------------------------------------
-    def register(self, name: str, thread: threading.Thread, *,
-                 restart: Optional[Callable[[], threading.Thread]] = None,
-                 on_give_up: Optional[Callable[[str], None]] = None) -> None:
+    def register(
+        self,
+        name: str,
+        thread: threading.Thread,
+        *,
+        restart: Optional[Callable[[], threading.Thread]] = None,
+        on_give_up: Optional[Callable[[str], None]] = None,
+    ) -> None:
         """Supervise ``thread`` under ``name``. ``restart`` (if given) must
         return a NEW started thread continuing the same work; ``on_give_up``
         fires exactly once when the restart budget is exhausted (or, for
@@ -149,8 +163,8 @@ class Supervisor:
             if name in self._sup:
                 raise ValueError(f"{name!r} is already supervised")
             self._sup[name] = _Supervised(
-                thread=thread, restart=restart, on_give_up=on_give_up,
-                last_beat=self.clock())
+                thread=thread, restart=restart, on_give_up=on_give_up, last_beat=self.clock()
+            )
 
     def beat(self, name: str) -> None:
         """Record liveness progress for ``name`` (cheap; called per round /
@@ -194,8 +208,7 @@ class Supervisor:
         if self._thread is not None:
             raise RuntimeError("supervisor already started")
         self._stop.clear()
-        self._thread = threading.Thread(
-            target=self._watch_loop, name="supervisor", daemon=True)
+        self._thread = threading.Thread(target=self._watch_loop, name="supervisor", daemon=True)
         self._thread.start()
 
     def stop(self, timeout: float = 5.0) -> None:
@@ -250,8 +263,7 @@ class Supervisor:
                         pass
                 # pending failure: restart after backoff, or escalate
                 if s.restart is not None and s.restarts < cfg.max_restarts:
-                    due = s.failed_at + cfg.backoff_s * (
-                        cfg.backoff_factor ** s.restarts)
+                    due = s.failed_at + cfg.backoff_s * (cfg.backoff_factor ** s.restarts)
                     if now >= due:
                         s.restarts += 1
                         s.generation += 1  # fence out a stalled zombie
@@ -266,9 +278,11 @@ class Supervisor:
                 s.failed_at = None
                 s.last_beat = self.clock()
             ev = SupervisionEvent(
-                "restart", name, self.clock(),
-                f"attempt {s.restarts}/{cfg.max_restarts} after "
-                f"{s.failure_reason}")
+                "restart",
+                name,
+                self.clock(),
+                f"attempt {s.restarts}/{cfg.max_restarts} after " f"{s.failure_reason}",
+            )
             self.events.append(ev)
             emitted.append(ev)
         for name, s in to_give_up:

@@ -25,9 +25,10 @@ Pytree = Any
 def lerp(a: Pytree, b: Pytree, alpha: float) -> Pytree:
     """(1-alpha) * a + alpha * b, elementwise over the pytree, in fp32."""
     return jax.tree.map(
-        lambda x, y: ((1.0 - alpha) * x.astype(jnp.float32)
-                      + alpha * y.astype(jnp.float32)).astype(x.dtype),
-        a, b,
+        lambda x,
+        y: ((1.0 - alpha) * x.astype(jnp.float32) + alpha * y.astype(jnp.float32)).astype(x.dtype),
+        a,
+        b,
     )
 
 
@@ -46,9 +47,7 @@ def masked_replica_mean(stack: Pytree, active: jnp.ndarray) -> Pytree:
     live count). ``active``: (R,) bool."""
     cnt = jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
     return jax.tree.map(
-        lambda x: jnp.sum(
-            jnp.where(_bc_mask(active, x), x.astype(jnp.float32), 0.0), axis=0
-        ) / cnt,
+        lambda x: jnp.sum(jnp.where(_bc_mask(active, x), x.astype(jnp.float32), 0.0), axis=0) / cnt,
         stack,
     )
 
@@ -76,9 +75,13 @@ def easgd_pair_update(w_ps: Pytree, w_i: Pytree, alpha: float) -> Tuple[Pytree, 
     return new_ps, new_wi
 
 
-def easgd_round(w_stack: Pytree, w_ps: Pytree, alpha: float,
-                mask: Optional[jnp.ndarray] = None,
-                snapshot: Optional[Pytree] = None) -> Tuple[Pytree, Pytree]:
+def easgd_round(
+    w_stack: Pytree,
+    w_ps: Pytree,
+    alpha: float,
+    mask: Optional[jnp.ndarray] = None,
+    snapshot: Optional[Pytree] = None,
+) -> Tuple[Pytree, Pytree]:
     """Sequential EASGD over all replicas (shadow threads reach the PS one at a
     time). ``mask[i]`` selects which replicas' shadow clocks fired this round.
     ``snapshot`` (if given) is the replica stack at sync-launch time: the PS moves
@@ -93,8 +96,7 @@ def easgd_round(w_stack: Pytree, w_ps: Pytree, alpha: float,
         new_ps = lerp(w_ps, w_i_snap, alpha)
         new_wi = lerp(w_i, new_ps, alpha)
         keep = lambda new, old: jnp.where(m, new, old)
-        return (jax.tree.map(keep, new_ps, w_ps),
-                jax.tree.map(keep, new_wi, w_i))
+        return (jax.tree.map(keep, new_ps, w_ps), jax.tree.map(keep, new_wi, w_i))
 
     w_ps, new_stack = jax.lax.scan(body, w_ps, (w_stack, snap, mask))
     return new_stack, w_ps
@@ -104,10 +106,13 @@ def easgd_round(w_stack: Pytree, w_ps: Pytree, alpha: float,
 # Model Averaging (decentralized; Algorithm 3)
 # ---------------------------------------------------------------------------
 
-def ma_round(w_stack: Pytree, alpha: float,
-             snapshot: Optional[Pytree] = None,
-             active: Optional[jnp.ndarray] = None,
-             land_active: Optional[jnp.ndarray] = None) -> Pytree:
+def ma_round(
+    w_stack: Pytree,
+    alpha: float,
+    snapshot: Optional[Pytree] = None,
+    active: Optional[jnp.ndarray] = None,
+    land_active: Optional[jnp.ndarray] = None,
+) -> Pytree:
     """AllReduce-average the replicas, then elastically pull each replica toward
     the average. ``snapshot`` (if given) is the replica stack at sync-launch time —
     the average is computed from it while the pull-back lands on the current stack,
@@ -130,9 +135,7 @@ def ma_round(w_stack: Pytree, alpha: float,
         land_active = active
     if land_active is None:
         return new
-    return jax.tree.map(
-        lambda n, x: jnp.where(_bc_mask(land_active, x), n, x), new, w_stack
-    )
+    return jax.tree.map(lambda n, x: jnp.where(_bc_mask(land_active, x), n, x), new, w_stack)
 
 
 # ---------------------------------------------------------------------------
@@ -152,9 +155,7 @@ class BMUFState:
         )
 
 
-jax.tree_util.register_dataclass(
-    BMUFState, data_fields=["w_global", "velocity"], meta_fields=[]
-)
+jax.tree_util.register_dataclass(BMUFState, data_fields=["w_global", "velocity"], meta_fields=[])
 
 
 def bmuf_round(
@@ -185,28 +186,21 @@ def bmuf_round(
     expose the paper's variant; see EXPERIMENTS.md §Paper-validation notes."""
     R = jax.tree.leaves(w_stack)[0].shape[0]
     src = snapshot if snapshot is not None else w_stack
-    w_copy = (replica_mean(src) if active is None
-              else masked_replica_mean(src, active))
+    w_copy = (replica_mean(src) if active is None else masked_replica_mean(src, active))
     desc = jax.tree.map(lambda c, g: c - g, w_copy, state.w_global)
     scale = float(R) if step_scale_n else 1.0
-    vel = jax.tree.map(
-        lambda v, d: block_momentum * v + eta * scale * d, state.velocity, desc
-    )
+    vel = jax.tree.map(lambda v, d: block_momentum * v + eta * scale * d, state.velocity, desc)
     w_global = jax.tree.map(lambda g, v: g + v, state.w_global, vel)
     if nesterov:
         look = jax.tree.map(lambda g, v: g + block_momentum * v, w_global, vel)
     else:
         look = w_global
-    bcast = jax.tree.map(
-        lambda g, x: jnp.broadcast_to(g.astype(x.dtype), x.shape), look, w_stack
-    )
+    bcast = jax.tree.map(lambda g, x: jnp.broadcast_to(g.astype(x.dtype), x.shape), look, w_stack)
     new = lerp(w_stack, bcast, alpha)
     if land_active is None:
         land_active = active
     if land_active is not None:
-        new = jax.tree.map(
-            lambda n, x: jnp.where(_bc_mask(land_active, x), n, x), new, w_stack
-        )
+        new = jax.tree.map(lambda n, x: jnp.where(_bc_mask(land_active, x), n, x), new, w_stack)
     return new, BMUFState(w_global=w_global, velocity=vel)
 
 
@@ -242,22 +236,23 @@ class SyncConfig:
     def validate(self) -> "SyncConfig":
         from repro.core import algorithms  # deferred: algorithms imports us
         if self.algo not in algorithms.names():
-            raise ValueError(f"unknown sync algo: {self.algo!r}; "
-                             f"registered: {list(algorithms.names())}")
+            raise ValueError(
+                f"unknown sync algo: {self.algo!r}; " f"registered: {list(algorithms.names())}"
+            )
         if self.engine not in ("flat", "pytree"):
             raise ValueError(f"unknown sync engine: {self.engine!r}")
         if self.mode not in ("shadow", "fixed_rate"):
             raise ValueError(f"unknown sync mode: {self.mode!r}")
         if self.gap < 1:
             raise ValueError(
-                f"gap must be >= 1 (iterations between shadow-clock fires), "
-                f"got {self.gap}")
+                f"gap must be >= 1 (iterations between shadow-clock fires), " f"got {self.gap}"
+            )
         if self.delay < 0:
             raise ValueError(
                 f"delay must be >= 0 (in-flight iterations of a background "
                 f"sync; 0 lands same-iteration), got {self.delay}")
         if not 0.0 <= self.alpha <= 1.0:
             raise ValueError(
-                f"alpha must be in [0, 1] (elastic interpolation weight), "
-                f"got {self.alpha}")
+                f"alpha must be in [0, 1] (elastic interpolation weight), " f"got {self.alpha}"
+            )
         return self

@@ -165,6 +165,8 @@ class CachedStore:
         self.hot_budget = H
         # Host-resident cold store: canonical for cold rows; hot rows'
         # entries go stale until eviction writes them back.
+        # guarded-by: _lock — migrations write back evicted rows under _lock;
+        # merged() copies under it too, so readers never see a torn writeback
         self.cold: Dict[str, np.ndarray] = {
             k: np.array(state[k], dtype=np.float32, copy=True) for k in state
         }
@@ -176,10 +178,14 @@ class CachedStore:
         hot_row[:min(H, self.n_rows)] = np.arange(min(H, self.n_rows),
                                                   dtype=np.int32)
         hot = {k: jnp.asarray(self.cold[k][:H]) for k in self.cold}
+        # swap-published; guarded-by-writes: _lock — every placement change
+        # lands as a fresh immutable TierState; trainers read lock-free
         self._st = TierState(hot, Routing(slot, hot_row, 0))
+        # hogwild-race: ok — LFU ranking signal; lost increments shift ranks only
         self.freq = np.zeros(self.n_rows, np.float64)
+        # swap-published; hogwild-race: ok — prefetcher rebinds a fresh mask
         self._pinned = np.zeros(self.n_rows, bool)  # prefetch-horizon rows
-        self.stats = CacheStats()
+        self.stats = CacheStats()  # hogwild-race: ok — diagnostic counters
         self._lock = threading.Lock()
         self._row_bytes = 4 * self.dim * len(self.cold)  # f32 table + acc
 
@@ -197,16 +203,22 @@ class CachedStore:
         live hot tier. Bitwise-exact: hot rows come straight off the device,
         cold rows were written back exactly on eviction. This is what
         snapshots, checkpoints, and ``to_packed`` consume: the cache is
-        invisible above this line."""
+        invisible above this line.
+
+        The cold copy and the TierState capture happen atomically under the
+        lock (migrations mutate ``cold`` under it); the device gathers run
+        OUTSIDE it (no-blocking-under-lock, DESIGN.md §12) against the
+        captured immutable TierState — the result is an exact snapshot as
+        of capture time."""
         with self._lock:
             st = self._st
             out = {k: self.cold[k].copy() for k in self.cold}
-            occ = st.routing.hot_row >= 0
-            rows = st.routing.hot_row[occ]
-            for k in out:
-                out[k][rows] = np.asarray(
-                    jnp.take(st.hot[k], jnp.asarray(np.flatnonzero(occ)),
-                             axis=0))
+        occ = st.routing.hot_row >= 0
+        rows = st.routing.hot_row[occ]
+        for k in out:
+            out[k][rows] = np.asarray(
+                jnp.take(st.hot[k], jnp.asarray(np.flatnonzero(occ)),
+                         axis=0))
         return {k: jnp.asarray(v) for k, v in out.items()}
 
     def check_invariants(self) -> None:
@@ -316,6 +328,8 @@ class CachedStore:
         return _Plan(need, dst.astype(np.int32), evict_rows, evict_slots,
                      free[:len(need)])
 
+    # holds-lock: _lock; lock-blocking: ok — bounded row scatters; doing them
+    # optimistically would break eviction-writeback-before-slot-reuse exactness
     def _apply_migration(self, plan: _Plan) -> TierState:
         """Apply a staged migration under the lock against the CURRENT state
         (which may have advanced past the one the plan was computed from —

@@ -249,19 +249,25 @@ class EmbeddingShards:
         self.retry = (retry or ShardRetryPolicy()).validate()
         self.cache = cache.validate() if cache is not None else None
         n = plan.n_shards
-        self.health: List[bool] = [True] * n
+        self.health: List[bool] = [True] * n  # guarded-by-writes: _lock
         # snapshots are reference grabs of the immutable per-shard states —
         # O(1), taken by the background worker (see snapshot_all). In cached
         # mode a snapshot instead drains the hot tier (merged(), O(hot_rows)).
+        # swap-published: elements; guarded-by-writes: _lock
         self.snapshots: List[Params] = list(states)
-        self.snapshot_t: List[float] = [time.perf_counter()] * n
+        self.snapshot_t: List[float] = [time.perf_counter()] * n  # guarded-by-writes: _lock
+        # hogwild-race: ok — lossy-by-design failure counters (under-count only)
         self.dropped_updates: List[int] = [0] * n
-        self.stale_lookups: List[int] = [0] * n
-        self.events: List[ShardEvent] = []
-        self.failed_at: Dict[int, float] = {}  # shard -> perf_counter of fail
+        self.stale_lookups: List[int] = [0] * n  # hogwild-race: ok — same lossy contract
+        self.events: List[ShardEvent] = []  # guarded-by-writes: _lock
+        self.failed_at: Dict[int, float] = {}  # guarded-by-writes: _lock — shard -> fail time
         self._lock = threading.Lock()
         if self.cache is None:
+            # swap-published: elements; hogwild-race: ok — lock-free Hogwild
+            # element swap with post-dispatch health re-check (try_update)
             self.states: List[Optional[Params]] = list(states)
+            # swap-published: elements; guarded-by-writes: _lock — whole-store
+            # incarnations swapped on fail/recover; lock-free reads
             self.stores: List[Optional[CachedStore]] = [None] * n
         else:
             # The stores OWN the live values; states[] stays None so any
@@ -410,14 +416,25 @@ class EmbeddingShards:
         instead of an O(1) reference grab; still the background worker's
         bill, never a trainer's."""
         now = time.perf_counter()
+        if self.cache is not None:
+            # Capture the live store refs under the lock; fold hot+cold
+            # OUTSIDE it (merged() is device work — no-blocking-under-lock,
+            # DESIGN.md §12); publish each snapshot only if the same store
+            # incarnation is still live (a fail/recover mid-merge would
+            # make it a snapshot of a dead incarnation).
+            with self._lock:
+                live = [(s, self.stores[s])
+                        for s in range(self.plan.n_shards)
+                        if self.health[s] and self.stores[s] is not None]
+            for s, store in live:
+                snap = store.merged()
+                with self._lock:
+                    if self.health[s] and self.stores[s] is store:
+                        self.snapshots[s] = snap
+                        self.snapshot_t[s] = now
+            return
         with self._lock:
             for s in range(self.plan.n_shards):
-                if self.cache is not None:
-                    store = self.stores[s]
-                    if self.health[s] and store is not None:
-                        self.snapshots[s] = store.merged()
-                        self.snapshot_t[s] = now
-                    continue
                 st = self.states[s]
                 if self.health[s] and st is not None:
                     self.snapshots[s] = st
@@ -444,11 +461,20 @@ class EmbeddingShards:
         with self._lock:
             if self.health[s]:
                 return  # already up
+            snap = self.snapshots[s]
+        store = None
+        if self.cache is not None:
+            # rebuild the tiered store from the canonical snapshot — a
+            # background cache-warm migration (placement restarts from the
+            # default; the prefetcher re-derives it within a round). The
+            # build moves whole tables host->device, so it runs OUTSIDE
+            # the lock; a down shard's snapshot cannot advance meanwhile.
+            store = CachedStore(snap, self.cache)
+        with self._lock:
+            if self.health[s]:
+                return  # a concurrent recovery beat us to it
             if self.cache is not None:
-                # rebuild the tiered store from the canonical snapshot — a
-                # background cache-warm migration (placement restarts from
-                # the default; the prefetcher re-derives it within a round)
-                self.stores[s] = CachedStore(self.snapshots[s], self.cache)
+                self.stores[s] = store
             else:
                 self.states[s] = self.snapshots[s]
             self.health[s] = True

@@ -1,0 +1,345 @@
+"""Runtime lockdep harness: cycle detection, blocking-under-lock, and the
+PR 5 demote-mid-wait barrier regression (DESIGN.md §12).
+
+The point of the stall detector is proven the honest way: the PRE-fix
+fixed_rate barrier (an arrival COUNTER, the exact shape the PR 5 bug had)
+is replayed under the harness and the harness reports the wedged cohort;
+the per-slot-flag barrier that replaced it runs the same schedule clean.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.analysis import lockdep
+from repro.analysis.lockdep import (
+    BlockedUnderLockError,
+    DepCondition,
+    DepLock,
+    LockGraph,
+    LockOrderError,
+    instrument,
+)
+
+pytestmark = pytest.mark.timeout(120)
+
+
+# ---------------------------------------------------------------------------
+# Lock-order cycles
+# ---------------------------------------------------------------------------
+class TestLockOrder:
+    def test_inversion_detected_without_deadlock(self):
+        """A->B then B->A raises in ONE thread, no hung interleaving needed."""
+        g = LockGraph()
+        a = DepLock(g, site="a")
+        b = DepLock(g, site="b")
+        with a:
+            with b:
+                pass
+        with pytest.raises(LockOrderError, match="cycle"):
+            with b:
+                with a:
+                    pass
+        assert g.violations
+
+    def test_consistent_order_is_clean(self):
+        g = LockGraph()
+        a = DepLock(g, site="a")
+        b = DepLock(g, site="b")
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+        g.assert_clean()
+        g.assert_acyclic()
+
+    def test_cross_thread_inversion(self):
+        """t1 takes A->B, the main thread B->A: the cycle closes across
+        threads even though no actual deadlock occurs (the edges are what
+        matter, not the unlucky interleaving)."""
+        g = LockGraph()
+        a = DepLock(g, site="a")
+        b = DepLock(g, site="b")
+
+        def t1():
+            with a:
+                with b:
+                    pass
+
+        th = threading.Thread(target=t1)
+        th.start()
+        th.join()
+        with pytest.raises(LockOrderError):
+            with b:
+                with a:
+                    pass
+
+    def test_same_creation_site_instances_collapse(self):
+        """Per-instance locks of N stores share a creation site, so an
+        inversion between two *instances* is still a cycle."""
+        g = LockGraph()
+
+        class Store:
+            def __init__(self):
+                self.lock = DepLock(g, site="store.py:1")
+
+        s1, s2 = Store(), Store()
+        other = DepLock(g, site="other")
+        with s1.lock:
+            with other:
+                pass
+        with pytest.raises(LockOrderError):
+            with other:
+                with s2.lock:
+                    pass
+
+
+# ---------------------------------------------------------------------------
+# Blocking under a held lock
+# ---------------------------------------------------------------------------
+class TestBlockedUnderLock:
+    def test_sleep_under_lock_raises(self):
+        with instrument() as g:
+            lk = threading.Lock()
+            with pytest.raises(BlockedUnderLockError):
+                with lk:
+                    time.sleep(0.01)
+        assert g.violations
+
+    def test_join_under_lock_raises(self):
+        with instrument() as g:
+            lk = threading.Lock()
+            th = threading.Thread(target=lambda: None)
+            th.start()
+            with pytest.raises(BlockedUnderLockError):
+                with lk:
+                    th.join()
+            th.join()
+        g2 = LockGraph()  # the join-violation is recorded on g
+        assert g.violations and not g2.violations
+
+    def test_sleep_outside_lock_is_fine(self):
+        with instrument() as g:
+            lk = threading.Lock()
+            with lk:
+                pass
+            time.sleep(0.001)
+        g.assert_clean()
+
+    def test_wait_on_held_condition_is_legal(self):
+        """Condition.wait releases its own lock — never a blocking call."""
+        with instrument() as g:
+            cond = threading.Condition()
+            with cond:
+                cond.wait(timeout=0.01)
+        g.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# The PR 5 regression: demote-mid-wait under a fixed_rate barrier
+# ---------------------------------------------------------------------------
+class _BuggyCounterBarrier:
+    """The PRE-PR5 barrier shape: a party count + arrival counter. Readiness
+    is evaluated only on ARRIVAL, so shrinking the cohort while waiters are
+    parked (a policy demotion of a straggler mid-round) leaves everyone
+    waiting on a predicate nothing will ever satisfy."""
+
+    def __init__(self, parties: int):
+        self.cond = threading.Condition()  # DepCondition under instrument()
+        self.parties = parties
+        self.arrived = 0
+        self.gen = 0
+
+    def remove_party(self) -> None:
+        with self.cond:
+            self.parties -= 1
+            self.cond.notify_all()  # wakes waiters; they re-check gen only
+
+    def wait(self) -> None:
+        with self.cond:
+            gen = self.gen
+            self.arrived += 1
+            if self.arrived >= self.parties:
+                self.arrived = 0
+                self.gen += 1
+                self.cond.notify_all()
+                return
+            while self.gen == gen:
+                self.cond.wait(timeout=0.05)
+
+
+class _FixedFlagBarrier:
+    """The shape that replaced it (core/runners.py _fr_sync_point):
+    per-slot registration + arrival flags, readiness re-evaluated by every
+    waiter on every wake over the slots that REMAIN registered."""
+
+    def __init__(self, n: int):
+        self.cond = threading.Condition()
+        self.registered = [True] * n
+        self.arrived = [False] * n
+        self.gen = 0
+
+    def _ready(self) -> bool:
+        regs = [j for j, r in enumerate(self.registered) if r]
+        return bool(regs) and all(self.arrived[j] for j in regs)
+
+    def deregister(self, i: int) -> None:
+        with self.cond:
+            self.registered[i] = False
+            self.cond.notify_all()
+
+    def wait(self, i: int) -> None:
+        with self.cond:
+            if not self.registered[i]:
+                return
+            gen = self.gen
+            self.arrived[i] = True
+            while self.gen == gen and self.registered[i] and not self._ready():
+                self.cond.wait(timeout=0.05)
+            if self.gen == gen and not self.registered[i]:
+                self.arrived[i] = False
+                self.cond.notify_all()
+                return
+            if self.gen == gen:
+                for j in range(len(self.arrived)):
+                    self.arrived[j] = False
+                self.gen += 1
+                self.cond.notify_all()
+
+
+class TestDemoteMidWaitRegression:
+    def test_harness_catches_the_original_bug(self):
+        """Replay: 3 registered slots, 2 arrive and park, the 3rd is demoted
+        before arriving. arrived(2) >= parties(2) holds from that moment on,
+        but the counter barrier only checks on arrival — the cohort is
+        wedged. stalled() must see it despite the 50 ms timed re-waits."""
+        with instrument(patch_blocking=False) as g:
+            barrier = _BuggyCounterBarrier(parties=3)
+            threads = [
+                threading.Thread(target=barrier.wait, name=f"trainer-{i}")
+                for i in range(2)
+            ]
+            for t in threads:
+                t.start()
+            time.sleep(0.3)  # both waiters parked
+            barrier.remove_party()  # the PR 5 demotion, mid-wait
+            time.sleep(0.9)
+            stuck = g.stalled(min_seconds=0.8)
+            names = {name for name, _, _ in stuck}
+            assert {"trainer-0", "trainer-1"} <= names, (
+                f"harness missed the wedged cohort: {stuck}")
+            # un-wedge so the test itself exits cleanly
+            with barrier.cond:
+                barrier.gen += 1
+                barrier.cond.notify_all()
+            for t in threads:
+                t.join(timeout=5)
+            assert not any(t.is_alive() for t in threads)
+        # after release the wait epochs are gone — no residual stall
+        assert g.stalled(min_seconds=0.1) == []
+
+    def test_fixed_barrier_survives_the_same_schedule(self):
+        """The per-slot-flag barrier re-evaluates readiness on every wake:
+        the identical demote-mid-wait schedule completes, and the harness
+        reports nothing."""
+        with instrument(patch_blocking=False) as g:
+            barrier = _FixedFlagBarrier(3)
+            threads = [
+                threading.Thread(target=barrier.wait, args=(i,),
+                                 name=f"trainer-{i}")
+                for i in range(2)
+            ]
+            for t in threads:
+                t.start()
+            time.sleep(0.3)
+            barrier.deregister(2)  # same mid-wait demotion
+            for t in threads:
+                t.join(timeout=5)
+            assert not any(t.is_alive() for t in threads)
+            assert g.stalled(min_seconds=0.8) == []
+        g.assert_clean()
+
+
+# ---------------------------------------------------------------------------
+# The real stack under the harness
+# ---------------------------------------------------------------------------
+class TestInstrumentedStack:
+    def test_threaded_runner_smoke_under_lockdep(self):
+        """A small fixed_rate run with the full lock set (_fr_cond,
+        _state_lock, _sync_lock, ex_lock, shard/cache locks) instrumented:
+        no ordering cycle, no blocking-under-lock, no stalls left behind."""
+        from repro import optim
+        from repro.configs import dlrm_ctr
+        from repro.core.runners import ThreadedShadowRunner
+        from repro.core.sync import SyncConfig
+
+        with instrument(patch_blocking=False) as g:
+            r = ThreadedShadowRunner(
+                dlrm_ctr.tiny(), SyncConfig(algo="easgd", alpha=0.5,
+                                            mode="fixed_rate", gap=5),
+                n_trainers=2, batch_size=32,
+                optimizer=optim.adagrad(0.02), sync_sleep_s=0.002)
+            out = r.run(15)
+        assert out["sync_count"] > 0
+        g.assert_clean()
+        g.assert_acyclic()
+        assert g.stalled(min_seconds=0.1) == []
+
+    def test_instrument_restores_primitives(self):
+        orig_lock, orig_cond = threading.Lock, threading.Condition
+        with instrument():
+            assert threading.Lock is not orig_lock
+        assert threading.Lock is orig_lock
+        assert threading.Condition is orig_cond
+
+    def test_nested_real_primitives_stay_real(self):
+        """Event/Queue internals must not be instrumented (recursion +
+        graph noise) — an Event constructed under instrument() works and
+        contributes no sites."""
+        with instrument() as g:
+            ev = threading.Event()
+            ev.set()
+            assert ev.wait(timeout=0.1)
+        assert g.sites == set()
+
+
+class TestLockdepSelfConsistency:
+    def test_dep_lock_is_context_manager_and_lockable(self):
+        g = LockGraph()
+        lk = DepLock(g, site="x")
+        assert not lk.locked()
+        with lk:
+            assert lk.locked()
+        assert not lk.locked()
+
+    def test_dep_condition_notify_roundtrip(self):
+        g = LockGraph()
+        cond = DepCondition(graph=g)
+        hits = []
+
+        def waiter():
+            with cond:
+                while not hits:
+                    cond.wait(timeout=0.05)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.1)
+        with cond:
+            hits.append(1)
+            cond.notify_all()
+        t.join(timeout=5)
+        assert not t.is_alive()
+        g.assert_clean()
+
+    def test_nonblocking_acquire_failure_not_counted_blocked(self):
+        g = LockGraph()
+        lk = DepLock(g, site="gate")
+        with lk:
+            # second non-blocking acquire fails; must not linger as blocked
+            assert lk.acquire(blocking=False) is False
+        assert g.snapshot_blocked() == []
+
+    def test_lockdep_module_exports(self):
+        for name in lockdep.__all__:
+            assert hasattr(lockdep, name)

@@ -9,6 +9,7 @@ Prints human-readable tables followed by a ``name,us_per_call,derived`` CSV
   PYTHONPATH=src python -m benchmarks.run --only emb --json   # + BENCH_emb.json
   PYTHONPATH=src python -m benchmarks.run --only elastic --json  # + BENCH_elastic.json
   PYTHONPATH=src python -m benchmarks.run --only cache --json    # + BENCH_cache.json
+  PYTHONPATH=src python -m benchmarks.run --only pipeline --json # + BENCH_pipeline.json
 """
 from __future__ import annotations
 
@@ -18,13 +19,14 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|sync|emb|elastic|cache|roofline")
+                    help="substring filter: table1|table2|fig5|fig6|fig7|fig8|kernel|sync|emb|elastic|cache|pipeline|roofline")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_sync.json / BENCH_emb.json / BENCH_elastic.json to the cwd")
     args = ap.parse_args()
 
     from benchmarks.cache_bench import bench_cache
     from benchmarks.elastic_bench import bench_elastic
+    from benchmarks.pipeline_bench import bench_pipeline
     from benchmarks.emb_bench import bench_emb
     from benchmarks.kernel_bench import bench_kernels
     from benchmarks.paper_tables import (
@@ -50,6 +52,8 @@ def main() -> None:
             json_path="BENCH_elastic.json" if args.json else None)),
         ("cache", lambda: bench_cache(
             json_path="BENCH_cache.json" if args.json else None)),
+        ("pipeline", lambda: bench_pipeline(
+            json_path="BENCH_pipeline.json" if args.json else None)),
         ("roofline", bench_roofline),
     ]
     rows = []

@@ -232,6 +232,8 @@ SHARED_CLASSES: Dict[str, str] = {
     "Supervisor": "heartbeats arrive from every supervised thread",
     "EmbeddingShards": "PS shard table: trainers look up, shadow updates, supervisor heals",
     "CachedStore": "two-tier store: trainer lookups race the prefetcher's migrations",
+    "StepPipeline": "staged-lookup double buffer: the owning trainer stages/consumes, "
+    "the stager thread publishes entries via per-entry Events",
 }
 
 # One-line justifications for every pure-annotation (waiver) resolution on
@@ -282,6 +284,17 @@ WAIVER_JUSTIFICATIONS: Dict[str, str] = {
     "cache.CachedStore._pinned": "prefetcher rebinds a fresh mask wholesale; trainers read "
     "whichever mask is current (stale pin set costs one extra cold fetch, never correctness)",
     "cache.CachedStore.stats": "hit/miss counters are diagnostic; torn increments tolerated",
+    "shards.EmbeddingShards.incarnations": "bumped under _lock on fail AND recover; the "
+    "pipeline's lock-free reads are an advisory drain token (a missed bump only rereads "
+    "serially, never lands a stale plane — consume re-checks at the entry Event)",
+    "pipeline.StepPipeline._buf": "owner-thread-confined: stage/consume/drain all run on "
+    "the one trainer thread that owns the pipeline; the stager never touches the dict",
+    "pipeline.StepPipeline._prep_memo": "worker-thread-confined peek memo: only the stager "
+    "thread reads/writes it",
+    "runners.ThreadedShadowRunner._pipes": "slot-owned cells: each trainer binds and drives "
+    "only its own pipeline; no cross-slot access",
+    "runners.ThreadedShadowRunner._pipe_stats": "slot-owned cells written in the slot's "
+    "finally; merged after join",
     # --- lock-blocking: ok scopes ----------------------------------------
     "runners.ThreadedShadowRunner._bootstrap_join": "admission must be atomic with the "
     "membership transition; joins are rare and bounded (one stack + on_join hook)",

@@ -89,6 +89,7 @@ from repro.core import sync as S
 from repro.core.elp import EPSMeter, SlotEPS
 from repro.core.flatspace import FlatSpace
 from repro.core.membership import FaultSpec, Membership, MembershipSchedule
+from repro.core.pipeline import PipelineConfig, PipelineStats, StepPipeline
 from repro.core.scheduler import StragglerPolicy
 from repro.core.supervision import Supervisor, SupervisorConfig
 from repro.data import ctr
@@ -139,6 +140,7 @@ class HogwildSim:
         membership: Optional[Membership] = None,
         schedule: Optional[Union[MembershipSchedule, Sequence[Tuple[int, str, int]]]] = None,
         cache: Optional[CacheConfig] = None,
+        pipeline: Optional[PipelineConfig] = None,
     ):
         self.cfg = cfg
         self.sync_cfg = sync_cfg.validate()
@@ -148,6 +150,10 @@ class HogwildSim:
         # the batch stream is a pure function of the iteration counter, so
         # the prefetch horizon is peeked, not raced.
         self.cache = cache.validate() if cache is not None else None
+        # Step pipelining (DESIGN.md §13): a StepPipeline stages batch k+1's
+        # lookup while batch k's dense jit runs, hazard-checked over the
+        # peeked index stream so the trajectory stays bitwise-serial.
+        self.pipeline = pipeline.validate() if pipeline is not None else None
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
         # Elastic membership: buffers are CAPACITY-padded at R_max; join/
@@ -300,6 +306,20 @@ class HogwildSim:
         self._dense_iter = jax.jit(dense_iter, donate_argnums=(0, 1))
         self._dense_iter_elastic = jax.jit(dense_iter_elastic, donate_argnums=(0, 1))
 
+        # Pipelined-uncached programs (DESIGN.md §13): the split path's
+        # standalone lookup/update, deliberately NON-donating — a staged
+        # lookup holds a ref to the pre-update emb state while the update
+        # for the current step produces the next one, so neither buffer may
+        # be invalidated under the staging worker. Same module-jitted
+        # kernels as train_core, so split == fused bitwise (the §11 cache
+        # already pins the identical decomposition).
+        self._lookup_iter = jax.jit(lambda emb_state, idx: emb.lookup(emb_state, spec, idx))
+        self._update_iter = jax.jit(
+            lambda emb_state, idx, g: emb.sparse_adagrad_update_fused(
+                emb_state, spec, idx, g, self.emb_lr
+            )
+        )
+
         def eval_batch(w, emb_state, batch):
             pooled = emb.lookup(emb_state, spec, batch["sparse"])
             logits = dlrm.forward(w, batch["dense"], pooled)
@@ -407,16 +427,18 @@ class HogwildSim:
         sc = self.sync_cfg
         elastic = self._elastic
         cached = self.cache is not None
+        pipelined = self.pipeline is not None
         store: Optional[CachedStore] = None
         batch_memo: Dict[int, Any] = {}
         gid_memo: Dict[int, np.ndarray] = {}
+        offs = np.asarray(self.spec.offsets)
+        F, m, d = (self.cfg.n_sparse_features, self.cfg.multi_hot, self.cfg.embedding_dim)
         if cached:
             # the packed table moves behind the two-tier store for the run;
             # merged() restores the canonical emb_state at the end, so
             # resume/save/eval see exactly the uncached representation
             store = CachedStore(st.emb_state, self.cache)
             st.emb_state = None
-            offs = np.asarray(self.spec.offsets)
 
         def _get_batch(it: int):
             if not cached:
@@ -442,6 +464,51 @@ class HogwildSim:
         sync_count = 0
         examples = 0
         start = int(st.step)
+        # Step pipelining (DESIGN.md §13): the staging worker peeks future
+        # batches (pure in the iteration counter — regenerated, not shared
+        # with this thread's memos) and dispatches their lookups while this
+        # thread is blocked in the dense jit; the hazard check keeps the
+        # trajectory bitwise-serial. The sim has ONE lookup unit (the packed
+        # table), so n_shards=1.
+        pipe: Optional[StepPipeline] = None
+        if pipelined:
+
+            def _prep_step(it: int) -> Dict[str, Any]:
+                b = self.make_batch(it)
+                idx = np.asarray(b["sparse"]).reshape(-1, F, m)
+                gids = idx + offs[None, :, None]
+                return {"rows": [np.unique(gids)], "batch": b, "idx": idx, "gids": gids}
+
+            if cached:
+
+                def _stage_lookup(s, it, prep, ctx):
+                    # races only placement (promotions); values are
+                    # placement-invariant and the hazard check guarantees
+                    # no window update touches these rows
+                    return store.lookup(prep["gids"], staged=True)
+
+                _make_ctx = None
+            else:
+
+                def _stage_lookup(s, it, prep, ctx):
+                    # ctx = the pre-update emb state captured at stage()
+                    # time (immutable arrays; _update_iter does not donate)
+                    return self._lookup_iter(ctx, prep["idx"])
+
+                def _make_ctx():
+                    return st.emb_state
+
+            pipe = StepPipeline(
+                self.pipeline, 1, prepare=_prep_step, stage_fn=_stage_lookup,
+                make_ctx=_make_ctx, end=start + n_iters, name="sim-pipe",
+            )
+        # prefetch horizon composed with the pipeline depth: the prefetcher
+        # must peek at least as far as lookups are staged (DESIGN.md §13)
+        la = (
+            self.cache.effective_lookahead(self.pipeline.depth if pipelined else 1)
+            if cached
+            else 0
+        )
         # (land_t, snapshot, fired_mask, launch_active)
         pending: Optional[Tuple[int, Pytree, np.ndarray, Optional[np.ndarray]]] = None
         for t in range(start, start + n_iters):
@@ -449,22 +516,38 @@ class HogwildSim:
                 # plain schedules yield (kind, slot); a closed-loop
                 # StragglerSchedule yields (kind, slot, reason) — provenance
                 # rides into the membership event log
-                for ev in self.schedule.events_at(t):
+                evs = list(self.schedule.events_at(t))
+                if evs and pipe is not None:
+                    # in-flight stages predate the event: drain BEFORE the
+                    # membership epoch advances (DESIGN.md §13)
+                    pipe.drain()
+                for ev in evs:
                     kind, slot = ev[0], ev[1]
                     reason = ev[2] if len(ev) > 2 else ""
                     st = self._apply_membership_event(st, kind, slot, reason)
             active = self.membership.active_mask() if elastic else None
-            batch = _get_batch(t)
+            staged = prep = None
+            if pipe is not None:
+                staged, prep = pipe.consume(t)
+            batch = prep["batch"] if prep is not None else _get_batch(t)
             if cached:
+                if prep is not None:
+                    # the worker already generated this step's batch/gids:
+                    # seed the memos so the prefetch peek below reuses them
+                    batch_memo.setdefault(t, batch)
+                    gid_memo.setdefault(t, prep["gids"])
                 # deterministic lookahead: one prefetch round covering the
                 # horizon [t, t+K) at the iteration boundary — exactly what
                 # the threaded shadow thread does between syncs, quantized
-                if self.cache.lookahead:
-                    store.prefetch([_gids(t + j) for j in range(self.cache.lookahead)])
-                gids = _gids(t)
-                pooled = store.lookup(gids).reshape(
-                    self.R, self.M, self.B, self.cfg.n_sparse_features, -1
-                )
+                if la:
+                    store.prefetch([_gids(t + j) for j in range(la)])
+                gids = prep["gids"] if prep is not None else _gids(t)
+                if staged is not None and staged[0] is not None:
+                    pooled = staged[0]  # batch t's lookup overlapped batch
+                    # t-1's dense pass (bitwise: the hazard check held)
+                else:
+                    pooled = store.lookup(gids)
+                pooled = pooled.reshape(self.R, self.M, self.B, F, -1)
                 if elastic:
                     st.w_stack, st.opt_stack, loss_out, g_pooled = self._dense_iter_elastic(
                         st.w_stack, st.opt_stack, jnp.asarray(active), pooled, batch
@@ -473,6 +556,10 @@ class HogwildSim:
                     st.w_stack, st.opt_stack, loss_out, g_pooled = (
                         self._dense_iter(st.w_stack, st.opt_stack, pooled, batch)
                     )
+                if pipe is not None:
+                    # stage AFTER the dense dispatch (the worker overlaps
+                    # it) and BEFORE this step's sparse update lands
+                    pipe.stage(t)
                 # standalone fused scatter-Adagrad on the hot tier, same
                 # (B*F, m)/(B*F, d) flattening as sparse_adagrad_update_fused
                 store.update(
@@ -483,6 +570,31 @@ class HogwildSim:
                 for k in [k for k in gid_memo if k <= t]:
                     del gid_memo[k]
                     batch_memo.pop(k, None)
+            elif pipelined:
+                # uncached split path (standalone lookup -> dense jit ->
+                # standalone update): bitwise-identical to the fused
+                # program — same module-jitted kernels, same order (the
+                # §11 cache pins the identical decomposition)
+                idx = (
+                    prep["idx"]
+                    if prep is not None
+                    else np.asarray(batch["sparse"]).reshape(-1, F, m)
+                )
+                if staged[0] is not None:
+                    pooled = staged[0]
+                else:
+                    pooled = self._lookup_iter(st.emb_state, idx)
+                pooled = pooled.reshape(self.R, self.M, self.B, F, -1)
+                if elastic:
+                    st.w_stack, st.opt_stack, loss_out, g_pooled = self._dense_iter_elastic(
+                        st.w_stack, st.opt_stack, jnp.asarray(active), pooled, batch
+                    )
+                else:
+                    st.w_stack, st.opt_stack, loss_out, g_pooled = (
+                        self._dense_iter(st.w_stack, st.opt_stack, pooled, batch)
+                    )
+                pipe.stage(t)  # _make_ctx captures the PRE-update emb state
+                st.emb_state = self._update_iter(st.emb_state, idx, g_pooled.reshape(-1, F, d))
             elif elastic:
                 st.w_stack, st.opt_stack, st.emb_state, loss_out = self._train_iter_elastic(
                     st.w_stack, st.opt_stack, st.emb_state, jnp.asarray(active), batch
@@ -548,6 +660,10 @@ class HogwildSim:
                 on_iter(t, losses[-1])
             if log_every and (t + 1) % log_every == 0:
                 print(f"iter {t+1}: loss {np.mean(losses[-log_every:]):.5f}")
+        if pipe is not None:
+            # quiesce the staging worker before the canonical merge below
+            # (a still-running staged lookup would race the hot-tier drain)
+            pipe.close()
         if cached:
             # fold the hot tier back into the canonical packed state: the
             # cache is invisible to save/eval/resume (and to the caller)
@@ -564,6 +680,8 @@ class HogwildSim:
         }
         if cached:
             out["cache_stats"] = store.stats.as_dict()
+        if pipe is not None:
+            out["pipeline_stats"] = pipe.stats.as_dict()
         if elastic:
             out["replica_losses"] = np.stack(replica_losses)
             out["membership_events"] = list(self.membership.events)
@@ -745,12 +863,16 @@ class ThreadedShadowRunner:
         ps_snapshot_every: int = 2,
         shard_retry: Optional[emb_shards.ShardRetryPolicy] = None,
         cache: Optional[CacheConfig] = None,
+        pipeline: Optional[PipelineConfig] = None,
     ):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
         # Tiered embedding cache (DESIGN.md §11): each PS fronts its table
         # with a two-tier store; the shadow thread (already the background
         # worker) runs the lookahead prefetcher between syncs.
         self.cache = cache.validate() if cache is not None else None
+        # Step pipelining (DESIGN.md §13): each trainer owns a StepPipeline
+        # that stages hazard-free per-shard lookups one-plus steps ahead.
+        self.pipeline = pipeline.validate() if pipeline is not None else None
         self.engine = sync_cfg.engine
         self.algo = algorithms.get(sync_cfg.algo)
         self.R, self.B = n_trainers, batch_size
@@ -900,7 +1022,23 @@ class ThreadedShadowRunner:
             algo_state = self.algo.init_state_flat(plane, self.sync_cfg, self.flat)
         else:
             algo_state = self.algo.init_state(w0, self.sync_cfg)
-        self._shadow_round([plane] * n_live, algo_state)
+        # Also warm every cohort size the FaultSpec/policy can retrace to
+        # mid-run: each crash/raise (and a straggler demotion) shrinks the
+        # cohort by one, each scheduled join grows it by one. Without this
+        # the first round AFTER an elastic event pays the trace — exactly
+        # when the membership epoch just advanced and the controller is
+        # re-baselining (the PR 5 fix warmed only the initial size).
+        shrinks = (
+            len(self.fault.crash_at)
+            + len(self.fault.raise_at)
+            + (1 if self.policy is not None else 0)
+        )
+        grows = len(self.fault.join_at)
+        sizes = {n_live}
+        sizes.update(max(n_live - k, 1) for k in range(1, shrinks + 1))
+        sizes.update(min(n_live + k, self.R) for k in range(1, grows + 1))
+        for n in sorted(sizes):
+            self._shadow_round([plane] * n, algo_state)
 
     # holds-lock: _state_lock
     def _dispatch_on_leave(self, slot: int) -> None:
@@ -954,6 +1092,15 @@ class ThreadedShadowRunner:
             )
             self.w[i] = S.tree_slice(stack, slot)
         self.opt_states[i] = self.opt.init(self._w0)
+
+    def _merged_pipe_stats(self) -> Dict[str, Any]:
+        """Sum the per-trainer pipeline counters (harvested in each
+        trainer's finally, read here post-join)."""
+        total = PipelineStats()
+        for st in self._pipe_stats:
+            if st is not None:
+                total.add(st)
+        return total.as_dict()
 
     def run(self, iters_per_trainer: int) -> Dict[str, Any]:
         key = jax.random.PRNGKey(self.seed)
@@ -1015,6 +1162,12 @@ class ThreadedShadowRunner:
         self._alive = [True] * self.R
         self.iter_count = [0] * self.R  # hogwild-race: ok — slot-owned counters
         trainer_wall = [0.0] * self.R  # hogwild-race: ok — slot-owned cells, read post-join
+        # Per-trainer step pipelines (DESIGN.md §13): each slot owns one
+        # StepPipeline staging its own hazard-free per-shard lookups.
+        # hogwild-race: ok — slot-owned cells
+        self._pipes: List[Optional[StepPipeline]] = [None] * self.R
+        # hogwild-race: ok — slot-owned cells, merged post-join
+        self._pipe_stats: List[Optional[PipelineStats]] = [None] * self.R
         # hogwild-race: ok — slot-owned lists, merged post-join
         losses: List[List[float]] = [[] for _ in range(self.R)]
         ex_lock = threading.Lock()
@@ -1067,6 +1220,12 @@ class ThreadedShadowRunner:
         def _prefetch_step() -> None:
             if self.cache is None or self.cache.lookahead == 0:
                 return
+            # the pipeline stages lookups up to depth-1 steps ahead of the
+            # trainer's clock; the prefetch horizon must cover at least that
+            # far or staged lookups systematically miss (DESIGN.md §13)
+            la = self.cache.effective_lookahead(
+                self.pipeline.depth if self.pipeline is not None else 1
+            )
             if not _prefetch_gate.acquire(blocking=False):
                 return  # another incarnation (restart race) is mid-round
             try:
@@ -1075,7 +1234,7 @@ class ThreadedShadowRunner:
                     if not self._alive[i]:
                         continue
                     base = self.iter_count[i]
-                    for j in range(self.cache.lookahead):
+                    for j in range(la):
                         it = base + j
                         if it >= iters_per_trainer:
                             break
@@ -1268,6 +1427,13 @@ class ThreadedShadowRunner:
                         self.membership.fail(i, reason=f"exception: {type(e).__name__}: {e}")
                         self._dispatch_on_leave(i)
             finally:
+                # stop the slot's stager thread (idempotent) and harvest its
+                # stats before the thread object dies — crash/raise exits
+                # included, or the stager would outlive its trainer
+                pipe = self._pipes[i]
+                if pipe is not None:
+                    pipe.close()
+                    self._pipe_stats[i] = pipe.stats
                 # under _state_lock so _readmit's alive check is race-free
                 # (a finished trainer must never be resurrected into the
                 # sync set); then drop out of the barrier
@@ -1299,6 +1465,40 @@ class ThreadedShadowRunner:
                 if fr:
                     _fr_register(i)
                 n_iters = max(iters_per_trainer - target, 1)
+            pipe: Optional[StepPipeline] = None
+            if self.pipeline is not None:
+                # Per-trainer step pipeline (DESIGN.md §13): the slot's own
+                # batch stream is pure in (seed + slot, iteration), so the
+                # stager peeks it deterministically. The hazard check is
+                # SELF-read-after-write only — interleaving with the other
+                # trainers' updates is the permitted Hogwild race, exactly
+                # as in the serial path.
+                def _prep(it2: int) -> Dict[str, Any]:
+                    b = ctr.gen_batch(self.cfg, self.teacher, self.seed + i, it2, self.B)
+                    sp = np.asarray(b["sparse"])
+                    rows = [
+                        np.unique(emb_shards._route_np(self.plan, s, sp))
+                        for s in range(self.n_emb_shards)
+                    ]
+                    return {"rows": rows, "batch": b, "sparse": sp}
+
+                def _stage(s: int, it2: int, prep: Dict[str, Any], ctx: Any) -> Any:
+                    return self.emb.lookup_shard(s, prep["sparse"], staged=True)
+
+                pipe = StepPipeline(
+                    self.pipeline,
+                    self.n_emb_shards,
+                    prepare=_prep,
+                    stage_fn=_stage,
+                    # any membership transition (join/crash/demote) or PS
+                    # fail/recover between staging and consumption drains
+                    # the staged value — the lookup reruns serially
+                    epoch=lambda: self.membership.epoch,
+                    shard_token=self.emb.incarnation,
+                    end=n_iters,
+                    name=f"pipe-{i}",
+                )
+                self._pipes[i] = pipe
             t_start = time.perf_counter()
             sleep_s = self.fault.straggler_sleep_s.get(i, 0.0)
             sleep_until = self.fault.straggler_until.get(i)
@@ -1323,8 +1523,35 @@ class ThreadedShadowRunner:
                 t_busy = time.perf_counter()
                 if sleep_s and (sleep_until is None or it < sleep_until):
                     time.sleep(sleep_s)  # injected degradation
-                batch = ctr.gen_batch(self.cfg, self.teacher, self.seed + i, it, self.B)
-                if self.cache is not None:
+                staged = prep = None
+                if pipe is not None:
+                    staged, prep = pipe.consume(it)
+                batch = (
+                    prep["batch"]
+                    if prep is not None
+                    else ctr.gen_batch(self.cfg, self.teacher, self.seed + i, it, self.B)
+                )
+                if pipe is not None:
+                    # pipelined: per-shard planes staged ahead where the
+                    # hazard check allowed it; hazarded/drained shards rerun
+                    # serially right here — bitwise the same either way
+                    sparse_np = (
+                        prep["sparse"] if prep is not None else np.asarray(batch["sparse"])
+                    )
+                    outs = [
+                        staged[s]
+                        if staged is not None and staged[s] is not None
+                        else self.emb.lookup_shard(s, sparse_np)
+                        for s in range(self.n_emb_shards)
+                    ]
+                    pooled = self.emb.assemble(outs)
+                    w, opt_state, loss, g_pooled = self._train_dense(
+                        self.w[i], self.opt_states[i], pooled, batch
+                    )
+                    # stage batch it+1.. while THIS step's dense compute and
+                    # sparse updates land (the overlap window)
+                    pipe.stage(it)
+                elif self.cache is not None:
                     # hot-tier lookup through the per-PS caches (a miss that
                     # beat the prefetch horizon promotes synchronously —
                     # counted, never a stall of another trainer)
@@ -1619,6 +1846,9 @@ class ThreadedShadowRunner:
             "stale_lookups": list(self.emb.stale_lookups),
             # tiered-cache telemetry (DESIGN.md §11; {} when cache is off)
             "cache_stats": (self.emb.cache_stats() if self.cache is not None else {}),
+            # step-pipeline telemetry (DESIGN.md §13; {} when pipelining is
+            # off): per-trainer stats merged post-join
+            "pipeline_stats": (self._merged_pipe_stats() if self.pipeline is not None else {}),
             "sync_rounds": self._shadow_rounds,
             "sync_restarts": sync_restarts,
             "sync_count_at_restart": list(self._sync_count_at_restart),

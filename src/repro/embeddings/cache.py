@@ -82,14 +82,27 @@ class CacheConfig:
         if not 0.0 < self.decay <= 1.0:
             raise ValueError(f"decay must be in (0, 1], got {self.decay}")
         if self.update_retries < 0:
-            raise ValueError(
-                f"update_retries must be >= 0, got {self.update_retries}")
+            raise ValueError(f"update_retries must be >= 0, got {self.update_retries}")
         return self
 
     def resolve_hot_rows(self, n_rows: int) -> int:
-        h = (self.hot_rows if self.hot_rows is not None
-             else max(1, int(round(self.hot_frac * n_rows))))
+        h = (
+            self.hot_rows
+            if self.hot_rows is not None
+            else max(1, int(round(self.hot_frac * n_rows)))
+        )
         return min(h, n_rows)
+
+    def effective_lookahead(self, pipeline_depth: int = 1) -> int:
+        """Prefetch horizon composed with the step pipeline (DESIGN.md §13):
+        the prefetcher must peek at least as far ahead as lookups are
+        staged, or every staged lookup beyond the horizon pays exactly the
+        synchronous-promotion stall the pipeline was meant to hide.
+        ``lookahead=0`` stays 0 — prefetch explicitly off is respected
+        (staged cold rows become counted stalls, still exact)."""
+        if self.lookahead == 0:
+            return 0
+        return max(self.lookahead, pipeline_depth)
 
 
 @dataclass(frozen=True)
@@ -132,6 +145,7 @@ class CacheStats:
     bytes_d2h: int = 0
     update_conflicts: int = 0  # optimistic update swaps retried after a migration
     dropped_updates: int = 0  # retries exhausted (bounded, counted — never a stall)
+    staged_lookups: int = 0  # lookups dispatched ahead of need by the step pipeline
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
@@ -156,8 +170,7 @@ class CachedStore:
     trainer threads, ``prefetch`` by the background worker; every placement
     change happens under ``_lock`` and lands as a fresh ``TierState``."""
 
-    def __init__(self, state: Params, cfg: CacheConfig, *,
-                 eps: float = 1e-8):
+    def __init__(self, state: Params, cfg: CacheConfig, *, eps: float = 1e-8):
         self.cfg = cfg.validate()
         self.n_rows, self.dim = state["table"].shape
         self.eps = eps
@@ -175,8 +188,7 @@ class CachedStore:
         slot = np.full(self.n_rows, -1, np.int32)
         slot[:H] = np.arange(H, dtype=np.int32)
         hot_row = np.full(H, -1, np.int32)
-        hot_row[:min(H, self.n_rows)] = np.arange(min(H, self.n_rows),
-                                                  dtype=np.int32)
+        hot_row[:min(H, self.n_rows)] = np.arange(min(H, self.n_rows), dtype=np.int32)
         hot = {k: jnp.asarray(self.cold[k][:H]) for k in self.cold}
         # swap-published; guarded-by-writes: _lock — every placement change
         # lands as a fresh immutable TierState; trainers read lock-free
@@ -216,9 +228,7 @@ class CachedStore:
         occ = st.routing.hot_row >= 0
         rows = st.routing.hot_row[occ]
         for k in out:
-            out[k][rows] = np.asarray(
-                jnp.take(st.hot[k], jnp.asarray(np.flatnonzero(occ)),
-                         axis=0))
+            out[k][rows] = np.asarray(jnp.take(st.hot[k], jnp.asarray(np.flatnonzero(occ)), axis=0))
         return {k: jnp.asarray(v) for k, v in out.items()}
 
     def check_invariants(self) -> None:
@@ -232,24 +242,27 @@ class CachedStore:
         if not np.array_equal(hot_row[slot[hot_rows]], hot_rows):
             raise AssertionError("slot/hot_row maps disagree")
         occupied = np.flatnonzero(hot_row >= 0)
-        if not np.array_equal(np.sort(slot[hot_row[occupied]]),
-                              np.sort(occupied)):
+        if not np.array_equal(np.sort(slot[hot_row[occupied]]), np.sort(occupied)):
             raise AssertionError("occupied slot not routed back")
         if len(hot_rows) != len(occupied):
             raise AssertionError("tier population mismatch")
 
     # -- hot path ------------------------------------------------------------
-    def lookup(self, idx: np.ndarray) -> jnp.ndarray:
+    def lookup(self, idx: np.ndarray, *, staged: bool = False) -> jnp.ndarray:
         """Sum-pooled lookup, idx (..., m) local row ids -> (..., d). Runs
         the unchanged fused kernel over the hot tier with ids remapped to
         slots; any cold row is promoted synchronously first (the counted
-        stall path — a miss that beat the prefetch horizon)."""
+        stall path — a miss that beat the prefetch horizon). ``staged``
+        marks a lookup the step pipeline (core/pipeline.py) dispatched
+        ahead of consumption — same semantics, separately counted."""
         idx = np.asarray(idx)
         rows, counts = np.unique(idx, return_counts=True)
         self.freq[rows] += counts
         st = self._st
         missing = rows[st.routing.slot[rows] < 0]
         self.stats.lookups += 1
+        if staged:
+            self.stats.staged_lookups += 1
         self.stats.hit_rows += len(rows) - len(missing)
         if len(missing):
             self.stats.miss_rows += len(missing)
@@ -287,16 +300,16 @@ class CachedStore:
                 lr=lr, eps=self.eps)
             with self._lock:
                 if self._st.routing is st.routing:
-                    self._st = TierState({"table": table, "acc": acc},
-                                         st.routing)
+                    self._st = TierState({"table": table, "acc": acc}, st.routing)
                     return True
             self.stats.update_conflicts += 1
         self.stats.dropped_updates += 1
         return False
 
     # -- migration -----------------------------------------------------------
-    def _plan_migration(self, need: np.ndarray, keep: np.ndarray,
-                        routing: Routing) -> Optional[_Plan]:
+    def _plan_migration(
+        self, need: np.ndarray, keep: np.ndarray, routing: Routing
+    ) -> Optional[_Plan]:
         """Stage promotions for ``need`` (cold rows, deduped) evicting the
         lowest-frequency unpinned hot rows not in ``keep``. Pure decision —
         no copies, no lock."""
@@ -320,13 +333,11 @@ class CachedStore:
             # frequency-aware (decayed-LFU) victims; prefer rows the
             # prefetch horizon has NOT pinned. lexsort is stable, so ties
             # break by row id — deterministic for the sim.
-            order = np.lexsort((cand, self.freq[cand],
-                                self._pinned[cand].astype(np.int8)))
+            order = np.lexsort((cand, self.freq[cand], self._pinned[cand].astype(np.int8)))
             evict_rows = cand[order[:n_evict]]
         evict_slots = routing.slot[evict_rows].astype(np.int32)
         dst = np.concatenate([free[:len(need)], evict_slots])[:len(need)]
-        return _Plan(need, dst.astype(np.int32), evict_rows, evict_slots,
-                     free[:len(need)])
+        return _Plan(need, dst.astype(np.int32), evict_rows, evict_slots, free[:len(need)])
 
     # holds-lock: _lock; lock-blocking: ok — bounded row scatters; doing them
     # optimistically would break eviction-writeback-before-slot-reuse exactness
@@ -343,8 +354,7 @@ class CachedStore:
         if len(plan.evict_rows):
             ev = jnp.asarray(plan.evict_slots)
             for k in hot:
-                self.cold[k][plan.evict_rows] = np.asarray(
-                    jnp.take(hot[k], ev, axis=0))
+                self.cold[k][plan.evict_rows] = np.asarray(jnp.take(hot[k], ev, axis=0))
             self.stats.evict_rows += len(plan.evict_rows)
             self.stats.writeback_rows += len(plan.evict_rows)
             self.stats.bytes_d2h += len(plan.evict_rows) * self._row_bytes
@@ -367,8 +377,7 @@ class CachedStore:
         one device scatter) so the fused kernel still runs over a single
         contiguous tier — exactness is never traded for speed."""
         with self._lock:
-            plan = self._plan_migration(np.asarray(missing), keep,
-                                        self._st.routing)
+            plan = self._plan_migration(np.asarray(missing), keep, self._st.routing)
             return self._apply_migration(plan) if plan else self._st
 
     def prefetch(self, horizon: List[np.ndarray]) -> Dict[str, int]:
@@ -409,13 +418,15 @@ class LookaheadPrefetcher:
     runs one prefetch round — the shadow thread calls it between syncs; the
     deterministic sim calls it at iteration boundaries."""
 
-    def __init__(self, store: CachedStore,
-                 feed: Callable[[int], Optional[np.ndarray]],
-                 lookahead: Optional[int] = None):
+    def __init__(
+        self,
+        store: CachedStore,
+        feed: Callable[[int], Optional[np.ndarray]],
+        lookahead: Optional[int] = None,
+    ):
         self.store = store
         self.feed = feed
-        self.lookahead = (store.cfg.lookahead if lookahead is None
-                          else lookahead)
+        self.lookahead = (store.cfg.lookahead if lookahead is None else lookahead)
 
     def step(self) -> Dict[str, int]:
         if self.lookahead == 0:

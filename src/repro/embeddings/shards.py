@@ -85,9 +85,7 @@ class ShardPlan:
 def plan_shards(spec: TableSpec, n_shards: int, batch_size: int) -> ShardPlan:
     """LPT bin-pack the tables' profiled lookup costs across the PSs."""
     n_shards = max(1, min(n_shards, len(spec.sizes)))
-    bins = tuple(
-        tuple(b) for b in bin_pack(lookup_costs(spec, batch_size), n_shards)
-    )
+    bins = tuple(tuple(b) for b in bin_pack(lookup_costs(spec, batch_size), n_shards))
     feature_shard = [0] * len(spec.sizes)
     feature_local_offset = [0] * len(spec.sizes)
     shard_rows = []
@@ -98,8 +96,9 @@ def plan_shards(spec: TableSpec, n_shards: int, batch_size: int) -> ShardPlan:
             feature_local_offset[f] = off
             off += spec.sizes[f]
         shard_rows.append(off)
-    return ShardPlan(spec, bins, tuple(feature_shard),
-                     tuple(feature_local_offset), tuple(shard_rows))
+    return ShardPlan(
+        spec, bins, tuple(feature_shard), tuple(feature_local_offset), tuple(shard_rows)
+    )
 
 
 def shard_states(plan: ShardPlan, state: Params) -> List[Params]:
@@ -109,10 +108,7 @@ def shard_states(plan: ShardPlan, state: Params) -> List[Params]:
     out = []
     for feats in plan.bins:
         parts = [(int(goff[f]), int(goff[f]) + plan.spec.sizes[f]) for f in feats]
-        out.append({
-            k: jnp.concatenate([state[k][a:b] for a, b in parts])
-            for k in state
-        })
+        out.append({k: jnp.concatenate([state[k][a:b] for a, b in parts]) for k in state})
     return out
 
 
@@ -138,8 +134,7 @@ def _route_np(plan: ShardPlan, s: int, idx: np.ndarray) -> np.ndarray:
     """Host-side ``_route``: the cache layer and the prefetcher index numpy
     routing tables, so the remap must not round-trip through the device."""
     feats = np.asarray(plan.bins[s])
-    offs = np.asarray([plan.feature_local_offset[f] for f in plan.bins[s]],
-                      np.int32)
+    offs = np.asarray([plan.feature_local_offset[f] for f in plan.bins[s]], np.int32)
     return np.take(idx, feats, axis=1) + offs[None, :, None]
 
 
@@ -155,8 +150,9 @@ def shard_lookup(
     (as produced by the data pipeline) -> (B, F, dim). One fused kernel
     launch per shard."""
     outs = [
-        embedding_bag_op(tables[s], _route(plan, s, idx),
-                         use_pallas=use_pallas, interpret=interpret)
+        embedding_bag_op(
+            tables[s], _route(plan, s, idx), use_pallas=use_pallas, interpret=interpret
+        )
         for s in range(plan.n_shards)
     ]
     pooled = jnp.concatenate(outs, axis=1)  # features in bins order
@@ -242,9 +238,13 @@ class EmbeddingShards:
     all go through the store's ``merged()`` canonical view, so the failure
     domain and checkpoints cannot tell the cache exists."""
 
-    def __init__(self, plan: ShardPlan, states: List[Params],
-                 retry: Optional[ShardRetryPolicy] = None,
-                 cache: Optional[CacheConfig] = None):
+    def __init__(
+        self,
+        plan: ShardPlan,
+        states: List[Params],
+        retry: Optional[ShardRetryPolicy] = None,
+        cache: Optional[CacheConfig] = None,
+    ):
         self.plan = plan
         self.retry = (retry or ShardRetryPolicy()).validate()
         self.cache = cache.validate() if cache is not None else None
@@ -261,6 +261,10 @@ class EmbeddingShards:
         self.stale_lookups: List[int] = [0] * n  # hogwild-race: ok — same lossy contract
         self.events: List[ShardEvent] = []  # guarded-by-writes: _lock
         self.failed_at: Dict[int, float] = {}  # guarded-by-writes: _lock — shard -> fail time
+        # per-shard failure-domain incarnation: bumped on BOTH fail and
+        # recover, so a lookup staged ahead of need (core/pipeline.py) can
+        # detect ANY transition between dispatch and consumption and drain
+        self.incarnations: List[int] = [0] * n  # guarded-by-writes: _lock
         self._lock = threading.Lock()
         if self.cache is None:
             # swap-published: elements; hogwild-race: ok — lock-free Hogwild
@@ -276,13 +280,16 @@ class EmbeddingShards:
             self.stores = [CachedStore(st, self.cache) for st in states]
 
     @classmethod
-    def init(cls, plan: ShardPlan, key: jax.Array,
-             retry: Optional[ShardRetryPolicy] = None,
-             cache: Optional[CacheConfig] = None) -> "EmbeddingShards":
+    def init(
+        cls,
+        plan: ShardPlan,
+        key: jax.Array,
+        retry: Optional[ShardRetryPolicy] = None,
+        cache: Optional[CacheConfig] = None,
+    ) -> "EmbeddingShards":
         # Seed-identical to the single-table engine: init the packed
         # collection once, then split by the plan.
-        return cls(plan, shard_states(plan, init_tables(plan.spec, key)),
-                   retry=retry, cache=cache)
+        return cls(plan, shard_states(plan, init_tables(plan.spec, key)), retry=retry, cache=cache)
 
     # -- hot-path routing ----------------------------------------------------
     def tables(self) -> Tuple[jnp.ndarray, ...]:
@@ -337,6 +344,41 @@ class EmbeddingShards:
         self.dropped_updates[s] += 1
         return False
 
+    # -- per-shard staged lookup entry points (DESIGN.md §11/§13) ------------
+    def incarnation(self, s: int) -> int:
+        """Failure-domain token for shard ``s`` — the step pipeline captures
+        it at staging and drains the staged value on any mismatch."""
+        return self.incarnations[s]
+
+    def lookup_shard(self, s: int, idx: np.ndarray, *, staged: bool = False) -> jnp.ndarray:
+        """ONE shard's pooled plane for the full (B, F, m) batch — the
+        per-shard half of ``cached_lookup``/``shard_lookup``, independently
+        callable so the step pipeline (core/pipeline.py) can stage single
+        shards ahead of consumption. A healthy cached shard answers from
+        its hot tier, a healthy uncached shard from the live Hogwild state,
+        and a failed shard from its snapshot's full table (the bounded-
+        staleness read, counted in ``stale_lookups``)."""
+        idx = np.asarray(idx)
+        if self.cache is not None:
+            store = self.stores[s]
+            if store is not None and self.health[s]:
+                return store.lookup(_route_np(self.plan, s, idx), staged=staged)
+        else:
+            st = self.states[s]
+            # health is the authority, not just None-ness (see tables())
+            if st is not None and self.health[s]:
+                return embedding_bag_op(st["table"], _route(self.plan, s, jnp.asarray(idx)))
+        self.stale_lookups[s] += 1
+        return embedding_bag_op(self.snapshots[s]["table"], _route(self.plan, s, jnp.asarray(idx)))
+
+    def assemble(self, outs: List[jnp.ndarray]) -> jnp.ndarray:
+        """Reassemble the per-shard pooled planes (bins order) into the
+        (B, F, dim) feature-order result — the concat half of the lookup,
+        split out so staged and serial shard planes compose freely."""
+        pooled = jnp.concatenate(outs, axis=1)  # features in bins order
+        inv = np.argsort(np.asarray(self.plan.feature_order))
+        return jnp.take(pooled, jnp.asarray(inv), axis=1)
+
     # -- cached hot path (DESIGN.md §11) -------------------------------------
     def cached_lookup(self, idx: np.ndarray) -> jnp.ndarray:
         """Plan-routed sum-pooled lookup through the per-shard tiered
@@ -348,22 +390,11 @@ class EmbeddingShards:
         if self.cache is None:
             raise RuntimeError("cached_lookup requires cache= at init")
         idx = np.asarray(idx)
-        outs = []
-        for s in range(self.plan.n_shards):
-            store = self.stores[s]
-            if store is not None and self.health[s]:
-                outs.append(store.lookup(_route_np(self.plan, s, idx)))
-            else:
-                self.stale_lookups[s] += 1
-                outs.append(embedding_bag_op(
-                    self.snapshots[s]["table"],
-                    _route(self.plan, s, jnp.asarray(idx))))
-        pooled = jnp.concatenate(outs, axis=1)  # features in bins order
-        inv = np.argsort(np.asarray(self.plan.feature_order))
-        return jnp.take(pooled, jnp.asarray(inv), axis=1)
+        return self.assemble([self.lookup_shard(s, idx) for s in range(self.plan.n_shards)])
 
-    def cached_update(self, s: int, idx: np.ndarray, g_pooled: jnp.ndarray,
-                      lr: float, eps: float = 1e-8) -> bool:
+    def cached_update(
+        self, s: int, idx: np.ndarray, g_pooled: jnp.ndarray, lr: float, eps: float = 1e-8
+    ) -> bool:
         """Route one Hogwild write at shard ``s`` through its tiered cache:
         same health ladder as ``try_update`` (retry with backoff against a
         failed shard, then a counted drop), with the inner write landing on
@@ -375,8 +406,7 @@ class EmbeddingShards:
         idx = np.asarray(idx)
         m, d = idx.shape[-1], g_pooled.shape[-1]
         loc = _route_np(self.plan, s, idx).reshape(-1, m)
-        g = jnp.take(g_pooled, jnp.asarray(self.plan.bins[s]),
-                     axis=1).reshape(-1, d)
+        g = jnp.take(g_pooled, jnp.asarray(self.plan.bins[s]), axis=1).reshape(-1, d)
         retry = self.retry
         deadline = time.perf_counter() + retry.timeout_s
         backoff = retry.backoff_s
@@ -449,9 +479,9 @@ class EmbeddingShards:
             self.health[s] = False
             self.states[s] = None
             self.stores[s] = None  # cached mode: both tiers die with the PS
+            self.incarnations[s] += 1  # drain any in-flight staged lookups
             self.failed_at[s] = time.perf_counter()
-            self.events.append(
-                ShardEvent("ps_fail", s, self.failed_at[s], reason))
+            self.events.append(ShardEvent("ps_fail", s, self.failed_at[s], reason))
 
     def recover_shard(self, s: int, reason: str = "") -> None:
         """Rehydrate shard ``s`` from its latest snapshot and rejoin the
@@ -478,9 +508,9 @@ class EmbeddingShards:
             else:
                 self.states[s] = self.snapshots[s]
             self.health[s] = True
+            self.incarnations[s] += 1  # staged-during-outage lookups drain
             self.failed_at.pop(s, None)
-            self.events.append(
-                ShardEvent("ps_recover", s, time.perf_counter(), reason))
+            self.events.append(ShardEvent("ps_recover", s, time.perf_counter(), reason))
 
     def down_shards(self) -> List[int]:
         return [s for s in range(self.plan.n_shards) if not self.health[s]]
@@ -491,10 +521,12 @@ class EmbeddingShards:
         shards contribute ``merged()`` — the cache-invisibility contract:
         checkpoints and the sync oracle see the canonical full tables."""
         if self.cache is not None:
-            states = [store.merged() if store is not None
-                      else self.snapshots[s]
-                      for s, store in enumerate(self.stores)]
+            states = [
+                store.merged() if store is not None else self.snapshots[s]
+                for s, store in enumerate(self.stores)
+            ]
         else:
-            states = [st if st is not None else self.snapshots[s]
-                      for s, st in enumerate(self.states)]
+            states = [
+                st if st is not None else self.snapshots[s] for s, st in enumerate(self.states)
+            ]
         return packed_state(self.plan, states)

@@ -74,9 +74,14 @@ def lookup_ref(state: Params, spec: TableSpec, idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(vecs, axis=2)
 
 
-def lookup(state: Params, spec: TableSpec, idx: jnp.ndarray, *,
-           use_pallas: bool = True,
-           interpret: Optional[bool] = None) -> jnp.ndarray:
+def lookup(
+    state: Params,
+    spec: TableSpec,
+    idx: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
     """Sum-pooled lookup. idx: (B, F, m) -> (B, F, dim). One fused
     lookup+pool kernel launch by default; ``use_pallas=False`` is the oracle."""
     if not use_pallas:

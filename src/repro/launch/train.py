@@ -38,6 +38,7 @@ from repro.configs.base import ARCH_IDS, get_config, reduced
 from repro.core import algorithms, spmd
 from repro.core.elp import elp
 from repro.core.membership import FaultSpec
+from repro.core.pipeline import PipelineConfig
 from repro.core.runners import HogwildSim, ThreadedShadowRunner
 from repro.core.scheduler import PolicyConfig, StragglerPolicy
 from repro.core.sync import SyncConfig
@@ -76,11 +77,18 @@ def run_dlrm(args) -> dict:
     cache = None
     if args.cache_rows is not None:
         cache = CacheConfig(hot_rows=args.cache_rows, lookahead=args.lookahead)
+    # Step pipelining (DESIGN.md §13): --pipeline-depth 2 double-buffers the
+    # embedding lookups behind a read-after-write hazard check — bitwise the
+    # same trajectory, overlapped wall clock.
+    if args.pipeline_depth < 1:
+        raise SystemExit(f"--pipeline-depth must be >= 1, got {args.pipeline_depth}")
+    pipeline = PipelineConfig(depth=args.pipeline_depth) if args.pipeline_depth > 1 else None
     print(f"DLRM {'tiny' if args.tiny else 'full'}: {cfg.n_sparse_features} sparse features, "
           f"{cfg.n_embedding_rows:,} embedding rows; "
           f"ELP = {elp(args.batch_size, args.threads, args.trainers):,}"
           + (f"; cache hot_rows={args.cache_rows} lookahead={args.lookahead}"
-             if cache else ""))
+             if cache else "")
+          + (f"; pipeline depth={args.pipeline_depth}" if pipeline else ""))
     if args.auto_demote and not args.threaded:
         raise SystemExit(
             "--auto-demote requires --threaded: the deterministic sim has no "
@@ -117,7 +125,8 @@ def run_dlrm(args) -> dict:
         runner = ThreadedShadowRunner(
             cfg, sync_cfg, n_trainers=args.trainers, batch_size=args.batch_size,
             optimizer=opt, seed=args.seed, sync_sleep_s=args.sync_sleep,
-            fault_spec=fault, straggler_policy=policy, cache=cache)
+            fault_spec=fault, straggler_policy=policy, cache=cache,
+            pipeline=pipeline)
         out = runner.run(args.iters)
         if out["cache_stats"]:
             cs = out["cache_stats"]
@@ -125,6 +134,11 @@ def run_dlrm(args) -> dict:
             print(f"cache: hit_rate={hits:.3f} stalls={cs['stall_lookups']}"
                   f"/{cs['lookups']} prefetched={cs['prefetch_rows']} "
                   f"migrated={(cs['bytes_h2d'] + cs['bytes_d2h'])/1e6:.2f}MB")
+        if out.get("pipeline_stats"):
+            ps = out["pipeline_stats"]
+            print(f"pipeline: overlap_rate={ps['overlap_rate']:.3f} "
+                  f"hazard_serialized={ps['hazard_serialized']} "
+                  f"drains={ps['drains']}")
         print(f"EPS={out['eps']:.0f} (window {out['eps_window']:.0f})  "
               f"avg_sync_gap={out['avg_sync_gap']:.2f} "
               f"iters/trainer={out['iter_count']} "
@@ -150,7 +164,7 @@ def run_dlrm(args) -> dict:
     sim = HogwildSim(cfg, sync_cfg, n_trainers=args.trainers, n_threads=args.threads,
                      batch_size=args.batch_size, optimizer=opt, seed=args.seed,
                      schedule=_parse_schedule(args.membership_schedule),
-                     cache=cache)
+                     cache=cache, pipeline=pipeline)
     st0 = None
     if args.restore:
         st0 = sim.load_state(args.restore)
@@ -170,6 +184,11 @@ def run_dlrm(args) -> dict:
         print(f"cache: hit_rate={hits:.3f} stalls={cs['stall_lookups']}"
               f"/{cs['lookups']} prefetched={cs['prefetch_rows']} "
               f"migrated={(cs['bytes_h2d'] + cs['bytes_d2h'])/1e6:.2f}MB")
+    if out.get("pipeline_stats"):
+        ps = out["pipeline_stats"]
+        print(f"pipeline: overlap_rate={ps['overlap_rate']:.3f} "
+              f"hazard_serialized={ps['hazard_serialized']} "
+              f"drains={ps['drains']}")
     if args.save:
         # engine-independent elastic checkpoint: dense replicas as the named
         # pytree (not the flat engine's packed buffer) + opaque algo state
@@ -291,6 +310,10 @@ def main():
     d.add_argument("--lookahead", type=int, default=2,
                    help="batches the background prefetcher peeks ahead "
                         "(0 = no prefetch; cold rows stall synchronously)")
+    d.add_argument("--pipeline-depth", type=int, default=1,
+                   help="step-pipeline depth (DESIGN.md §13): 2 double-"
+                        "buffers hazard-checked embedding lookups one step "
+                        "ahead; 1 = serial (bitwise-identical either way)")
 
     l = sub.add_parser("lm")
     l.add_argument("--arch", choices=list(ARCH_IDS), default="minicpm-2b")

@@ -1,0 +1,329 @@
+"""NestPipe-style step pipelining (core/pipeline.py, DESIGN.md §13).
+
+Three layers:
+
+* **Unit layer** — ``PipelineConfig`` validation and the ``StepPipeline``
+  state machine driven with synthetic prepare/stage functions: hazard-free
+  streams overlap, colliding streams serialize (counted), ``drain()`` and
+  epoch/shard-token mismatches drop staged values, a raising stage worker
+  degrades the pipeline to serial instead of crashing the run.
+
+* **Bitwise-parity layer** — pipelining is a PURE scheduling optimization:
+  the pipelined trajectory equals the serial one bit for bit, for flat and
+  pytree engines, cached and uncached, at depth 2 and 3, through elastic
+  membership events (which drain in-flight stages), and in the
+  all-indices-identical worst case where EVERY step hazards and the
+  pipeline degenerates to counted serialization.
+
+* **Composition layer** — real-thread runner smoke: per-trainer pipelines
+  overlap against the shared Hogwild/cached embedding state, and a PS
+  failure mid-run (shard incarnation bump) completes cleanly.
+"""
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.core.membership import FaultSpec
+from repro.core.pipeline import PipelineConfig, PipelineStats, StepPipeline
+from repro.core.runners import HogwildSim, ThreadedShadowRunner
+from repro.core.sync import SyncConfig
+from repro.embeddings.cache import CacheConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.timeout(300)
+
+CFG = dlrm_ctr.tiny()
+# Wide row space: consecutive batches rarely touch the same rows, so the
+# hazard check actually admits overlap. (The tiny config's small tables
+# collide nearly every step — that stream is the worst-case test below.)
+BIG = dataclasses.replace(
+    CFG, table_sizes=(50_000,) * 4, n_sparse_features=4, multi_hot=2)
+# Degenerate single-row tables: every batch reads row 0 of every table, so
+# every staged step hazards against the one in flight — pure serialization.
+ONE = dataclasses.replace(CFG, table_sizes=(1,) * 8)
+
+
+# ---------------------------------------------------------------------------
+# unit layer
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    assert PipelineConfig().depth == 2
+    PipelineConfig(depth=1).validate()
+    PipelineConfig(depth=3).validate()
+    with pytest.raises(ValueError):
+        PipelineConfig(depth=0).validate()
+    with pytest.raises(ValueError):
+        PipelineConfig(depth=-2).validate()
+
+
+def _drive(pipe, n):
+    """Serial-consume/stage loop (the runner's shape)."""
+    got = []
+    for t in range(n):
+        vals, prep = pipe.consume(t)
+        got.append(vals)
+        pipe.stage(t)
+    pipe.close()
+    return got
+
+
+def test_unit_disjoint_stream_overlaps():
+    pipe = StepPipeline(
+        PipelineConfig(depth=2), 1,
+        prepare=lambda it: {"rows": [np.array([it], dtype=np.int64)]},
+        stage_fn=lambda s, it, prep, ctx: f"v{it}")
+    got = _drive(pipe, 5)
+    # step 0 has nothing staged; steps 1..4 consume the staged value
+    assert got[0] == [None]
+    assert [g[0] for g in got[1:]] == ["v1", "v2", "v3", "v4"]
+    st = pipe.stats
+    assert (st.steps, st.shard_steps) == (5, 5)
+    assert st.overlapped == 4 and st.hazard_serialized == 0
+    assert st.worker_errors == 0 and pipe.error is None
+    assert st.overlap_rate == pytest.approx(0.8)
+
+
+def test_unit_colliding_stream_serializes():
+    pipe = StepPipeline(
+        PipelineConfig(depth=2), 1,
+        prepare=lambda it: {"rows": [np.array([7], dtype=np.int64)]},
+        stage_fn=lambda s, it, prep, ctx: f"v{it}", end=5)
+    got = _drive(pipe, 5)
+    assert all(g == [None] for g in got)  # nothing ever staged
+    st = pipe.stats
+    assert st.overlapped == 0 and st.hazard_serialized == 4
+    assert st.overlap_rate == 0.0
+
+
+def test_unit_depth_one_is_serial():
+    pipe = StepPipeline(
+        PipelineConfig(depth=1), 2,
+        prepare=lambda it: {"rows": [np.array([it])] * 2},
+        stage_fn=lambda s, it, prep, ctx: "never")
+    got = _drive(pipe, 3)
+    assert all(g == [None, None] for g in got)
+    st = pipe.stats
+    assert st.overlapped == 0 and st.hazard_serialized == 0
+    assert st.shard_steps == 6
+
+
+def test_unit_drain_drops_in_flight():
+    pipe = StepPipeline(
+        PipelineConfig(depth=3), 1,
+        prepare=lambda it: {"rows": [np.array([it])]},
+        stage_fn=lambda s, it, prep, ctx: f"v{it}")
+    pipe.stage(0)  # stages steps 1 and 2
+    pipe.drain()   # membership event: both dropped before consumption
+    vals, _ = pipe.consume(1)
+    assert vals == [None]
+    st = pipe.stats
+    assert st.drains == 2 and st.overlapped == 0
+    pipe.close()
+
+
+def test_unit_epoch_mismatch_drains_at_consume():
+    epoch = [0]
+    pipe = StepPipeline(
+        PipelineConfig(depth=2), 1,
+        prepare=lambda it: {"rows": [np.array([it])]},
+        stage_fn=lambda s, it, prep, ctx: f"v{it}",
+        epoch=lambda: epoch[0])
+    pipe.stage(0)
+    epoch[0] += 1  # membership epoch advances while step 1 is staged
+    vals, _ = pipe.consume(1)
+    assert vals == [None]
+    assert pipe.stats.drains == 1
+    pipe.close()
+
+
+def test_unit_shard_token_mismatch_drains_that_shard():
+    tok = [0, 0]
+    pipe = StepPipeline(
+        PipelineConfig(depth=2), 2,
+        prepare=lambda it: {"rows": [np.array([it]), np.array([100 + it])]},
+        stage_fn=lambda s, it, prep, ctx: f"v{s}:{it}",
+        shard_token=lambda s: tok[s])
+    pipe.stage(0)
+    assert pipe._buf[1].done.wait(5.0)  # let the stager publish step 1
+    tok[1] += 1  # PS 1 fails/recovers between staging and consumption
+    vals, _ = pipe.consume(1)
+    assert vals[0] == "v0:1" and vals[1] is None
+    st = pipe.stats
+    assert st.drains == 1 and st.overlapped == 1
+    pipe.close()
+
+
+def test_unit_worker_error_degrades_to_serial():
+    def boom(s, it, prep, ctx):
+        raise ValueError("injected stage failure")
+
+    pipe = StepPipeline(
+        PipelineConfig(depth=2), 1,
+        prepare=lambda it: {"rows": [np.array([it])]},
+        stage_fn=boom)
+    got = _drive(pipe, 4)
+    assert all(g == [None] for g in got)  # every consume fell back serial
+    st = pipe.stats
+    assert st.worker_errors >= 1 and st.overlapped == 0
+    assert isinstance(pipe.error, ValueError)
+
+
+def test_unit_close_is_idempotent_and_stops_worker():
+    pipe = StepPipeline(
+        PipelineConfig(depth=2), 1,
+        prepare=lambda it: {"rows": [np.array([it])]},
+        stage_fn=lambda s, it, prep, ctx: it)
+    worker = pipe._worker
+    assert worker is not None and worker.is_alive()
+    pipe.close()
+    pipe.close()
+    assert not worker.is_alive()
+    assert threading.active_count() >= 1  # no deadlock, main still here
+
+
+# ---------------------------------------------------------------------------
+# bitwise-parity layer (HogwildSim)
+# ---------------------------------------------------------------------------
+
+def _sim(pipeline, cfg=BIG, cache=None, engine="flat", seed=0, **kw):
+    return HogwildSim(
+        cfg, SyncConfig(algo="easgd", mode="shadow", gap=5, engine=engine),
+        n_trainers=2, n_threads=1, batch_size=4,
+        optimizer=optim.make("adagrad", 0.02), seed=seed,
+        cache=cache, pipeline=pipeline, **kw)
+
+
+def _assert_bitwise(out_s, out_p):
+    assert out_s["train_loss"] == out_p["train_loss"]
+    es, ep = out_s["state"].emb_state, out_p["state"].emb_state
+    assert (np.asarray(es["table"]) == np.asarray(ep["table"])).all()
+    assert (np.asarray(es["acc"]) == np.asarray(ep["acc"])).all()
+    ws = np.asarray(jax.tree.leaves(out_s["state"].w_stack)[0])
+    wp = np.asarray(jax.tree.leaves(out_p["state"].w_stack)[0])
+    assert (ws == wp).all()
+
+
+@pytest.mark.parametrize("engine", ["flat", "pytree"])
+def test_sim_bitwise_uncached(engine):
+    out_s = _sim(None, engine=engine).run(15)
+    out_p = _sim(PipelineConfig(depth=2), engine=engine).run(15)
+    _assert_bitwise(out_s, out_p)
+    ps = out_p["pipeline_stats"]
+    assert ps["overlapped"] > 0  # the wide stream genuinely overlapped
+    assert ps["worker_errors"] == 0
+
+
+def test_sim_bitwise_cached():
+    cache = CacheConfig(hot_rows=2048, lookahead=2)
+    out_s = _sim(None, cache=cache).run(15)
+    out_p = _sim(PipelineConfig(depth=2), cache=cache).run(15)
+    _assert_bitwise(out_s, out_p)
+    ps = out_p["pipeline_stats"]
+    assert ps["overlapped"] > 0
+    # staged lookups really went through the hot-tier staged entry point
+    assert out_p["cache_stats"]["staged_lookups"] > 0
+    # and the cache itself stayed a pure placement optimization
+    assert out_s["cache_stats"]["hit_rows"] == out_p["cache_stats"]["hit_rows"]
+
+
+def test_sim_bitwise_depth_three():
+    out_s = _sim(None).run(12)
+    out_p = _sim(PipelineConfig(depth=3)).run(12)
+    _assert_bitwise(out_s, out_p)
+    assert out_p["pipeline_stats"]["overlapped"] > 0
+
+
+def test_sim_all_identical_indices_pure_serialization():
+    """Worst case: single-row tables make every batch read the same rows,
+    so every staged step hazards — the pipeline degenerates to counted
+    serialization and the trajectory is STILL bitwise-identical."""
+    out_s = _sim(None, cfg=ONE).run(8)
+    out_p = _sim(PipelineConfig(depth=2), cfg=ONE).run(8)
+    _assert_bitwise(out_s, out_p)
+    ps = out_p["pipeline_stats"]
+    assert ps["overlapped"] == 0 and ps["overlap_rate"] == 0.0
+    assert ps["hazard_serialized"] > 0
+
+
+def test_sim_elastic_events_drain_bitwise():
+    """Membership events drain in-flight stages before the epoch advances;
+    the drained lookups rerun serially — the elastic trajectory matches."""
+    sched = [(4, "fail", 1), (8, "join", 1)]
+    out_s = _sim(None, schedule=sched, seed=3).run(12)
+    out_p = _sim(PipelineConfig(depth=2), schedule=sched, seed=3).run(12)
+    assert np.array_equal(out_s["replica_losses"], out_p["replica_losses"])
+    assert (np.asarray(out_s["state"].emb_state["table"]) ==
+            np.asarray(out_p["state"].emb_state["table"])).all()
+    ps = out_p["pipeline_stats"]
+    assert ps["drains"] >= 1  # the fail and join each dropped a staged step
+    assert ps["overlapped"] > 0  # still overlapped between events
+
+
+def test_sim_pipeline_stats_shape():
+    out = _sim(PipelineConfig(depth=2)).run(6)
+    ps = out["pipeline_stats"]
+    assert set(ps) == {"steps", "shard_steps", "overlapped",
+                       "hazard_serialized", "drains", "worker_errors",
+                       "overlap_rate"}
+    assert ps["steps"] == 6  # one logical step per iteration (packed store)
+    merged = PipelineStats(**{k: v for k, v in ps.items()
+                              if k != "overlap_rate"})
+    assert merged.as_dict() == ps
+
+
+# ---------------------------------------------------------------------------
+# composition layer (ThreadedShadowRunner)
+# ---------------------------------------------------------------------------
+
+def _runner(pipeline, cache=None, fault=None, **kw):
+    return ThreadedShadowRunner(
+        BIG, SyncConfig(algo="easgd", gap=4, engine="flat"),
+        n_trainers=2, batch_size=4, optimizer=optim.make("adagrad", 0.02),
+        seed=2, cache=cache, pipeline=pipeline, fault_spec=fault, **kw)
+
+
+@pytest.mark.parametrize("cache", [None, CacheConfig(hot_rows=2048, lookahead=2)],
+                         ids=["uncached", "cached"])
+def test_threaded_pipelined_smoke(cache):
+    r = _runner(PipelineConfig(depth=2), cache=cache)
+    out = r.run(10)
+    assert out["iter_count"] == [10, 10]
+    assert all(np.isfinite(out["train_loss"]))
+    ps = out["pipeline_stats"]
+    assert ps["steps"] == 20 and ps["worker_errors"] == 0
+    assert ps["shard_steps"] == 20 * r.n_emb_shards
+    assert ps["overlapped"] + ps["hazard_serialized"] + ps["drains"] > 0
+    packed = out["emb_state"]
+    assert np.isfinite(np.asarray(packed["table"])).all()
+
+
+def test_threaded_pipelined_ps_fail_completes():
+    """A PS dying mid-run bumps its incarnation token: staged lookups
+    against the dead shard drain instead of landing stale planes, and the
+    run completes with canonical packed output."""
+    fault = FaultSpec(ps_fail_at={0: 2}, ps_recover_after_s=0.1)
+    r = _runner(PipelineConfig(depth=2),
+                cache=CacheConfig(hot_rows=2048, lookahead=2), fault=fault)
+    out = r.run(10)
+    kinds = [e.kind for e in out["shard_events"]]
+    assert "ps_fail" in kinds and "ps_recover" in kinds
+    assert out["pipeline_stats"]["worker_errors"] == 0
+    assert all(np.isfinite(out["train_loss"]))
+    assert np.isfinite(np.asarray(out["emb_state"]["table"])).all()
+
+
+def test_threaded_incarnation_bumps_on_fail_and_recover():
+    r = _runner(None)
+    r.run(2)
+    assert r.emb.incarnation(0) == 0
+    r.emb.fail_shard(0, "test")
+    assert r.emb.incarnation(0) == 1
+    r.emb.recover_shard(0, "test")
+    assert r.emb.incarnation(0) == 2

@@ -54,6 +54,22 @@ parity denominators are apples-to-apples:
   interleaving noise (~0.35 for BOTH cases, measured); ``emb_rel_err`` is
   kept as a loose sanity ceiling against outright divergence/NaN.
 
+One closed-loop scenario exercises the runtime mode controller
+(core/modeswitch.py, DESIGN.md §14), outside the per-mode loop because it
+OWNS its mode:
+
+* ``mode_switch`` — start in ``fixed_rate`` with the same transient
+  straggler as ``straggler_auto`` and the ``ModeController`` on: busy-EPS
+  dispersion blows past ``skew_high`` while the barrier drags the cohort,
+  so the controller hands the whole cohort to shadow (barrier drained,
+  shadow clocks seeded from the last global sync); once the straggler
+  recovers and dispersion falls through ``skew_low``, it runs the GBA-style
+  catch-up sync and re-arms the barrier. Floors: the full
+  fixed_rate->shadow->fixed_rate cycle happens, the first switch lands
+  inside ``TO_SHADOW_MAX_S``, healthy throughput retains the static-shadow
+  floor, and a scripted ``HogwildSim`` replay of the same controller is
+  bit-identical across two fresh runs (closed-loop, still deterministic).
+
 Per scenario we record total EPS, the trailing-window EPS, per-trainer EPS
 (wall and busy-clock), healthy-cohort EPS (faulted slot excluded) and its
 retention, wall time, and — for ``straggler_auto`` — the membership event
@@ -98,6 +114,17 @@ PS_RECOVER_S = 0.3     # provisioning delay before the failed PS rehydrates
 CHAOS_SUP = dict(heartbeat_deadline_s=1.0, check_interval_s=0.01,
                  backoff_s=0.05, backoff_factor=2.0, max_restarts=3)
 
+# Closed-loop mode switching (mode_switch — DESIGN.md §14). Snappy profile:
+# the bench needs both switches inside a ~10 s run, so breach persistence
+# and dwell are fractions of a second rather than the conservative library
+# defaults. skew_high 2.0 trips on the sleeping straggler's busy-EPS
+# collapse; skew_low 1.4 re-arms the barrier once the cohort's spread is
+# back near homogeneous.
+MODE_SWITCH = dict(skew_high=2.0, skew_low=1.4, window_s=0.15,
+                   min_dwell_s=0.4)
+MODE_EPS_WINDOW_S = 0.4  # per-slot busy-clock meter window for dispersion
+TO_SHADOW_MAX_S = 2.5    # CI floor: detection + handoff wall bound
+
 
 def _fault_scenarios(iters: int):
     from repro.core.membership import FaultSpec
@@ -122,6 +149,43 @@ def _healthy_eps(out, fault) -> float:
     return sum(healthy) / max(len(healthy), 1)
 
 
+def _sim_mode_replay(cfg) -> Dict[str, object]:
+    """Deterministic half of the mode_switch contract: run the closed-loop
+    controller inside ``HogwildSim`` twice from scratch (fresh controller,
+    fresh schedule, fresh sim) over the same scripted rate trace and demand
+    bit-identical losses and mode events. The scripted trace mirrors the
+    threaded scenario on the iteration clock: slot R-1 runs at a tenth of
+    cohort pace for iterations [5, 15), healthy otherwise."""
+    from repro import optim
+    from repro.core.modeswitch import (ControllerModeSchedule, ModeConfig,
+                                       ModeController)
+    from repro.core.runners import HogwildSim
+    from repro.core.sync import SyncConfig
+
+    def rates(t: int, slot: int) -> float:
+        return 0.1 if (slot == R - 1 and 5 <= t < 15) else 1.0
+
+    def run_once():
+        ctl = ModeController(ModeConfig(
+            skew_high=2.0, skew_low=1.3, window_s=2.0, min_dwell_s=3.0,
+            start_mode="fixed_rate"))
+        msched = ControllerModeSchedule(ctl, rates, n_slots=R)
+        sim = HogwildSim(
+            cfg, SyncConfig(algo=ALGO, mode="fixed_rate", gap=GAP, alpha=0.5),
+            n_trainers=R, n_threads=2, batch_size=8,
+            optimizer=optim.adagrad(0.02), seed=0, mode_schedule=msched)
+        return sim.run(30)
+
+    a, b = run_once(), run_once()
+    return {
+        "mode_events": [list(e) for e in a["mode_events"]],
+        "final_mode": a["mode"],
+        "trajectory_reproducible": bool(
+            a["mode_events"] == b["mode_events"]
+            and a["train_loss"] == b["train_loss"]),
+    }
+
+
 def bench_elastic(json_path: Optional[str] = None,
                   tiny: bool = False) -> List[Tuple[str, float, str]]:
     from repro import optim
@@ -140,7 +204,8 @@ def bench_elastic(json_path: Optional[str] = None,
           f"(R={R}, {iters} iters/trainer, algo={ALGO}, "
           f"straggler +{STRAGGLER_SLEEP_S * 1e3:.0f} ms/iter) ==")
 
-    def make_runner(mode, fault=None, policy=None, eps_window_s=2.0):
+    def make_runner(mode, fault=None, policy=None, eps_window_s=2.0,
+                    mode_controller=None):
         # chaos scenarios get the snappy supervisor profile; everything else
         # keeps the default (supervision on, but never exercised)
         chaos = fault is not None and (fault.sync_crash_at is not None
@@ -150,7 +215,8 @@ def bench_elastic(json_path: Optional[str] = None,
             cfg, SyncConfig(algo=ALGO, mode=mode, gap=GAP, alpha=0.5),
             n_trainers=R, batch_size=BATCH, optimizer=optim.adagrad(0.02),
             sync_sleep_s=0.01, fault_spec=fault, eps_window_s=eps_window_s,
-            straggler_policy=policy, supervisor_config=sup_cfg)
+            straggler_policy=policy, supervisor_config=sup_cfg,
+            mode_controller=mode_controller)
 
     rows: List[Tuple[str, float, str]] = []
     results: Dict[str, Dict[str, Dict[str, object]]] = {}
@@ -310,6 +376,72 @@ def bench_elastic(json_path: Optional[str] = None,
                       f"progress ratio {res['emb_progress_ratio']:.3f}, "
                       f"emb rel err {res['emb_rel_err']:.4f}")
 
+    # -- mode_switch (DESIGN.md §14): tuning-free sync<->async switching --
+    # Start in fixed_rate with a transient straggler and the ModeController
+    # on: the barrier drags everyone, busy-EPS dispersion blows past
+    # skew_high, and the controller hands the cohort to shadow (barrier
+    # drained, shadow clocks seeded from the last global sync). When the
+    # straggler recovers, dispersion falls through skew_low and the
+    # controller runs the catch-up sync and re-arms the barrier. Floors:
+    # the full cycle happens, fixed_rate->shadow lands inside the bounded
+    # detection window, and the healthy cohort keeps static-shadow pace.
+    from repro.core.modeswitch import ModeConfig, ModeController
+
+    n_iters = auto_iters["shadow"]
+    ctl = ModeController(ModeConfig(start_mode="fixed_rate", **MODE_SWITCH))
+    runner = make_runner(
+        "fixed_rate",
+        fault=FaultSpec(straggler_sleep_s={R - 1: STRAGGLER_SLEEP_S},
+                        straggler_until={R - 1: AUTO_UNTIL}),
+        eps_window_s=MODE_EPS_WINDOW_S, mode_controller=ctl)
+    runner.warmup()
+    out = runner.run(n_iters)
+    t0 = out["t_start"]
+    trans = [[round(t - t0, 3), frm, to, why]
+             for t, frm, to, why in out["mode_transitions"]]
+    cycle = (["fixed_rate"] + [to for _, _, to, _ in trans]) if trans else []
+    healthy = _healthy_eps(out, None)  # transient fault: nobody excluded
+    ref = results["shadow"]["no_fault_ref"]["healthy_eps"]
+    res = {
+        "eps": out["eps"],
+        "eps_window": out["eps_window"],
+        "healthy_eps": healthy,
+        "per_trainer_eps": out["per_trainer_eps"],
+        "per_trainer_eps_busy": out["per_trainer_eps_busy"],
+        "wall_s": out["wall_s"],
+        "sync_count": out["sync_count"],
+        "iter_count": out["iter_count"],
+        "iters_per_trainer": n_iters,
+        # retention vs the STATIC shadow reference: the adaptive run must
+        # not cost healthy throughput relative to just picking shadow
+        "healthy_retention": healthy / max(ref, 1e-9),
+        "final_mode": out["mode"],
+        "mode_cycle": cycle,
+        "mode_transitions": trans,
+        "to_shadow_wall_s": trans[0][0] if trans else None,
+        "back_wall_s": trans[1][0] if len(trans) > 1 else None,
+        "events": [[e.kind, e.slot, e.reason, round(e.t - t0, 3)]
+                   for e in out["membership_events"]],
+    }
+    # Sim replay (the determinism half of the contract): the SAME
+    # controller state machine driven by a scripted rate trace inside
+    # HogwildSim must produce bit-identical trajectories across two fresh
+    # runs — closed-loop mode switching stays reproducible.
+    res["sim_replay"] = _sim_mode_replay(cfg)
+    results["mode_switch"] = res
+    rows.append(("elastic/mode_switch", out["wall_s"] * 1e6,
+                 f"{out['eps']:.0f} EPS (cycle {'->'.join(cycle)})"))
+    print(f"  {'auto':10s} {'mode_switch':14s}  EPS {out['eps']:7.0f}  "
+          f"window {out['eps_window']:7.0f}  "
+          f"healthy/trainer {healthy:7.0f}  "
+          f"wall {out['wall_s']:5.2f}s  syncs {out['sync_count']}"
+          f"  retention {res['healthy_retention']:.0%}")
+    for t, frm, to, _ in trans:
+        print(f"    {'':10s} {frm} -> {to} at {t:.2f}s")
+    print(f"    {'':10s} sim replay: mode_events "
+          f"{res['sim_replay']['mode_events']}, reproducible: "
+          f"{res['sim_replay']['trajectory_reproducible']}")
+
     sh, fr = results["shadow"], results["fixed_rate"]
     print(f"  straggler contrast: shadow healthy cohort keeps "
           f"{sh['straggler']['healthy_retention']:.0%} of no-fault pace; "
@@ -336,6 +468,13 @@ def bench_elastic(json_path: Optional[str] = None,
                            "sync_crash_round": SYNC_CRASH_ROUND,
                            "ps_recover_s": PS_RECOVER_S,
                            "supervisor": CHAOS_SUP,
+                       },
+                       "mode_switch": {
+                           "iters": auto_iters.get("shadow"),
+                           "straggler_until": AUTO_UNTIL,
+                           "eps_window_s": MODE_EPS_WINDOW_S,
+                           "to_shadow_max_s": TO_SHADOW_MAX_S,
+                           **MODE_SWITCH,
                        }},
             "results": results,
         }

@@ -16,6 +16,11 @@ repo's benchmarks exist to defend:
     cohort ALSO recovers to >= 85% — the controller demotes the straggler
     out of the barrier within its detection window and the event log shows
     the full ``leave -> join -> activate`` cycle with demotion provenance;
+  - mode-switch floors (DESIGN.md §14): the closed-loop ``mode_switch``
+    scenario must complete the full fixed_rate -> shadow -> fixed_rate
+    cycle, land the first switch inside the committed detection window,
+    keep healthy throughput at the static-shadow floor, and replay
+    bit-identically in ``HogwildSim`` (closed-loop, still deterministic);
   - chaos floors (DESIGN.md §10): ``sync_crash`` must show the supervisor
     detecting the dead shadow thread and restarting it within the committed
     recovery deadline, with sync_count STRICTLY increasing afterwards (a
@@ -54,6 +59,12 @@ elastic floors are wall-clock ratios of equal-length runs, which is why
 ``elastic_bench`` self-calibrates the ``straggler_auto`` span and the floors
 are set well below the ~0.9+ both fast and slow boxes produce.
 
+Inside GitHub Actions the script additionally emits one ``::error``
+annotation per failed floor — anchored to the BENCH_*.json it was checked
+against, so the failure shows up inline on the PR diff — and appends a
+markdown verdict table (floor, committed value, measured value, margin) to
+the job's ``$GITHUB_STEP_SUMMARY``. Both are no-ops when run locally.
+
 Usage (CI regenerates the JSONs first — see .github/workflows/ci.yml):
 
     PYTHONPATH=src python scripts/check_bench_floors.py [--dir .]
@@ -64,7 +75,8 @@ import argparse
 import json
 import os
 import sys
-from typing import List
+from dataclasses import dataclass
+from typing import List, Optional
 
 SYNC_STREAM_RATIO_MIN = 2.2
 EMB_STREAM_RATIO_MIN = 5.0
@@ -109,15 +121,86 @@ CACHE_HOT_FRAC_TOL = 0.01
 # timing margin. Bitwise floors are exact by construction.
 PIPELINE_SPEEDUP_MIN = 1.2
 PIPELINE_OVERLAP_MIN = 0.8
+# Mode-switch floors (DESIGN.md §14). The cycle floor pins the behavior
+# (the controller must take the cohort to shadow under transient skew AND
+# bring it back); the detection wall bounds meter warm-up + breach window +
+# handoff on a loaded CI box (measured ~0.5 s on a healthy one); retention
+# reuses the static-shadow bar — adapting must not cost healthy throughput
+# vs just picking shadow; the replay floor is exact by construction (the
+# sim drives the same state machine from a scripted trace, so a single
+# differing bit means the closed loop lost determinism).
+MODE_SWITCH_RETENTION_MIN = SHADOW_STRAGGLER_RETENTION_MIN
+MODE_TO_SHADOW_WALL_MAX_S = 2.5
+MODE_CYCLE = ["fixed_rate", "shadow", "fixed_rate"]
+
+
+@dataclass
+class FloorRow:
+    """One floor verdict, structured so CI can render annotations and the
+    step-summary table without re-parsing the human-readable message."""
+
+    ok: bool
+    msg: str          # the full PASS/FAIL line (console output)
+    name: str         # short floor identifier, e.g. "elastic/shadow/straggler retention"
+    committed: str    # the committed bound, rendered (e.g. ">= 0.85")
+    measured: str     # the fresh measurement, rendered
+    margin: str       # signed distance from the bound ("" when non-numeric)
+    file: str         # the BENCH_*.json this floor was checked against
 
 
 class Floors:
     def __init__(self) -> None:
-        self.failures: List[str] = []
-        self.passes: List[str] = []
+        self.rows: List[FloorRow] = []
+        self._file = ""
 
-    def check(self, ok: bool, msg: str) -> None:
-        (self.passes if ok else self.failures).append(msg)
+    def bench(self, file: str) -> None:
+        """Set the BENCH_*.json context for subsequent checks (annotation
+        anchor in CI)."""
+        self._file = file
+
+    def check(
+        self,
+        ok: bool,
+        msg: str,
+        *,
+        name: Optional[str] = None,
+        floor: object = None,
+        measured: object = None,
+        op: str = ">=",
+    ) -> None:
+        """Record one floor verdict. ``floor``/``measured``/``op`` are
+        optional structure for the CI summary table: when both are numeric
+        the margin is the signed distance INTO the passing region (positive
+        == passing with room, for ``>=``, ``<=`` and ``==`` alike)."""
+        if name is None:
+            name = msg.split(":", 1)[0]
+        committed = "" if floor is None else f"{op} {_render(floor)}"
+        shown = "missing" if (measured is None and floor is not None) else _render(measured)
+        margin = ""
+        if isinstance(floor, (int, float)) and isinstance(measured, (int, float)):
+            if op == ">=":
+                margin = f"{measured - floor:+.3g}"
+            elif op == "<=":
+                margin = f"{floor - measured:+.3g}"
+        self.rows.append(FloorRow(ok, msg, name, committed, shown, margin, self._file))
+
+    @property
+    def passes(self) -> List[str]:
+        return [r.msg for r in self.rows if r.ok]
+
+    @property
+    def failures(self) -> List[str]:
+        return [r.msg for r in self.rows if not r.ok]
+
+
+def _render(v: object) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, bool):
+        return str(v).lower()
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
 
 
 def check_sync(d: dict, fl: Floors) -> None:
@@ -128,6 +211,8 @@ def check_sync(d: dict, fl: Floors) -> None:
         fl.check(
             ratio >= SYNC_STREAM_RATIO_MIN,
             f"sync/{algo}: stream_ratio {ratio:.2f} >= {SYNC_STREAM_RATIO_MIN}",
+            name=f"sync/{algo} stream ratio",
+            floor=SYNC_STREAM_RATIO_MIN, measured=ratio,
         )
 
 
@@ -135,7 +220,8 @@ def check_emb(d: dict, fl: Floors) -> None:
     tiny = bool(d["config"].get("tiny"))
     floor = EMB_STREAM_RATIO_MIN_TINY if tiny else EMB_STREAM_RATIO_MIN
     ratio = d["results"]["fused"]["stream_ratio"]
-    fl.check(ratio >= floor, f"emb/fused: stream_ratio {ratio:.2f} >= {floor}")
+    fl.check(ratio >= floor, f"emb/fused: stream_ratio {ratio:.2f} >= {floor}",
+             name="emb/fused stream ratio", floor=floor, measured=ratio)
     fl.check(
         d["results"]["plan_sharded"]["bytes"] <= d["results"]["dense_take"]["bytes"],
         "emb/plan_sharded: moves no more bytes than dense_take",
@@ -161,6 +247,8 @@ def _check_auto_events(mode: str, row: dict, slot: int, fl: Floors) -> None:
         demote_wall is not None and demote_wall <= AUTO_DEMOTE_WALL_MAX_S,
         f"elastic/{mode}/straggler_auto: demoted in {demote_wall}s "
         f"(<= {AUTO_DEMOTE_WALL_MAX_S}s — within the detection window)",
+        name=f"elastic/{mode}/straggler_auto demote wall",
+        floor=AUTO_DEMOTE_WALL_MAX_S, measured=demote_wall, op="<=",
     )
     fl.check(
         row.get("readmit_wall_s") is not None,
@@ -186,6 +274,8 @@ def _check_sync_crash(row: dict, fl: Floors) -> None:
         wall is not None and wall <= SYNC_RESTART_WALL_MAX_S,
         f"elastic/shadow/sync_crash: detected + restarted in {wall}s "
         f"(<= {SYNC_RESTART_WALL_MAX_S}s recovery deadline)",
+        name="elastic/shadow/sync_crash restart wall",
+        floor=SYNC_RESTART_WALL_MAX_S, measured=wall, op="<=",
     )
     fl.check(
         not row.get("sync_degraded", False),
@@ -198,6 +288,8 @@ def _check_sync_crash(row: dict, fl: Floors) -> None:
         f"elastic/shadow/sync_crash: healthy retention {ret:.2f} >= "
         f"{SYNC_CRASH_RETENTION_MIN} (training never blocks on the sync "
         f"engine, dead or alive)",
+        name="elastic/shadow/sync_crash retention",
+        floor=SYNC_CRASH_RETENTION_MIN, measured=ret,
     )
 
 
@@ -225,6 +317,8 @@ def _check_ps_fail(mode: str, row: dict, ps_recover_s: float, fl: Floors) -> Non
         ret >= PS_FAIL_RETENTION_MIN,
         f"elastic/{mode}/ps_fail: healthy retention {ret:.2f} >= "
         f"{PS_FAIL_RETENTION_MIN} (retry-then-drop beats blocking)",
+        name=f"elastic/{mode}/ps_fail retention",
+        floor=PS_FAIL_RETENTION_MIN, measured=ret,
     )
     prog = row.get("emb_progress_ratio")
     fl.check(
@@ -233,6 +327,8 @@ def _check_ps_fail(mode: str, row: dict, ps_recover_s: float, fl: Floors) -> Non
         f"{prog if prog is None else round(prog, 4)} >= "
         f"{PS_FAIL_EMB_PROGRESS_MIN} vs the no-fault oracle (the bounded-"
         f"staleness parity bound: a never-rehydrated snapshot measures ~0.8)",
+        name=f"elastic/{mode}/ps_fail progress ratio",
+        floor=PS_FAIL_EMB_PROGRESS_MIN, measured=prog,
     )
     err = row.get("emb_rel_err")
     fl.check(
@@ -241,6 +337,61 @@ def _check_ps_fail(mode: str, row: dict, ps_recover_s: float, fl: Floors) -> Non
         f"{err if err is None else round(err, 5)} <= "
         f"{PS_FAIL_EMB_REL_ERR_MAX} (divergence/NaN sanity ceiling; "
         f"~0.35 of Hogwild interleaving noise is expected)",
+        name=f"elastic/{mode}/ps_fail rel err",
+        floor=PS_FAIL_EMB_REL_ERR_MAX, measured=err, op="<=",
+    )
+
+
+def _check_mode_switch(row: dict, to_shadow_max_s: float, fl: Floors) -> None:
+    cycle = row.get("mode_cycle") or []
+    fl.check(
+        cycle[: len(MODE_CYCLE)] == MODE_CYCLE,
+        f"elastic/mode_switch: full {' -> '.join(MODE_CYCLE)} cycle "
+        f"(got {cycle}) — transient skew sends the cohort to shadow, "
+        f"recovery re-arms the barrier",
+        name="elastic/mode_switch cycle",
+        floor=" -> ".join(MODE_CYCLE), measured=" -> ".join(cycle), op="==",
+    )
+    wall = row.get("to_shadow_wall_s")
+    fl.check(
+        wall is not None and wall <= to_shadow_max_s,
+        f"elastic/mode_switch: fixed_rate -> shadow in {wall}s "
+        f"(<= {to_shadow_max_s}s — meter warm-up + breach window + handoff)",
+        name="elastic/mode_switch detection wall",
+        floor=to_shadow_max_s, measured=wall, op="<=",
+    )
+    back = row.get("back_wall_s")
+    fl.check(
+        back is not None,
+        f"elastic/mode_switch: returned to fixed_rate after the straggler "
+        f"recovered (at {back}s)",
+        name="elastic/mode_switch return switch",
+        floor="switch observed", measured=back, op="==",
+    )
+    ret = row.get("healthy_retention", 0.0)
+    fl.check(
+        ret >= MODE_SWITCH_RETENTION_MIN,
+        f"elastic/mode_switch: healthy retention {ret:.2f} >= "
+        f"{MODE_SWITCH_RETENTION_MIN} vs static shadow (adapting the mode "
+        f"never costs healthy throughput)",
+        name="elastic/mode_switch retention",
+        floor=MODE_SWITCH_RETENTION_MIN, measured=ret,
+    )
+    rep = row.get("sim_replay") or {}
+    fl.check(
+        len(rep.get("mode_events") or []) >= 2,
+        f"elastic/mode_switch: sim replay drove a full switch cycle "
+        f"(mode_events: {rep.get('mode_events')})",
+        name="elastic/mode_switch sim cycle",
+        floor=2, measured=len(rep.get("mode_events") or []),
+    )
+    fl.check(
+        bool(rep.get("trajectory_reproducible")),
+        "elastic/mode_switch: closed-loop sim trajectory bit-identical "
+        "across two fresh runs (losses AND mode events — the determinism "
+        "contract)",
+        name="elastic/mode_switch sim determinism",
+        floor=True, measured=rep.get("trajectory_reproducible"), op="==",
     )
 
 
@@ -258,6 +409,14 @@ def check_elastic(d: dict, fl: Floors) -> None:
             f"elastic/{mode}: all scenarios present (missing: "
             f"{sorted(want - scenarios)})",
         )
+    fl.check(
+        "mode_switch" in results,
+        "elastic/mode_switch: closed-loop mode-switch scenario present",
+        name="elastic/mode_switch present",
+    )
+    to_shadow_max_s = (d["config"].get("mode_switch") or {}).get(
+        "to_shadow_max_s", MODE_TO_SHADOW_WALL_MAX_S)
+    _check_mode_switch(results.get("mode_switch") or {}, to_shadow_max_s, fl)
     _check_sync_crash(results["shadow"].get("sync_crash") or {}, fl)
     for mode in ("shadow", "fixed_rate"):
         _check_ps_fail(mode, results[mode].get("ps_fail") or {}, ps_recover_s, fl)
@@ -266,6 +425,8 @@ def check_elastic(d: dict, fl: Floors) -> None:
         ret >= SHADOW_STRAGGLER_RETENTION_MIN,
         f"elastic/shadow/straggler: healthy retention {ret:.2f} >= "
         f"{SHADOW_STRAGGLER_RETENTION_MIN} (background sync shields the cohort)",
+        name="elastic/shadow/straggler retention",
+        floor=SHADOW_STRAGGLER_RETENTION_MIN, measured=ret,
     )
     for mode in ("shadow", "fixed_rate"):
         ret = results[mode]["straggler_auto"]["healthy_retention"]
@@ -273,6 +434,8 @@ def check_elastic(d: dict, fl: Floors) -> None:
             ret >= AUTO_RETENTION_MIN,
             f"elastic/{mode}/straggler_auto: healthy retention {ret:.2f} >= "
             f"{AUTO_RETENTION_MIN} (closed-loop controller recovers the cohort)",
+            name=f"elastic/{mode}/straggler_auto retention",
+            floor=AUTO_RETENTION_MIN, measured=ret,
         )
         _check_auto_events(mode, results[mode]["straggler_auto"], slot, fl)
 
@@ -287,6 +450,8 @@ def check_cache(d: dict, fl: Floors) -> None:
         f"cache/lookahead{la}: steady-state hit rate {hit:.3f} >= "
         f"{CACHE_HIT_RATE_MIN} (25% hot budget, zipf({cfg.get('zipf_a')}) — "
         f"the prefetcher stages the working set before lookups land)",
+        name=f"cache/lookahead{la} hit rate",
+        floor=CACHE_HIT_RATE_MIN, measured=hit,
     )
     stall = hot["stall_fraction"]
     fl.check(
@@ -294,6 +459,8 @@ def check_cache(d: dict, fl: Floors) -> None:
         f"cache/lookahead{la}: stall fraction {stall:.3f} <= "
         f"{CACHE_STALL_FRACTION_MAX} (cold hits beating the horizon stay "
         f"rare)",
+        name=f"cache/lookahead{la} stall fraction",
+        floor=CACHE_STALL_FRACTION_MAX, measured=stall, op="<=",
     )
     for name in (f"lookahead{la}", "lookahead0"):
         row = d["results"][name]
@@ -328,6 +495,8 @@ def check_pipeline(d: dict, fl: Floors) -> None:
         f"pipeline/cached_depth2: step throughput {speedup:.2f}x >= "
         f"{PIPELINE_SPEEDUP_MIN}x vs serial depth 1 (staging the hot-tier "
         f"assembly behind the dense jit buys back wall clock)",
+        name="pipeline/cached_depth2 speedup",
+        floor=PIPELINE_SPEEDUP_MIN, measured=speedup,
     )
     overlap = hot["overlap_rate"]
     fl.check(
@@ -335,6 +504,8 @@ def check_pipeline(d: dict, fl: Floors) -> None:
         f"pipeline/cached_depth2: overlap rate {overlap:.3f} >= "
         f"{PIPELINE_OVERLAP_MIN} on the wide-table stream (the hazard "
         f"check admits real overlap instead of degenerating to serial)",
+        name="pipeline/cached_depth2 overlap rate",
+        floor=PIPELINE_OVERLAP_MIN, measured=overlap,
     )
     fl.check(
         bool(hot["trajectory_bitwise"]),
@@ -360,6 +531,45 @@ def check_pipeline(d: dict, fl: Floors) -> None:
     )
 
 
+def _annotate(fl: Floors) -> None:
+    """One GitHub ``::error`` annotation per failed floor, anchored to the
+    bench JSON it was checked against — the failure renders inline on the
+    PR instead of only in a log nobody scrolls. No-op outside Actions."""
+    if not os.environ.get("GITHUB_ACTIONS"):
+        return
+    for r in fl.rows:
+        if not r.ok:
+            print(f"::error file={r.file},title=bench floor: {r.name}::{r.msg}")
+
+
+def _step_summary(fl: Floors) -> None:
+    """Append the verdict table to the job's ``$GITHUB_STEP_SUMMARY`` so the
+    committed-vs-measured margins are readable from the Actions UI without
+    opening the raw log. No-op when the env var is unset (local runs)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    npass, nfail = len(fl.passes), len(fl.failures)
+    verdict = "all floors hold" if nfail == 0 else f"{nfail} floor(s) BROKEN"
+    esc = lambda s: s.replace("|", "\\|")  # noqa: E731 — table-cell escape
+    lines = [
+        "## Bench floors",
+        "",
+        f"**{npass} passed, {nfail} failed — {verdict}**",
+        "",
+        "| floor | committed | measured | margin | verdict |",
+        "|---|---|---|---|---|",
+    ]
+    for r in fl.rows:
+        lines.append(
+            f"| {esc(r.name)} | {esc(r.committed) or '—'} "
+            f"| {esc(r.measured) or '—'} | {r.margin or '—'} "
+            f"| {'✅ pass' if r.ok else '❌ FAIL'} |")
+    lines.append("")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--dir", default=".", help="directory holding BENCH_*.json")
@@ -381,6 +591,7 @@ def main() -> int:
     for name, fn in checks.items():
         if name in skip:
             continue
+        fl.bench(f"BENCH_{name}.json")
         path = os.path.join(args.dir, f"BENCH_{name}.json")
         try:
             with open(path) as f:
@@ -396,6 +607,8 @@ def main() -> int:
         print(f"  PASS  {msg}")
     for msg in fl.failures:
         print(f"  FAIL  {msg}")
+    _annotate(fl)
+    _step_summary(fl)
     print(
         f"bench floors: {len(fl.passes)} passed, {len(fl.failures)} failed",
         file=sys.stderr,

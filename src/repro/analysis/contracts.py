@@ -234,6 +234,8 @@ SHARED_CLASSES: Dict[str, str] = {
     "CachedStore": "two-tier store: trainer lookups race the prefetcher's migrations",
     "StepPipeline": "staged-lookup double buffer: the owning trainer stages/consumes, "
     "the stager thread publishes entries via per-entry Events",
+    "ModeController": "mode state machine: shadow round + supervision tick both "
+    "observe, trainers read .mode lock-free",
 }
 
 # One-line justifications for every pure-annotation (waiver) resolution on

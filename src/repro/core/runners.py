@@ -86,9 +86,10 @@ import numpy as np
 from repro import checkpoint as ckpt
 from repro.core import algorithms
 from repro.core import sync as S
-from repro.core.elp import EPSMeter, SlotEPS
+from repro.core.elp import EPSMeter, SlotEPS, median_eps
 from repro.core.flatspace import FlatSpace
 from repro.core.membership import FaultSpec, Membership, MembershipSchedule
+from repro.core.modeswitch import ModeController, ModeDecision, ModeSchedule
 from repro.core.pipeline import PipelineConfig, PipelineStats, StepPipeline
 from repro.core.scheduler import StragglerPolicy
 from repro.core.supervision import Supervisor, SupervisorConfig
@@ -141,9 +142,23 @@ class HogwildSim:
         schedule: Optional[Union[MembershipSchedule, Sequence[Tuple[int, str, int]]]] = None,
         cache: Optional[CacheConfig] = None,
         pipeline: Optional[PipelineConfig] = None,
+        mode_schedule: Optional[Union[ModeSchedule, Sequence[Tuple[int, str]]]] = None,
     ):
         self.cfg = cfg
         self.sync_cfg = sync_cfg.validate()
+        # Runtime mode switching (DESIGN.md §14): a deterministic per-
+        # iteration mode trace — scripted [(iteration, mode)] switch points
+        # or a closed-loop ControllerModeSchedule — moves the whole cohort
+        # between shadow and fixed_rate at iteration boundaries, with the
+        # staleness-compensated handoff applied in run(). Without one, the
+        # sim runs the exact legacy single-mode path (bit-identical).
+        if mode_schedule is not None and not isinstance(mode_schedule, ModeSchedule):
+            mode_schedule = ModeSchedule(mode_schedule, start_mode=sync_cfg.mode)
+        if mode_schedule is not None and mode_schedule.start_mode != sync_cfg.mode:
+            raise ValueError(
+                f"mode_schedule starts in {mode_schedule.start_mode!r} but "
+                f"sync_cfg.mode is {sync_cfg.mode!r}; construct them to agree")
+        self.mode_schedule = mode_schedule
         # Tiered embedding cache (DESIGN.md §11): the packed table moves
         # behind a CachedStore and training runs lookup -> dense jit ->
         # fused update with only the hot tier device-resident. Deterministic:
@@ -511,6 +526,21 @@ class HogwildSim:
         )
         # (land_t, snapshot, fired_mask, launch_active)
         pending: Optional[Tuple[int, Pytree, np.ndarray, Optional[np.ndarray]]] = None
+        # Runtime mode switching (DESIGN.md §14). ``cur_mode`` tracks the
+        # cohort's mode; the anchors realize the staleness-compensated
+        # handoff: ``fr_anchor`` aligns the barrier cadence to the catch-up
+        # sync that opened the fixed_rate phase, ``shadow_base`` seeds the
+        # staggered shadow clocks from the last GLOBAL sync, and
+        # ``last_global_sync`` remembers where that was. All stay 0 when no
+        # switch ever fires, so a schedule-free run is bit-identical legacy.
+        msched = self.mode_schedule
+        cur_mode = sc.mode
+        if msched is not None and start > 0:
+            cur_mode = msched.mode_at(start - 1)  # mode already in effect
+        mode_events: List[Tuple[int, str, str]] = []
+        last_global_sync = 0
+        fr_anchor = 0
+        shadow_base = 0
         for t in range(start, start + n_iters):
             if elastic and self.schedule is not None:
                 # plain schedules yield (kind, slot); a closed-loop
@@ -526,6 +556,35 @@ class HogwildSim:
                     reason = ev[2] if len(ev) > 2 else ""
                     st = self._apply_membership_event(st, kind, slot, reason)
             active = self.membership.active_mask() if elastic else None
+            if msched is not None:
+                mode = msched.mode_at(t)
+                if mode != cur_mode:
+                    # Mode handoff at the iteration boundary (DESIGN.md §14).
+                    # In-flight pipeline stages predate the switch: drain on
+                    # this (owning) thread before anything else moves.
+                    if pipe is not None:
+                        pipe.drain()
+                    if mode == "fixed_rate":
+                        # shadow -> fixed_rate: drop the in-flight launch
+                        # (its snapshot is stale against the barrier about
+                        # to arm) and run one foreground catch-up sync —
+                        # GBA-style compensation, so stale replica deltas
+                        # are merged before the first synchronous step.
+                        pending = None
+                        if active is None or active.any():
+                            st = self._apply_sync(st, None, None, active=active)
+                            sync_count += self.R if active is None else int(active.sum())
+                        last_global_sync = t
+                        fr_anchor = t
+                    else:
+                        # fixed_rate -> shadow: nothing in flight to drain
+                        # (the sim's barrier is implicit); seed every
+                        # replica's shadow clock from the LAST GLOBAL sync,
+                        # so the staggered offsets resume as if the cohort
+                        # had been on shadow clocks since that sync.
+                        shadow_base = last_global_sync
+                    mode_events.append((t, cur_mode, mode))
+                    cur_mode = mode
             staged = prep = None
             if pipe is not None:
                 staged, prep = pipe.consume(t)
@@ -612,10 +671,11 @@ class HogwildSim:
             else:
                 losses.append(float(loss_out))
                 examples += self.R * self.M * self.B
-            if sc.mode == "fixed_rate":
-                if (t + 1) % sc.gap == 0 and (active is None or active.any()):
+            if cur_mode == "fixed_rate":
+                if (t + 1 - fr_anchor) % sc.gap == 0 and (active is None or active.any()):
                     st = self._apply_sync(st, None, None, active=active)
                     sync_count += self.R if active is None else int(active.sum())
+                    last_global_sync = t + 1
             else:  # shadow
                 if pending is not None and t + 1 >= pending[0]:
                     _, snap, mask, launch_active = pending
@@ -629,7 +689,7 @@ class HogwildSim:
                         sync_count += (int(mask.sum()) if mask is not None else self.R)
                     pending = None
                 if pending is None:
-                    mask = self._shadow_schedule(t + 1)
+                    mask = self._shadow_schedule(t + 1 - shadow_base)
                     if elastic:
                         mask = mask & active  # a dead slot's clock never fires
                     if mask.any():
@@ -685,6 +745,12 @@ class HogwildSim:
         if elastic:
             out["replica_losses"] = np.stack(replica_losses)
             out["membership_events"] = list(self.membership.events)
+        if msched is not None:
+            # (iteration, from_mode, to_mode) handoffs this run applied —
+            # the reproducibility contract: two runs of the same schedule
+            # produce identical mode_events AND identical trajectories
+            out["mode_events"] = mode_events
+            out["mode"] = cur_mode
         return out
 
     def _apply_sync(self, st: SimState, snap, mask, active=None, launch_active=None) -> SimState:
@@ -864,8 +930,20 @@ class ThreadedShadowRunner:
         shard_retry: Optional[emb_shards.ShardRetryPolicy] = None,
         cache: Optional[CacheConfig] = None,
         pipeline: Optional[PipelineConfig] = None,
+        mode_controller: Optional[ModeController] = None,
     ):
         self.cfg, self.sync_cfg = cfg, sync_cfg.validate()
+        # Tuning-free mode switching (DESIGN.md §14): when a ModeController
+        # is supplied, the run starts in sync_cfg.mode but the controller —
+        # evaluated every shadow round over live busy-EPS dispersion (plus
+        # the loss-divergence quality skew) — may move the WHOLE cohort
+        # between shadow and fixed_rate mid-run, with the staleness-
+        # compensated handoff applied in run().
+        self.mode_ctl = mode_controller
+        if mode_controller is not None and mode_controller.mode != sync_cfg.mode:
+            raise ValueError(
+                f"mode_controller starts in {mode_controller.mode!r} but "
+                f"sync_cfg.mode is {sync_cfg.mode!r}; construct them to agree")
         # Tiered embedding cache (DESIGN.md §11): each PS fronts its table
         # with a two-tier store; the shadow thread (already the background
         # worker) runs the lookahead prefetcher between syncs.
@@ -930,10 +1008,11 @@ class ThreadedShadowRunner:
                     f"has {self.n_emb_shards} embedding shards"
                 )
         sync_chaos = (self.fault.sync_crash_at is not None or self.fault.sync_stall_at is not None)
-        if sync_chaos and self.sync_cfg.mode == "fixed_rate":
+        if sync_chaos and self.sync_cfg.mode == "fixed_rate" and self.mode_ctl is None:
             raise ValueError(
-                "sync_crash_at / sync_stall_at target the "
-                "shadow thread; mode='fixed_rate' has none"
+                "sync_crash_at / sync_stall_at target the shadow thread; "
+                "static mode='fixed_rate' has none (auto-mode runs — with a "
+                "mode_controller — always keep one)"
             )
         if (sync_chaos or self.fault.ps_fail_at) and not self.supervise:
             raise ValueError(
@@ -1170,9 +1249,38 @@ class ThreadedShadowRunner:
         self._pipe_stats: List[Optional[PipelineStats]] = [None] * self.R
         # hogwild-race: ok — slot-owned lists, merged post-join
         losses: List[List[float]] = [[] for _ in range(self.R)]
+        # Quality signals (DESIGN.md §14): per-slot loss EMA feeds the
+        # policy's loss-divergence demotion and the controller's quality
+        # skew.
+        # hogwild-race: ok — slot-owned cells (each trainer writes only its
+        # own; reader threads see a coherent latest float)
+        self._loss_ema = [float("nan")] * self.R
+        # perf_counter stamp of each slot's last LANDED sync — the gradient
+        # staleness age the policy judges. Written in the round's publish
+        # step.
+        # guarded-by-writes: _state_lock — lock-free reads see a coherent
+        # latest stamp
+        self._last_sync_t = [time.perf_counter()] * self.R
         ex_lock = threading.Lock()
-        fr = self.sync_cfg.mode == "fixed_rate"
-        if fr:
+        auto = self.mode_ctl is not None
+        # static fixed_rate: no shadow thread exists, the monitor thread
+        # carries the policy. Auto-mode runs ALWAYS keep the shadow thread
+        # (it is the mode/policy evaluator even while the barrier owns the
+        # rounds), so fr_static gates the no-shadow-thread paths.
+        fr_static = (not auto) and self.sync_cfg.mode == "fixed_rate"
+        has_fr = fr_static or auto
+        # The cohort's CURRENT mode. Static runs pin it forever; auto runs
+        # move it in _apply_mode_switch.
+        # guarded-by-writes: _fr_cond — trainers read it lock-free each
+        # iteration; a stale read is bounded-safe (an unregistered waiter
+        # returns immediately from the sync point, and a trainer that
+        # misses one barrier boundary re-arrives at its next gap — the
+        # barrier waits, never deadlocks)
+        self._mode = self.sync_cfg.mode
+        # bumped on every handoff: trainers drain their own (owner-
+        # confined) step pipelines when they observe it moved
+        self._mode_gen = 0  # guarded-by-writes: _fr_cond
+        if has_fr:
             # Foreground sync point: a Condition-based barrier whose party
             # count tracks membership, so a crash shrinks it instead of
             # deadlocking — but a straggler still drags EVERYONE (the paper's
@@ -1280,8 +1388,11 @@ class ThreadedShadowRunner:
                 if (self.membership.epoch != epoch or self.algo_state is not state_in):
                     return 0  # membership/algo state moved under the round
                 self.algo_state = new_state
+                now_sync = time.perf_counter()
                 for k, j in enumerate(ids):
                     self.w[j] = sub[k]
+                    # the slot's deltas just landed: its staleness age resets
+                    self._last_sync_t[j] = now_sync
                 return n
 
         def _fr_ready_locked() -> bool:  # holds-lock: _fr_cond
@@ -1375,7 +1486,7 @@ class ThreadedShadowRunner:
                     return  # crashed/left between observation and action
                 self.membership.leave(slot, reason=reason)
                 self._dispatch_on_leave(slot)
-            if fr:
+            if has_fr:
                 _fr_deregister(slot)
 
         def _readmit(slot: int, reason: str) -> None:
@@ -1393,24 +1504,105 @@ class ThreadedShadowRunner:
                 if self.membership.status(slot) != "dead":
                     return
                 self._admit_slot(slot, reason=reason)
-            if fr:
+            if has_fr:
                 _fr_register(slot)
 
         def _policy_step() -> None:
             policy = self.policy
             if policy is None:
                 return
+            now = time.perf_counter()
+            pcfg = policy.config
+            # quality observations (DESIGN.md §14) only when the matching
+            # knob is armed — the default policy stays pace-only
+            loss_by = (
+                {i: self._loss_ema[i] for i in range(self.R)}
+                if pcfg.loss_div_frac is not None else None)
+            stale_by = (
+                {i: now - self._last_sync_t[i] for i in range(self.R)}
+                if pcfg.staleness_max is not None else None)
             actions = policy.observe(
-                time.perf_counter(),
+                now,
                 self.slot_eps.eps_by_slot(),
                 self.membership.active_mask(),
                 list(self._alive),
+                loss_by_slot=loss_by,
+                staleness_by_slot=stale_by,
             )
             for a in actions:
                 if a.kind == "demote":
                     _demote(a.slot, a.reason)
                 else:
                     _readmit(a.slot, a.reason)
+
+        def _quality_skew() -> float:
+            # loss-EMA divergence over the live cohort: max slot EMA over
+            # the cohort median — a replica whose TRAJECTORY diverges
+            # pushes the controller toward shadow even at healthy pace
+            active = self.membership.active_mask()
+            vals = [
+                self._loss_ema[i]
+                for i in range(self.R)
+                if active[i] and self._alive[i]
+            ]
+            vals = [v for v in vals if v == v and v > 0.0]
+            if len(vals) < 2:
+                return 0.0
+            med = median_eps(vals)
+            return max(vals) / med if med > 0.0 else 0.0
+
+        def _apply_mode_switch(dec: ModeDecision, gen: Optional[int]) -> None:
+            # One whole-cohort mode handoff (DESIGN.md §14), fenced by the
+            # supervisor's generation token: a stalled shadow incarnation
+            # that was already replaced must not run a handoff concurrently
+            # with its replacement's (the supervisor's own backup tick
+            # passes gen=None — it is always current).
+            if (gen is not None and sup is not None
+                    and sup.generation("shadow") != gen):
+                return
+            if dec.target == "fixed_rate":
+                # shadow -> fixed_rate: one foreground catch-up sync —
+                # GBA-style compensation — BEFORE arming the barrier, so
+                # stale replica deltas are merged and the first synchronous
+                # step starts from consensus, not from whatever the last
+                # background landing happened to leave behind
+                n = _round_over_active()
+                if n:
+                    _add_syncs(n)
+            with self._fr_cond:
+                if self._mode == dec.target:
+                    return  # raced another switcher: handoff already done
+                active = self.membership.active_mask()
+                arm = dec.target == "fixed_rate"
+                for j in range(self.R):
+                    self._fr_arrived[j] = False
+                    self._fr_registered[j] = bool(arm and self._alive[j] and active[j])
+                # fixed_rate -> shadow: bumping the generation DRAINS the
+                # barrier — every parked waiter re-checks, sees its
+                # generation gone, and trains on without a round; the next
+                # background round then syncs from the last barrier state
+                # (the shadow cadence re-seeds itself from the live planes)
+                self._fr_leader = None
+                self._fr_gen += 1
+                self._mode = dec.target
+                # trainers drain their own (owner-confined) pipelines when
+                # they observe the bump: staged lookups predate the handoff
+                self._mode_gen += 1
+                self._fr_cond.notify_all()
+            self.membership.note("mode_switch", -1, f"-> {dec.target}: {dec.reason}")
+
+        def _mode_step(gen: Optional[int]) -> None:
+            ctl = self.mode_ctl
+            if ctl is None:
+                return
+            disp = ModeController.dispersion(
+                self.slot_eps.eps_by_slot(),
+                self.membership.active_mask(),
+                list(self._alive),
+            )
+            dec = ctl.observe(time.perf_counter(), disp, quality_skew=_quality_skew())
+            if dec is not None:
+                _apply_mode_switch(dec, gen)
 
         def trainer(i: int):
             try:
@@ -1439,7 +1631,7 @@ class ThreadedShadowRunner:
                 # sync set); then drop out of the barrier
                 with self._state_lock:
                     self._alive[i] = False
-                if fr:
+                if has_fr:
                     _fr_deregister(i)
                 if sup is not None:
                     # clean exit (or captured failure): stop watching before
@@ -1462,7 +1654,7 @@ class ThreadedShadowRunner:
                     time.sleep(0.001)
                 with self._state_lock:
                     self._admit_slot(i)
-                if fr:
+                if has_fr:
                     _fr_register(i)
                 n_iters = max(iters_per_trainer - target, 1)
             pipe: Optional[StepPipeline] = None
@@ -1504,8 +1696,15 @@ class ThreadedShadowRunner:
             sleep_until = self.fault.straggler_until.get(i)
             crash = self.fault.crash_at.get(i)
             boom = self.fault.raise_at.get(i)
+            seen_mode_gen = self._mode_gen
             for it in range(n_iters):
                 _beat(f"trainer-{i}")
+                if pipe is not None and self._mode_gen != seen_mode_gen:
+                    # a mode handoff happened since the last check: staged
+                    # lookups predate it — drain on THIS thread (stage/
+                    # consume/drain are owner-confined, core/pipeline.py §13)
+                    seen_mode_gen = self._mode_gen
+                    pipe.drain()
                 if boom is not None and it >= boom:
                     # injected software fault: an actual raise, exercising the
                     # capture -> membership.fail -> re-raise-after-join path
@@ -1517,7 +1716,7 @@ class ThreadedShadowRunner:
                         if self.membership.status(i) != "dead":
                             self.membership.fail(i)
                             self._dispatch_on_leave(i)
-                    if fr:
+                    if has_fr:
                         _fr_deregister(i)
                     break
                 t_busy = time.perf_counter()
@@ -1585,7 +1784,11 @@ class ThreadedShadowRunner:
                             self.emb.cached_update(s, sparse_np, g_pooled, self.emb_lr)
                         else:
                             self.emb.try_update(s, self._emb_updates[s], batch["sparse"], g_pooled)
-                losses[i].append(float(loss))
+                lv = float(loss)
+                losses[i].append(lv)
+                # slot-owned loss EMA (quality signal, DESIGN.md §14)
+                prev = self._loss_ema[i]
+                self._loss_ema[i] = lv if prev != prev else 0.9 * prev + 0.1 * lv
                 self.iter_count[i] = it + 1
                 # busy time stops HERE, before any barrier wait: the per-slot
                 # meter reads the trainer's intrinsic pace in both modes
@@ -1599,7 +1802,8 @@ class ThreadedShadowRunner:
                     with ex_lock:
                         self.examples += self.B
                         self.eps_meter.add(self.B)
-                if fr and (it + 1) % self.sync_cfg.gap == 0:
+                if (has_fr and (it + 1) % self.sync_cfg.gap == 0
+                        and self._mode == "fixed_rate"):
                     _fr_sync_point(i)
             trainer_wall[i] = time.perf_counter() - t_start
 
@@ -1630,14 +1834,21 @@ class ThreadedShadowRunner:
                         time.sleep(0.01)
                     continue  # generation check above retires the zombie
                 _beat("shadow")
-                # One algorithm-owned background round over the live replica
-                # planes — landings interpolate into the CURRENT state while
-                # trainers keep moving (paper §3.3).
-                n = _round_over_active()
-                if n:
-                    _add_syncs(n)
-                else:
+                if auto and self._mode == "fixed_rate":
+                    # the barrier's elected leaders own the rounds in
+                    # fixed_rate; this thread idles as the mode/policy
+                    # evaluator (and keeps the prefetch + snapshot cadence
+                    # below alive) until the controller switches back
                     time.sleep(0.001)
+                else:
+                    # One algorithm-owned background round over the live
+                    # replica planes — landings interpolate into the CURRENT
+                    # state while trainers keep moving (paper §3.3).
+                    n = _round_over_active()
+                    if n:
+                        _add_syncs(n)
+                    else:
+                        time.sleep(0.001)
                 self._shadow_rounds = r + 1
                 # the shadow thread is already the background worker: the
                 # cache's lookahead prefetch rides BETWEEN the sync rounds
@@ -1647,9 +1858,11 @@ class ThreadedShadowRunner:
                 _prefetch_step()
                 if self._shadow_rounds % self.ps_snapshot_every == 0:
                     self.emb.snapshot_all()
-                # the controller rides the shadow cadence: membership is
-                # re-evaluated every background round, training never blocks
+                # the controllers ride the shadow cadence: membership AND
+                # the cohort mode are re-evaluated every background round,
+                # training never blocks on either
                 _policy_step()
+                _mode_step(gen)
                 if self.sync_sleep_s:
                     time.sleep(self.sync_sleep_s)
 
@@ -1692,7 +1905,7 @@ class ThreadedShadowRunner:
         def _supervision_tick() -> None:
             # PS chaos injection + timed recovery ride the supervisor's
             # watch loop (its clock domain is the policy's: perf_counter).
-            if fr:
+            if fr_static:
                 # no shadow thread to ride: the lookahead prefetch and the
                 # background PS snapshots take the watch-loop cadence instead
                 self._tick_count += 1
@@ -1717,10 +1930,12 @@ class ThreadedShadowRunner:
                     self.membership.note(
                         "ps_recover", -1, f"embedding shard {s} rejoined the routing plan"
                     )
-            # backup policy clock: membership decisions keep flowing even
-            # while the thread that normally evaluates the policy (the
-            # shadow thread) is the thing being restarted
+            # backup policy/mode clock: membership AND mode decisions keep
+            # flowing even while the thread that normally evaluates them
+            # (the shadow thread) is the thing being restarted (gen=None:
+            # the supervisor's own tick is always the current incarnation)
             _policy_step()
+            _mode_step(None)
 
         def monitor():
             # fixed_rate has no shadow thread, so the controller gets its own
@@ -1736,10 +1951,10 @@ class ThreadedShadowRunner:
         )
         self.supervisor = sup
         threads = [threading.Thread(target=trainer, args=(i,)) for i in range(self.R)]
-        shadow_t = None if fr else threading.Thread(target=shadow, args=(0,), daemon=True)
+        shadow_t = None if fr_static else threading.Thread(target=shadow, args=(0,), daemon=True)
         monitor_t = (
             threading.Thread(target=monitor, daemon=True)
-            if fr and self.policy is not None
+            if fr_static and self.policy is not None
             else None
         )
         # register BEFORE starting anything: a fast-finishing thread must
@@ -1849,6 +2064,12 @@ class ThreadedShadowRunner:
             # step-pipeline telemetry (DESIGN.md §13; {} when pipelining is
             # off): per-trainer stats merged post-join
             "pipeline_stats": (self._merged_pipe_stats() if self.pipeline is not None else {}),
+            # mode-switching telemetry (DESIGN.md §14): the final mode and
+            # the controller's decision log (empty when auto-mode is off)
+            "mode": self._mode,
+            "mode_transitions": (
+                list(self.mode_ctl.transitions) if self.mode_ctl is not None else []
+            ),
             "sync_rounds": self._shadow_rounds,
             "sync_restarts": sync_restarts,
             "sync_count_at_restart": list(self._sync_count_at_restart),

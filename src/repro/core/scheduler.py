@@ -67,6 +67,17 @@ class PolicyConfig:
     window_s: float = 1.0         # breach must persist this long to demote
     probation_s: float = 1.0      # healthy probes must persist this long
     min_active: int = 2           # never demote below this many live slots
+    # Quality signals (PR 5 follow-on, DESIGN.md §14): pace is not the only
+    # way a slot poisons the cohort. ``loss_div_frac`` demotes a slot whose
+    # loss EMA stays above (1 + frac) x the cohort median loss for a full
+    # window — a diverging trajectory at healthy pace. ``staleness_max``
+    # demotes a slot whose last landed sync is older than this (the
+    # caller's clock units: wall seconds threaded, iterations in the sim) —
+    # its deltas are too stale to merge safely. Both default off; staleness
+    # never blocks RE-admission (a demoted slot's age grows by
+    # construction — only the pace/loss probes can clear it).
+    loss_div_frac: Optional[float] = None
+    staleness_max: Optional[float] = None
 
     def validate(self) -> "PolicyConfig":
         if not 0.0 < self.eps_floor_frac <= 1.0:
@@ -84,6 +95,10 @@ class PolicyConfig:
             )
         if self.min_active < 1:
             raise ValueError(f"min_active must be >= 1, got {self.min_active}")
+        if self.loss_div_frac is not None and self.loss_div_frac <= 0:
+            raise ValueError(f"loss_div_frac must be > 0, got {self.loss_div_frac}")
+        if self.staleness_max is not None and self.staleness_max <= 0:
+            raise ValueError(f"staleness_max must be > 0, got {self.staleness_max}")
         return self
 
 
@@ -146,6 +161,9 @@ class StragglerPolicy:
         eps_by_slot: Mapping[int, float],
         active: Sequence[bool],
         eligible: Optional[Sequence[bool]] = None,
+        *,
+        loss_by_slot: Optional[Mapping[int, float]] = None,
+        staleness_by_slot: Optional[Mapping[int, float]] = None,
     ) -> List[PolicyAction]:
         """One controller round.
 
@@ -153,10 +171,15 @@ class StragglerPolicy:
         syncing). ``eligible``: slots with a live host behind them (the
         threaded runner passes its thread-alive flags so a trainer that
         simply FINISHED — whose rate decays to zero — is neither demoted
-        nor re-admitted); defaults to all-eligible.
+        nor re-admitted); defaults to all-eligible. ``loss_by_slot`` /
+        ``staleness_by_slot``: optional quality observations (per-slot loss
+        EMA, seconds/iterations since the slot's last landed sync) — only
+        consulted when the matching ``PolicyConfig`` knob is set.
         """
         with self._lock:
-            return self._observe_locked(now, eps_by_slot, active, eligible)
+            return self._observe_locked(
+                now, eps_by_slot, active, eligible,
+                loss_by_slot=loss_by_slot, staleness_by_slot=staleness_by_slot)
 
     # holds-lock: _lock
     def _observe_locked(
@@ -165,6 +188,9 @@ class StragglerPolicy:
         eps_by_slot: Mapping[int, float],
         active: Sequence[bool],
         eligible: Optional[Sequence[bool]],
+        *,
+        loss_by_slot: Optional[Mapping[int, float]] = None,
+        staleness_by_slot: Optional[Mapping[int, float]] = None,
     ) -> List[PolicyAction]:
         cfg = self.config
         if eligible is None:
@@ -186,6 +212,35 @@ class StragglerPolicy:
             return actions  # no signal yet (startup) — never act blind
         floor = cfg.eps_floor_frac * median
         n_live = len(live)
+        # cohort median loss for the divergence check: over the live slots
+        # with a finite observation (a slot with no loss yet never skews it)
+        loss_med = 0.0
+        if cfg.loss_div_frac is not None and loss_by_slot:
+            lv = [float(loss_by_slot[i]) for i in live
+                  if i in loss_by_slot and float(loss_by_slot[i]) == float(loss_by_slot[i])]
+            if len(lv) >= 2:
+                loss_med = median_eps(lv)
+
+        def _breach(slot: int, eps: float) -> Optional[str]:
+            # pace first (the original signal), then the quality signals —
+            # the FIRST breach names the demotion, so provenance stays
+            # single-cause and parseable
+            if eps < floor:
+                return (f"straggler: eps {eps:.0f} < "
+                        f"{cfg.eps_floor_frac:.2f} x live median {median:.0f} "
+                        f"for {cfg.window_s:g}s")
+            if cfg.loss_div_frac is not None and loss_med > 0.0 and loss_by_slot:
+                loss = float(loss_by_slot.get(slot, float("nan")))
+                if loss == loss and loss > (1.0 + cfg.loss_div_frac) * loss_med:
+                    return (f"loss-divergence: loss {loss:.4f} > "
+                            f"(1 + {cfg.loss_div_frac:g}) x cohort median "
+                            f"{loss_med:.4f} for {cfg.window_s:g}s")
+            if cfg.staleness_max is not None and staleness_by_slot is not None:
+                age = float(staleness_by_slot.get(slot, 0.0))
+                if age > cfg.staleness_max:
+                    return (f"staleness: {age:.3g} since last landed sync > "
+                            f"{cfg.staleness_max:g} for {cfg.window_s:g}s")
+            return None
 
         for slot in range(self.n_slots):
             st = self._slots[slot]
@@ -197,7 +252,8 @@ class StragglerPolicy:
                     if st.state == SUSPECT:
                         self._move(now, slot, HEALTHY)
                     continue
-                if eps >= floor:
+                reason = _breach(slot, eps)
+                if reason is None:
                     if st.state == SUSPECT:
                         self._move(now, slot, HEALTHY)
                     continue
@@ -209,11 +265,7 @@ class StragglerPolicy:
                     st.ref_eps = median  # the bar it must clear to return
                     self._move(now, slot, DEMOTED)
                     n_live -= 1
-                    actions.append(PolicyAction(
-                        "demote", slot,
-                        f"straggler: eps {eps:.0f} < "
-                        f"{cfg.eps_floor_frac:.2f} x live median {median:.0f} "
-                        f"for {cfg.window_s:g}s"))
+                    actions.append(PolicyAction("demote", slot, reason))
             else:  # DEMOTED | PROBATION — only slots WE demoted get here
                 if not eligible[slot]:
                     continue  # host gone; hold state, never re-admit a ghost
@@ -221,7 +273,16 @@ class StragglerPolicy:
                 # to this slot's own rate and any pace would pass — hold it
                 # to the median it was demoted against instead
                 ref = (median if any(i != slot for i in base) else st.ref_eps)
-                if ref <= 0.0 or eps < cfg.readmit_frac * ref:
+                # a still-divergent loss fails the probe too — pace alone
+                # must not re-admit a slot whose trajectory is off the rails
+                # (staleness deliberately NOT consulted: a demoted slot's
+                # sync age grows by construction)
+                diverged = (
+                    cfg.loss_div_frac is not None and loss_med > 0.0
+                    and loss_by_slot is not None
+                    and float(loss_by_slot.get(slot, loss_med))
+                    > (1.0 + cfg.loss_div_frac) * loss_med)
+                if ref <= 0.0 or eps < cfg.readmit_frac * ref or diverged:
                     if st.state == PROBATION:
                         self._move(now, slot, DEMOTED)
                     continue
@@ -260,10 +321,16 @@ class StragglerSchedule(MembershipSchedule):
         rates: Callable[[int, int], float],
         *,
         start_active: Optional[Sequence[bool]] = None,
+        losses: Optional[Callable[[int, int], float]] = None,
+        staleness: Optional[Callable[[int, int], float]] = None,
     ):
         super().__init__([])
         self.policy = policy
         self.rates = rates
+        # optional quality traces (scripted, like rates): per-slot loss EMA
+        # and sync-staleness age feeding the PolicyConfig quality knobs
+        self.losses = losses
+        self.staleness = staleness
         n = policy.n_slots
         self._active = ([True] * n if start_active is None else [bool(b) for b in start_active])
         if len(self._active) != n:
@@ -280,9 +347,18 @@ class StragglerSchedule(MembershipSchedule):
         while self._next_t <= t:
             tt = self._next_t
             self._next_t += 1
-            eps = {s: float(self.rates(tt, s)) for s in range(self.policy.n_slots)}
+            n = self.policy.n_slots
+            eps = {s: float(self.rates(tt, s)) for s in range(n)}
+            loss_by = (
+                {s: float(self.losses(tt, s)) for s in range(n)}
+                if self.losses is not None else None)
+            stale_by = (
+                {s: float(self.staleness(tt, s)) for s in range(n)}
+                if self.staleness is not None else None)
             out: List[Tuple[str, int, str]] = []
-            for a in self.policy.observe(float(tt), eps, list(self._active)):
+            for a in self.policy.observe(
+                    float(tt), eps, list(self._active),
+                    loss_by_slot=loss_by, staleness_by_slot=stale_by):
                 kind = "leave" if a.kind == "demote" else "join"
                 self._active[a.slot] = a.kind == "readmit"
                 out.append((kind, a.slot, a.reason))

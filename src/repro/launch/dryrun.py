@@ -1,4 +1,5 @@
 import os
+
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry run: lower + compile every (arch x input-shape) combination on
@@ -44,11 +45,20 @@ def should_skip(arch: str, shape_name: str) -> Optional[str]:
     return None
 
 
-def build(cfg, shape_name: str, mesh, *, mode: str = "syncdp",
-          optimizer: str = "adagrad", n_replicas: int = 2,
-          n_microbatches: int = 8, shape_override=None,
-          fsdp: bool = True, grad_dtype: str = "float32",
-          remat_policy: str = "full"):
+def build(
+    cfg,
+    shape_name: str,
+    mesh,
+    *,
+    mode: str = "syncdp",
+    optimizer: str = "adagrad",
+    n_replicas: int = 2,
+    n_microbatches: int = 8,
+    shape_override=None,
+    fsdp: bool = True,
+    grad_dtype: str = "float32",
+    remat_policy: str = "full",
+):
     """Returns (step_fn, args_sds tuple, donate).
 
     ``fsdp`` / ``grad_dtype`` / ``n_microbatches`` are the §Perf hillclimb knobs
@@ -58,11 +68,17 @@ def build(cfg, shape_name: str, mesh, *, mode: str = "syncdp",
         opt = optim.make(optimizer, 1e-3)
         params = SP.param_structs(cfg, mesh, mode=mode, n_replicas=n_replicas, fsdp=fsdp)
         opt_state = SP.opt_structs(
-            opt, params, mesh, fsdp=fsdp,
-            replica_axis="pod" if mode == "shadow" else None)
+            opt, params, mesh, fsdp=fsdp, replica_axis="pod" if mode == "shadow" else None
+        )
         batch = SP.train_batch_structs(cfg, shape, mesh, mode=mode, n_replicas=n_replicas)
-        step = spmd.make_train_step(cfg, opt, mode, n_microbatches=n_microbatches,
-                                    grad_dtype=grad_dtype, remat_policy=remat_policy)
+        step = spmd.make_train_step(
+            cfg,
+            opt,
+            mode,
+            n_microbatches=n_microbatches,
+            grad_dtype=grad_dtype,
+            remat_policy=remat_policy,
+        )
         return step, (params, opt_state, batch), (0, 1)
     if shape.kind == "prefill":
         params = SP.param_structs(cfg, mesh, mode="syncdp", fsdp=fsdp)
@@ -83,8 +99,7 @@ def build_sync_step(arch: str, mesh, *, algo: str = "easgd", n_replicas: int = 2
     cfg = get_config(arch)
     sync_cfg = SyncConfig(algo=algo).validate()
     params = SP.param_structs(cfg, mesh, mode="shadow", n_replicas=n_replicas)
-    state = SP.sync_state_structs(
-        sync_cfg, SP.param_structs(cfg, mesh, mode="syncdp"), mesh)
+    state = SP.sync_state_structs(sync_cfg, SP.param_structs(cfg, mesh, mode="syncdp"), mesh)
     sync = spmd.make_sync_step(cfg, sync_cfg)
     return sync, (params, state), (0, 1)
 
@@ -106,14 +121,32 @@ def _batch_axes(mesh, mode):
     return ("data",)
 
 
-def _compile_cost(cfg, shape_name, mesh, *, mode, optimizer, shape_override=None,
-                  fsdp=True, grad_dtype="float32", remat_policy="full"):
+def _compile_cost(
+    cfg,
+    shape_name,
+    mesh,
+    *,
+    mode,
+    optimizer,
+    shape_override=None,
+    fsdp=True,
+    grad_dtype="float32",
+    remat_policy="full",
+):
     from repro.models.layers import set_unroll_scans
 
-    step, args, donate = build(cfg, shape_name, mesh, mode=mode, optimizer=optimizer,
-                               n_microbatches=1, shape_override=shape_override,
-                               fsdp=fsdp, grad_dtype=grad_dtype,
-                               remat_policy=remat_policy)
+    step, args, donate = build(
+        cfg,
+        shape_name,
+        mesh,
+        mode=mode,
+        optimizer=optimizer,
+        n_microbatches=1,
+        shape_override=shape_override,
+        fsdp=fsdp,
+        grad_dtype=grad_dtype,
+        remat_policy=remat_policy,
+    )
     set_unroll_scans(True)
     try:
         with shctx.activation_mesh(mesh, batch_axes=_batch_axes(mesh, mode)):
@@ -124,12 +157,16 @@ def _compile_cost(cfg, shape_name, mesh, *, mode, optimizer, shape_override=None
     if isinstance(cost, list):
         cost = cost[0]
     colls = RA.collective_bytes(compiled.as_text())
-    return (float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0)),
-            float(sum(colls.values())))
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        float(sum(colls.values())),
+    )
 
 
-def extrapolate_cost(cfg, shape_name, mesh, *, mode, optimizer, fsdp=True,
-                     grad_dtype="float32", remat_policy="full"):
+def extrapolate_cost(
+    cfg, shape_name, mesh, *, mode, optimizer, fsdp=True, grad_dtype="float32", remat_policy="full"
+):
     """XLA's HloCostAnalysis counts a while-loop (lax.scan) body ONCE, ignoring
     trip count; roofline costs therefore come from small fully-UNROLLED probe
     compiles, fit and extrapolated (EXPERIMENTS.md §Dry-run methodology):
@@ -150,9 +187,17 @@ def extrapolate_cost(cfg, shape_name, mesh, *, mode, optimizer, fsdp=True,
     def cost(n_units, seq=None):
         c = _depth_variant(cfg, n_units)
         ov = _dc.replace(shape, seq_len=seq) if seq else None
-        return _compile_cost(c, shape_name, mesh, mode=mode, optimizer=optimizer,
-                             shape_override=ov, fsdp=fsdp, grad_dtype=grad_dtype,
-                             remat_policy=remat_policy)
+        return _compile_cost(
+            c,
+            shape_name,
+            mesh,
+            mode=mode,
+            optimizer=optimizer,
+            shape_override=ov,
+            fsdp=fsdp,
+            grad_dtype=grad_dtype,
+            remat_policy=remat_policy,
+        )
 
     if shape.kind == "prefill" and shape.seq_len > 8192:
         s1, s2, s_full = 4096, 8192, shape.seq_len
@@ -173,8 +218,9 @@ def extrapolate_cost(cfg, shape_name, mesh, *, mode, optimizer, fsdp=True,
             base1, base2 = c11[i] - layer1, c12[i] - layer2
             layer_full = fit(layer1, layer2, s1, s2, s_full) if repeats > 1 else 0.0
             base_full = fit(base1, base2, s1, s2, s_full)
-            total = base_full + repeats * (layer_full if repeats > 1
-                                           else fit(c11[i], c12[i], s1, s2, s_full) - base_full)
+            total = base_full + repeats * (
+                layer_full if repeats > 1 else fit(c11[i], c12[i], s1, s2, s_full) - base_full
+            )
             out.append(max(total, 0.0))
         return tuple(out)
 
@@ -186,22 +232,38 @@ def extrapolate_cost(cfg, shape_name, mesh, *, mode, optimizer, fsdp=True,
     return tuple(max(f1 + (f2 - f1) * (repeats - 1), 0.0) for f1, f2 in zip(c1, c2))
 
 
-def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            mode: str = "syncdp", optimizer: str = "adagrad",
-            verbose: bool = True, sync_algo: Optional[str] = None,
-            extrapolate: bool = True, fsdp: bool = True,
-            grad_dtype: str = "float32", n_microbatches: int = 8,
-            capacity_factor: Optional[float] = None,
-            parallel_block: bool = False, remat_policy: str = "full",
-            tag_suffix: str = "") -> Dict:
+def run_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    mode: str = "syncdp",
+    optimizer: str = "adagrad",
+    verbose: bool = True,
+    sync_algo: Optional[str] = None,
+    extrapolate: bool = True,
+    fsdp: bool = True,
+    grad_dtype: str = "float32",
+    n_microbatches: int = 8,
+    capacity_factor: Optional[float] = None,
+    parallel_block: bool = False,
+    remat_policy: str = "full",
+    tag_suffix: str = "",
+) -> Dict:
     mesh_name = "2x16x16" if multi_pod else "16x16"
     skip = should_skip(arch, shape_name)
     tag = f"{arch} x {shape_name} x {mesh_name} [{sync_algo or mode}]{tag_suffix}"
     if skip:
         if verbose:
             print(f"SKIP  {tag}: {skip}")
-        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-                "mode": mode, "status": "skipped", "reason": skip}
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "mode": mode,
+            "status": "skipped",
+            "reason": skip,
+        }
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     t0 = time.time()
@@ -216,51 +278,81 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         if sync_algo:
             step, args, donate = build_sync_step(arch, mesh, algo=sync_algo)
         else:
-            step, args, donate = build(cfg, shape_name, mesh, mode=mode,
-                                       optimizer=optimizer, fsdp=fsdp,
-                                       grad_dtype=grad_dtype,
-                                       n_microbatches=n_microbatches,
-                                       remat_policy=remat_policy)
+            step, args, donate = build(
+                cfg,
+                shape_name,
+                mesh,
+                mode=mode,
+                optimizer=optimizer,
+                fsdp=fsdp,
+                grad_dtype=grad_dtype,
+                n_microbatches=n_microbatches,
+                remat_policy=remat_policy,
+            )
         with shctx.activation_mesh(mesh, batch_axes=_batch_axes(mesh, mode)):
             lowered = jax.jit(step, donate_argnums=donate).lower(*args)
             compiled = lowered.compile()
         mf = RA.model_flops_estimate(cfg, INPUT_SHAPES[shape_name]) if not sync_algo else 0.0
-        r = RA.analyze(compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
-                       mode=(f"sync:{sync_algo}" if sync_algo else mode),
-                       chips=chips, model_flops=mf)
+        r = RA.analyze(
+            compiled,
+            arch=arch,
+            shape=shape_name,
+            mesh_name=mesh_name,
+            mode=(f"sync:{sync_algo}" if sync_algo else mode),
+            chips=chips,
+            model_flops=mf,
+        )
         raw = (r.flops_per_chip, r.bytes_per_chip, r.collective_bytes_per_chip)
         # Roofline terms are reported for the single-pod mesh only (§Roofline);
         # the multi-pod pass proves lowering + records memory.
         if multi_pod:
             extrapolate = False
         if extrapolate and not sync_algo:
-            fl, by, co = extrapolate_cost(cfg, shape_name, mesh, mode=mode,
-                                          optimizer=optimizer, fsdp=fsdp,
-                                          grad_dtype=grad_dtype,
-                                          remat_policy=remat_policy)
+            fl, by, co = extrapolate_cost(
+                cfg,
+                shape_name,
+                mesh,
+                mode=mode,
+                optimizer=optimizer,
+                fsdp=fsdp,
+                grad_dtype=grad_dtype,
+                remat_policy=remat_policy,
+            )
             r.flops_per_chip, r.bytes_per_chip, r.collective_bytes_per_chip = fl, by, co
-            r.notes = (r.notes + " cost depth-extrapolated (scan trip-count fix); "
-                       f"raw flops/chip={raw[0]:.3e}").strip()
+            r.notes = (
+                r.notes
+                + " cost depth-extrapolated (scan trip-count fix); " f"raw flops/chip={raw[0]:.3e}"
+            ).strip()
         row = r.row()
         row.update(status="ok", compile_s=round(time.time() - t0, 1))
         if verbose:
             mem = compiled.memory_analysis()
             print(f"OK    {tag}  compile={row['compile_s']}s")
-            print(f"      mem/device: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
-                  f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
-                  f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
-                  f"alias={mem.alias_size_in_bytes/2**30:.2f}GiB")
-            print(f"      roofline: t_comp={r.t_compute*1e3:.2f}ms "
-                  f"t_mem={r.t_memory*1e3:.2f}ms t_coll={r.t_collective*1e3:.2f}ms "
-                  f"-> {r.bottleneck}-bound; useful_flops={r.useful_flops_ratio:.2f}")
+            print(
+                f"      mem/device: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+                f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+                f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+                f"alias={mem.alias_size_in_bytes/2**30:.2f}GiB"
+            )
+            print(
+                f"      roofline: t_comp={r.t_compute*1e3:.2f}ms "
+                f"t_mem={r.t_memory*1e3:.2f}ms t_coll={r.t_collective*1e3:.2f}ms "
+                f"-> {r.bottleneck}-bound; useful_flops={r.useful_flops_ratio:.2f}"
+            )
             print(f"      collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in r.collectives.items() if v} }")
         return row
     except Exception as e:
         if verbose:
             print(f"FAIL  {tag}: {type(e).__name__}: {e}")
             traceback.print_exc()
-        return {"arch": arch, "shape": shape_name, "mesh": mesh_name, "mode": mode,
-                "status": "fail", "error": f"{type(e).__name__}: {e}"}
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "mode": mode,
+            "status": "fail",
+            "error": f"{type(e).__name__}: {e}",
+        }
 
 
 def main():
@@ -270,8 +362,12 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--mode", choices=["syncdp", "shadow"], default="syncdp")
-    ap.add_argument("--sync-algo", choices=["easgd", "ma", "bmuf"], default=None,
-                    help="lower the background sync_step instead of train/serve")
+    ap.add_argument(
+        "--sync-algo",
+        choices=["easgd", "ma", "bmuf"],
+        default=None,
+        help="lower the background sync_step instead of train/serve",
+    )
     ap.add_argument("--optimizer", default="adagrad")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=None)
@@ -291,14 +387,22 @@ def main():
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                rows.append(run_one(
-                    arch, shape, multi_pod=mp, mode=args.mode,
-                    optimizer=args.optimizer, sync_algo=args.sync_algo,
-                    fsdp=not args.no_fsdp, grad_dtype=args.grad_dtype,
-                    n_microbatches=args.microbatches,
-                    capacity_factor=args.capacity_factor,
-                    parallel_block=args.parallel_block,
-                    remat_policy=args.remat_policy))
+                rows.append(
+                    run_one(
+                        arch,
+                        shape,
+                        multi_pod=mp,
+                        mode=args.mode,
+                        optimizer=args.optimizer,
+                        sync_algo=args.sync_algo,
+                        fsdp=not args.no_fsdp,
+                        grad_dtype=args.grad_dtype,
+                        n_microbatches=args.microbatches,
+                        capacity_factor=args.capacity_factor,
+                        parallel_block=args.parallel_block,
+                        remat_policy=args.remat_policy,
+                    )
+                )
                 if args.out:  # incremental: survive interruption
                     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
                     with open(args.out, "w") as f:

@@ -7,6 +7,7 @@ decode_32k / long_500k dry-run shapes lower.
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --batch 4 \
       --prompt-len 64 --gen 32
 """
+
 from __future__ import annotations
 
 import argparse
@@ -42,11 +43,11 @@ def main():
     prompts = jax.random.randint(k_prompt, (B, args.prompt_len), 0, cfg.vocab_size)
     batch = {"tokens": prompts}
     if cfg.family == "vlm":
-        batch["prefix_embeds"] = jax.random.normal(
-            k_prefix, (B, cfg.frontend.n_tokens, cfg.d_model)) * 0.1
+        batch["prefix_embeds"] = (
+            jax.random.normal(k_prefix, (B, cfg.frontend.n_tokens, cfg.d_model)) * 0.1
+        )
     if cfg.family == "audio":
-        batch["frames"] = jax.random.normal(
-            k_prefix, (B, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
+        batch["frames"] = jax.random.normal(k_prefix, (B, cfg.encoder.n_ctx, cfg.d_model)) * 0.1
 
     prefill = jax.jit(spmd.make_prefill_step(cfg, s_max))
     decode = jax.jit(spmd.make_decode_step(cfg))
@@ -68,9 +69,11 @@ def main():
     t_decode = time.perf_counter() - t0
 
     gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"{args.arch}: prefill {B}x{args.prompt_len} in {t_prefill*1e3:.1f}ms; "
-          f"decoded {args.gen-1} steps in {t_decode*1e3:.1f}ms "
-          f"({(args.gen-1)*B/t_decode:.1f} tok/s batched)")
+    print(
+        f"{args.arch}: prefill {B}x{args.prompt_len} in {t_prefill*1e3:.1f}ms; "
+        f"decoded {args.gen-1} steps in {t_decode*1e3:.1f}ms "
+        f"({(args.gen-1)*B/t_decode:.1f} tok/s batched)"
+    )
     print("first sequence:", gen[0][:16], "...")
 
 

@@ -3,6 +3,7 @@
 Nothing here allocates: params/optimizer/cache structures come from
 ``jax.eval_shape`` and are annotated with NamedShardings from sharding/rules.py.
 """
+
 from __future__ import annotations
 
 from typing import Any, Dict, Tuple
@@ -23,7 +24,8 @@ def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
 def _annotate(tree_sds, shardings):
     return jax.tree.map(
         lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
-        tree_sds, shardings,
+        tree_sds,
+        shardings,
     )
 
 
@@ -34,8 +36,9 @@ def batch_axes(mesh, mode: str) -> Tuple[str, ...]:
     return ("pod", "data") if has_pod else ("data",)
 
 
-def param_structs(cfg: ArchConfig, mesh, *, mode: str = "syncdp",
-                  fsdp: bool = True, n_replicas: int = 2) -> Any:
+def param_structs(
+    cfg: ArchConfig, mesh, *, mode: str = "syncdp", fsdp: bool = True, n_replicas: int = 2
+) -> Any:
     sds = jax.eval_shape(lambda: spmd.init_params(cfg, jax.random.PRNGKey(0)))
     replica_axis = None
     if mode == "shadow":
@@ -72,8 +75,9 @@ def sync_state_structs(sync_cfg, params_sds, mesh, *, fsdp: bool = True) -> Any:
     return _annotate(sds, shardings)
 
 
-def train_batch_structs(cfg: ArchConfig, shape: InputShape, mesh, *,
-                        mode: str = "syncdp", n_replicas: int = 2) -> Dict[str, Any]:
+def train_batch_structs(
+    cfg: ArchConfig, shape: InputShape, mesh, *, mode: str = "syncdp", n_replicas: int = 2
+) -> Dict[str, Any]:
     bx = batch_axes(mesh, mode)
     ax = bx if len(bx) > 1 else bx[0]
     B, S = shape.global_batch, shape.seq_len
@@ -81,8 +85,7 @@ def train_batch_structs(cfg: ArchConfig, shape: InputShape, mesh, *,
 
     def tok_spec(b, s_text):
         if mode == "shadow":
-            return _sds((n_replicas, b // n_replicas, s_text), jnp.int32, mesh,
-                        ("pod", ax, None))
+            return _sds((n_replicas, b // n_replicas, s_text), jnp.int32, mesh, ("pod", ax, None))
         return _sds((b, s_text), jnp.int32, mesh, (ax, None))
 
     if cfg.family == "vlm":
@@ -91,18 +94,24 @@ def train_batch_structs(cfg: ArchConfig, shape: InputShape, mesh, *,
         batch = {"tokens": tok_spec(B, s_text)}
         if mode == "shadow":
             batch["prefix_embeds"] = _sds(
-                (n_replicas, B // n_replicas, n_img, cfg.d_model), dtype, mesh,
-                ("pod", ax, None, None))
+                (n_replicas, B // n_replicas, n_img, cfg.d_model),
+                dtype,
+                mesh,
+                ("pod", ax, None, None),
+            )
         else:
-            batch["prefix_embeds"] = _sds((B, n_img, cfg.d_model), dtype, mesh,
-                                          (ax, None, None))
+            batch["prefix_embeds"] = _sds((B, n_img, cfg.d_model), dtype, mesh, (ax, None, None))
         return batch
     if cfg.family == "audio":
         n_ctx = cfg.encoder.n_ctx
         batch = {"tokens": tok_spec(B, S)}
         if mode == "shadow":
-            batch["frames"] = _sds((n_replicas, B // n_replicas, n_ctx, cfg.d_model),
-                                   dtype, mesh, ("pod", ax, None, None))
+            batch["frames"] = _sds(
+                (n_replicas, B // n_replicas, n_ctx, cfg.d_model),
+                dtype,
+                mesh,
+                ("pod", ax, None, None),
+            )
         else:
             batch["frames"] = _sds((B, n_ctx, cfg.d_model), dtype, mesh, (ax, None, None))
         return batch

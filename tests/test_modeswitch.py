@@ -1,0 +1,412 @@
+"""Tuning-free sync<->async mode switching (DESIGN.md §14): the dispersion
+signal, the hysteresis + dwell state machine, deterministic sim replay with
+flat/pytree parity across the algorithm registry, the PR 5 follow-on quality
+signals on ``StragglerPolicy``, and the threaded whole-cohort handoffs
+composed with demotion, PS failure, and step pipelining."""
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import dlrm_ctr
+from repro.core import algorithms
+from repro.core.membership import FaultSpec
+from repro.core.modeswitch import (
+    MODES, ControllerModeSchedule, ModeConfig, ModeController, ModeSchedule)
+from repro.core.pipeline import PipelineConfig
+from repro.core.runners import HogwildSim, ThreadedShadowRunner
+from repro.core.scheduler import PolicyConfig, StragglerPolicy
+from repro.core.sync import SyncConfig
+
+# real-thread suites must never wedge CI: pytest-timeout (see
+# requirements-ci.txt) enforces this per-test wall ceiling
+pytestmark = pytest.mark.timeout(300)
+
+CFG = dlrm_ctr.tiny()
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ModeConfig validation
+# ---------------------------------------------------------------------------
+
+class TestModeConfig:
+    def test_defaults_validate(self):
+        cfg = ModeConfig().validate()
+        assert cfg.skew_high > cfg.skew_low >= 1.0
+
+    def test_unknown_start_mode(self):
+        with pytest.raises(ValueError, match="start_mode"):
+            ModeConfig(start_mode="async").validate()
+
+    def test_skew_low_below_one(self):
+        with pytest.raises(ValueError, match="skew_low"):
+            ModeConfig(skew_low=0.9).validate()
+
+    def test_inverted_hysteresis_band(self):
+        with pytest.raises(ValueError, match="skew_high"):
+            ModeConfig(skew_high=1.3, skew_low=1.3).validate()
+
+    def test_bad_window_and_dwell(self):
+        with pytest.raises(ValueError, match="window_s"):
+            ModeConfig(window_s=0.0).validate()
+        with pytest.raises(ValueError, match="min_dwell_s"):
+            ModeConfig(min_dwell_s=-1.0).validate()
+
+
+# ---------------------------------------------------------------------------
+# Dispersion signal
+# ---------------------------------------------------------------------------
+
+class TestDispersion:
+    def test_fewer_than_two_measurable_slots_is_no_signal(self):
+        assert ModeController.dispersion({0: 100.0}, [True]) == 0.0
+        assert ModeController.dispersion({0: 100.0, 1: 0.0}, [True, True]) == 0.0
+        assert ModeController.dispersion({}, [True, True, True]) == 0.0
+
+    def test_homogeneous_cohort_is_one(self):
+        eps = {i: 100.0 for i in range(4)}
+        assert ModeController.dispersion(eps, [True] * 4) == pytest.approx(1.0)
+
+    def test_slow_outlier_registers_via_median_over_min(self):
+        eps = {0: 100.0, 1: 100.0, 2: 25.0}
+        assert ModeController.dispersion(eps, [True] * 3) == pytest.approx(4.0)
+
+    def test_fast_outlier_registers_via_max_over_median(self):
+        eps = {0: 100.0, 1: 100.0, 2: 400.0}
+        assert ModeController.dispersion(eps, [True] * 3) == pytest.approx(4.0)
+
+    def test_inactive_and_ineligible_slots_excluded(self):
+        eps = {0: 100.0, 1: 100.0, 2: 10.0}
+        assert ModeController.dispersion(eps, [True, True, False]) == pytest.approx(1.0)
+        assert ModeController.dispersion(
+            eps, [True] * 3, eligible=[True, True, False]
+        ) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Controller state machine
+# ---------------------------------------------------------------------------
+
+def _ctl(**kw):
+    base = dict(skew_high=2.0, skew_low=1.3, window_s=1.0,
+                min_dwell_s=0.0, start_mode="fixed_rate")
+    base.update(kw)
+    return ModeController(ModeConfig(**base))
+
+
+class TestModeController:
+    def test_single_spike_never_switches(self):
+        c = _ctl()
+        assert c.observe(0.0, 3.0) is None  # breach starts the streak only
+        assert c.mode == "fixed_rate" and c.transitions == []
+
+    def test_breach_must_persist_a_full_window(self):
+        c = _ctl()
+        assert c.observe(0.0, 3.0) is None
+        assert c.observe(0.5, 3.0) is None  # 0.5s < window_s
+        dec = c.observe(1.0, 3.0)
+        assert dec is not None and dec.target == "shadow"
+        assert c.mode == "shadow"
+        assert [(frm, to) for _, frm, to, _ in c.transitions] == [("fixed_rate", "shadow")]
+        assert "skew_high" in c.transitions[0][3]
+
+    def test_recovery_mid_window_resets_the_streak(self):
+        c = _ctl()
+        assert c.observe(0.0, 3.0) is None
+        assert c.observe(0.5, 1.5) is None  # below skew_high: streak broken
+        assert c.observe(1.0, 3.0) is None  # new streak starts here
+        assert c.observe(1.9, 3.0) is None
+        assert c.observe(2.0, 3.0) is not None
+
+    def test_hysteresis_band_parks_in_current_mode(self):
+        c = _ctl(start_mode="shadow")
+        for t in range(10):
+            # between skew_low and skew_high: breaches NEITHER band
+            assert c.observe(float(t), 1.5) is None
+        assert c.mode == "shadow" and c.transitions == []
+
+    def test_min_dwell_holds_a_fresh_mode(self):
+        c = _ctl(min_dwell_s=5.0)
+        assert c.observe(0.0, 3.0) is None
+        assert c.observe(1.0, 3.0) is None  # breach persisted, dwell holds
+        assert c.observe(5.0, 3.0) is not None  # dwell satisfied
+        # now in shadow: homogeneous readings breach skew_low immediately...
+        assert c.observe(5.5, 1.0) is None
+        assert c.observe(6.5, 1.0) is None  # ...but the dwell parks us
+        dec = c.observe(10.0, 1.0)
+        assert dec is not None and dec.target == "fixed_rate"
+        assert len(c.transitions) == 2
+
+    def test_zero_dispersion_is_no_signal_and_resets(self):
+        c = _ctl()
+        assert c.observe(0.0, 3.0) is None
+        assert c.observe(5.0, 0.0) is None  # startup/no-signal: never act blind
+        assert c.observe(6.0, 3.0) is None  # streak restarted from scratch
+        assert c.observe(7.0, 3.0) is not None
+
+    def test_quality_skew_feeds_the_decision(self):
+        c = _ctl()
+        # pace is homogeneous (1.0) but one trajectory diverges 3x
+        assert c.observe(0.0, 1.0, quality_skew=3.0) is None
+        dec = c.observe(1.0, 1.0, quality_skew=3.0)
+        assert dec is not None and dec.target == "shadow"
+
+
+# ---------------------------------------------------------------------------
+# Scripted + controller-driven schedules in the deterministic sim
+# ---------------------------------------------------------------------------
+
+class TestModeSchedule:
+    def test_mode_at_switch_points(self):
+        s = ModeSchedule([(5, "fixed_rate"), (10, "shadow")], start_mode="shadow")
+        assert s.mode_at(0) == "shadow"
+        assert s.mode_at(5) == "fixed_rate"
+        assert s.mode_at(9) == "fixed_rate"
+        assert s.mode_at(10) == "shadow"
+
+    def test_unknown_modes_rejected(self):
+        with pytest.raises(ValueError, match="unknown mode"):
+            ModeSchedule([(3, "turbo")])
+        with pytest.raises(ValueError, match="start_mode"):
+            ModeSchedule([], start_mode="turbo")
+
+    def test_sim_rejects_start_mode_mismatch(self):
+        with pytest.raises(ValueError, match="mode_schedule"):
+            HogwildSim(
+                CFG, SyncConfig(algo="easgd", mode="fixed_rate", gap=4, alpha=0.5),
+                n_trainers=2, n_threads=2, batch_size=16,
+                optimizer=optim.adagrad(0.02), seed=0,
+                mode_schedule=ModeSchedule([(3, "fixed_rate")], start_mode="shadow"))
+
+    def test_controller_schedule_needs_slots(self):
+        with pytest.raises(ValueError, match="n_slots"):
+            ControllerModeSchedule(_ctl(), lambda t, s: 1.0, 0)
+
+
+R_SIM = 3
+
+
+def _sim_rates(t, s):
+    # slot R-1 runs at 10% pace for iterations [5, 15): the controller should
+    # earn shadow shortly after t=5 and hand back after the recovery at t=15
+    return 0.1 if (s == R_SIM - 1 and 5 <= t < 15) else 1.0
+
+
+def _sim_run(algo, engine, *, iters=24, quality=None, rates=_sim_rates):
+    ctl = ModeController(ModeConfig(skew_high=2.0, skew_low=1.3, window_s=2.0,
+                                    min_dwell_s=3.0, start_mode="fixed_rate"))
+    msched = ControllerModeSchedule(ctl, rates, n_slots=R_SIM, quality=quality)
+    sim = HogwildSim(
+        CFG, SyncConfig(algo=algo, mode="fixed_rate", gap=4, alpha=0.5, engine=engine),
+        n_trainers=R_SIM, n_threads=2, batch_size=16,
+        optimizer=optim.adagrad(0.02), seed=0, mode_schedule=msched)
+    return sim.run(iters)
+
+
+class TestSimModeSwitch:
+    @pytest.mark.parametrize("algo", algorithms.names())
+    def test_flat_pytree_parity_across_a_switch_cycle(self, algo):
+        """The same closed-loop mode trace produces the same trajectory on
+        both sync engines, for every registered algorithm."""
+        a = _sim_run(algo, "flat")
+        b = _sim_run(algo, "pytree")
+        assert a["mode_events"] == b["mode_events"]
+        switches = [(frm, to) for _, frm, to in a["mode_events"]]
+        assert ("fixed_rate", "shadow") in switches, a["mode_events"]
+        assert ("shadow", "fixed_rate") in switches, a["mode_events"]
+        np.testing.assert_allclose(a["train_loss"], b["train_loss"], **TOL)
+
+    def test_replay_is_bit_identical(self):
+        a = _sim_run("easgd", "flat")
+        b = _sim_run("easgd", "flat")
+        assert a["mode_events"] == b["mode_events"]
+        assert list(a["train_loss"]) == list(b["train_loss"])
+        assert a["mode"] == b["mode"]
+
+    def test_quality_trace_pushes_to_shadow_at_healthy_pace(self):
+        def quality(t, s):
+            # slot 2's loss EMA diverges 3x from t=5 on; pace stays uniform
+            return 3.0 if (s == 2 and t >= 5) else 1.0
+
+        out = _sim_run("easgd", "flat", quality=quality, rates=lambda t, s: 1.0)
+        switches = [(frm, to) for _, frm, to in out["mode_events"]]
+        assert ("fixed_rate", "shadow") in switches
+        assert out["mode"] == "shadow"  # divergence never clears: no handback
+
+    def test_no_schedule_no_mode_keys(self):
+        sim = HogwildSim(
+            CFG, SyncConfig(algo="easgd", mode="shadow", gap=4, alpha=0.5),
+            n_trainers=2, n_threads=2, batch_size=16,
+            optimizer=optim.adagrad(0.02), seed=0)
+        out = sim.run(6)
+        assert "mode_events" not in out
+
+
+# ---------------------------------------------------------------------------
+# PR 5 follow-on: quality signals on the demotion policy
+# ---------------------------------------------------------------------------
+
+class TestPolicyQualitySignals:
+    def _policy(self, **kw):
+        base = dict(eps_floor_frac=0.5, readmit_frac=0.8, window_s=1.0,
+                    probation_s=1.0)
+        base.update(kw)
+        return StragglerPolicy(PolicyConfig(**base), n_slots=3)
+
+    def test_knob_validation(self):
+        with pytest.raises(ValueError, match="loss_div_frac"):
+            PolicyConfig(loss_div_frac=0.0).validate()
+        with pytest.raises(ValueError, match="staleness_max"):
+            PolicyConfig(staleness_max=-1.0).validate()
+
+    def test_loss_divergence_demotes_at_healthy_pace(self):
+        p = self._policy(loss_div_frac=0.5)
+        eps = {i: 100.0 for i in range(3)}
+        active = [True] * 3
+        loss = {0: 1.0, 1: 1.0, 2: 2.0}  # 2x the cohort median
+        assert p.observe(0.0, eps, active, loss_by_slot=loss) == []
+        acts = p.observe(1.0, eps, active, loss_by_slot=loss)
+        assert [(a.kind, a.slot) for a in acts] == [("demote", 2)]
+        assert "loss-divergence" in acts[0].reason
+
+    def test_staleness_demotes(self):
+        p = self._policy(staleness_max=5.0)
+        eps = {i: 100.0 for i in range(3)}
+        active = [True] * 3
+        stale = {0: 0.5, 1: 0.5, 2: 12.0}
+        assert p.observe(0.0, eps, active, staleness_by_slot=stale) == []
+        acts = p.observe(1.0, eps, active, staleness_by_slot=stale)
+        assert [(a.kind, a.slot) for a in acts] == [("demote", 2)]
+        assert "staleness" in acts[0].reason
+
+    def test_divergent_loss_blocks_readmission_but_staleness_does_not(self):
+        p = self._policy(loss_div_frac=0.5, staleness_max=5.0)
+        eps = {i: 100.0 for i in range(3)}
+        active = [True] * 3
+        loss = {0: 1.0, 1: 1.0, 2: 2.0}
+        stale = {0: 0.5, 1: 0.5, 2: 50.0}
+        p.observe(0.0, eps, active, loss_by_slot=loss, staleness_by_slot=stale)
+        p.observe(1.0, eps, active, loss_by_slot=loss, staleness_by_slot=stale)
+        assert p.state(2) == "demoted"
+        # pace is perfect, but the trajectory still diverges: stay demoted
+        p.observe(2.0, eps, active, loss_by_slot=loss, staleness_by_slot=stale)
+        assert p.state(2) == "demoted"
+        # loss recovers; staleness is HUGE by construction (no landed syncs
+        # while demoted) — it must not block the probation path
+        ok_loss = {0: 1.0, 1: 1.0, 2: 1.0}
+        p.observe(3.0, eps, active, loss_by_slot=ok_loss, staleness_by_slot=stale)
+        assert p.state(2) == "probation"
+        acts = p.observe(4.5, eps, active, loss_by_slot=ok_loss, staleness_by_slot=stale)
+        assert [(a.kind, a.slot) for a in acts] == [("readmit", 2)]
+
+    def test_pace_breach_names_the_demotion_before_quality(self):
+        p = self._policy(loss_div_frac=0.5)
+        eps = {0: 100.0, 1: 100.0, 2: 10.0}  # pace AND loss both breach
+        loss = {0: 1.0, 1: 1.0, 2: 9.0}
+        active = [True] * 3
+        p.observe(0.0, eps, active, loss_by_slot=loss)
+        acts = p.observe(1.0, eps, active, loss_by_slot=loss)
+        assert len(acts) == 1 and "straggler" in acts[0].reason
+
+
+# ---------------------------------------------------------------------------
+# Threaded whole-cohort handoffs
+# ---------------------------------------------------------------------------
+
+def _snappy_ctl(**kw):
+    base = dict(skew_high=2.0, skew_low=1.2, window_s=0.15,
+                min_dwell_s=0.3, start_mode="fixed_rate")
+    base.update(kw)
+    return ModeController(ModeConfig(**base))
+
+
+def _threaded(mode="fixed_rate", fault=None, ctl=None, iters=8, warm=False, **kw):
+    r = ThreadedShadowRunner(
+        CFG, SyncConfig(algo="easgd", alpha=0.5, mode=mode, gap=3),
+        n_trainers=3, batch_size=32, optimizer=optim.adagrad(0.02),
+        sync_sleep_s=0.01, fault_spec=fault, mode_controller=ctl, **kw)
+    if warm:
+        r.warmup()  # keep tracing out of the controllers' detection windows
+    return r.run(iters)
+
+
+class TestThreadedModeSwitch:
+    @pytest.fixture(scope="class", autouse=True)
+    def warmup(self):
+        # compile both modes' programs so timing-sensitive runs are clean
+        _threaded("shadow", iters=2)
+        _threaded("fixed_rate", iters=2)
+
+    def test_controller_start_mode_mismatch_raises(self):
+        with pytest.raises(ValueError, match="mode_controller"):
+            _threaded("fixed_rate", ctl=_snappy_ctl(start_mode="shadow"), iters=2)
+
+    def test_dispersion_hands_off_to_shadow(self):
+        """A persistent straggler under the foreground barrier: the controller
+        must drain the barrier and move the WHOLE cohort to shadow, and the
+        run must complete every slot's iterations."""
+        ctl = _snappy_ctl()
+        out = _threaded("fixed_rate", FaultSpec(straggler_sleep_s={2: 0.5}),
+                        ctl=ctl, iters=8)
+        assert out["iter_count"] == [8, 8, 8]
+        assert all(np.isfinite(l) for l in out["train_loss"])
+        trans = [(frm, to) for _, frm, to, _ in out["mode_transitions"]]
+        assert trans and trans[0] == ("fixed_rate", "shadow"), out["mode_transitions"]
+        assert out["mode"] == "shadow"
+        # the handoff lands in the membership log with provenance
+        notes = [e for e in out["membership_events"] if e.kind == "mode_switch"]
+        assert notes and "shadow" in notes[0].reason
+
+    def test_no_controller_is_legacy_behavior(self):
+        out = _threaded("fixed_rate", iters=4)
+        assert out["mode"] == "fixed_rate" and out["mode_transitions"] == []
+
+    def test_switch_under_demotion_interleave(self):
+        """Mode controller AND straggler policy live on the same run: the
+        mode handoff fires first (shorter window), the policy then demotes
+        the transient straggler, and nothing deadlocks or loses iterations.
+        Recipe margins follow test_scheduler's closed-loop test: a short
+        busy-clock meter window, a warmed-up runner, and an iteration budget
+        that keeps the healthy slots alive past both detection windows."""
+        ctl = _snappy_ctl()
+        # Policy window (1.0s) is deliberately much longer than the
+        # controller's (0.15s): the handoff must land first, because a
+        # demoted slot drops out of dispersion() and would mask the skew.
+        policy = StragglerPolicy(
+            PolicyConfig(eps_floor_frac=0.5, readmit_frac=0.75,
+                         window_s=1.0, probation_s=0.1, min_active=2),
+            n_slots=3)
+        # eps_window_s must exceed the straggler's sleep: with zero events
+        # in-window its EPS reads 0.0, which dispersion() treats as "no
+        # signal" and EXCLUDES — the controller would never see the skew.
+        out = _threaded(
+            "fixed_rate",
+            FaultSpec(straggler_sleep_s={2: 0.4}, straggler_until={2: 8}),
+            ctl=ctl, iters=1200, warm=True, eps_window_s=1.0,
+            straggler_policy=policy)
+        assert out["iter_count"] == [1200, 1200, 1200]
+        assert all(np.isfinite(l) for l in out["train_loss"])
+        trans = [(frm, to) for _, frm, to, _ in out["mode_transitions"]]
+        assert trans and trans[0] == ("fixed_rate", "shadow"), out["mode_transitions"]
+        assert any(to == "demoted" for _, _, _, to in policy.transitions), (
+            policy.transitions)
+        assert out["mode"] in MODES
+
+    def test_switch_during_ps_fail_with_pipeline(self):
+        """Chaos composition: a PS shard dies and rehydrates, step pipelines
+        are double-buffering lookups, AND the controller switches modes
+        mid-run. Handoffs drain the pipelines; the run completes and the PS
+        recovers."""
+        ctl = _snappy_ctl()
+        fault = FaultSpec(straggler_sleep_s={2: 0.4}, ps_fail_at={0: 3},
+                          ps_recover_after_s=0.2)
+        out = _threaded("fixed_rate", fault, ctl=ctl, iters=8,
+                        pipeline=PipelineConfig(depth=2))
+        assert out["iter_count"] == [8, 8, 8]
+        assert all(np.isfinite(l) for l in out["train_loss"])
+        trans = [(frm, to) for _, frm, to, _ in out["mode_transitions"]]
+        assert trans and trans[0] == ("fixed_rate", "shadow")
+        kinds = [(e.kind, e.shard) for e in out["shard_events"]]
+        assert ("ps_fail", 0) in kinds and ("ps_recover", 0) in kinds
+        # the handoff (and the PS epoch) drained in-flight pipeline stages
+        assert out["pipeline_stats"]["drains"] >= 1, out["pipeline_stats"]
